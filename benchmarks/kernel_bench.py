@@ -1,0 +1,56 @@
+"""Kernel microbenchmark: RQM / PBM quantization paths on CPU.
+
+Times the fused-jnp production path (what the train step lowers on this
+container), the Pallas interpret-mode kernel (correctness runtime), and the
+(m+1)-uniforms reference — the memory-traffic argument for the in-kernel
+counter-based RNG (the reference reads ~17x the bytes).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rqm as rqm_lib
+from repro.core.grid import RQMParams
+from repro.core.pbm import PBMParams
+from repro.kernels import ops
+
+PARAMS = RQMParams(c=1.0, delta=1.0, m=16, q=0.42)
+N = 1_000_000
+
+
+def _time(fn, *args, reps=5):
+    fn(*args).block_until_ready()  # compile+warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(csv=print):
+    x = jax.random.uniform(jax.random.key(0), (N,), jnp.float32, -1, 1)
+    key = jax.random.key(1)
+
+    us_fast = _time(lambda x: ops.rqm_fast(x, key, PARAMS), x)
+    csv(f"rqm_fused_jnp_1M,{us_fast:.0f},{N/us_fast:.1f}_elts_per_us")
+
+    us_ref = _time(jax.jit(lambda x: rqm_lib.quantize(x, key, PARAMS)), x)
+    csv(f"rqm_uniforms_ref_1M,{us_ref:.0f},speedup_vs_ref={us_ref/us_fast:.2f}x")
+
+    x_small = x[:131072]
+    us_interp = _time(
+        lambda x: ops.rqm(x, key, PARAMS, interpret=True), x_small, reps=2
+    )
+    csv(f"rqm_pallas_interpret_128k,{us_interp:.0f},interpret_mode")
+
+    pbm_p = PBMParams(c=1.0, m=16, theta=0.25)
+    us_pbm = _time(lambda x: ops.pbm_fast(x, key, pbm_p), x)
+    csv(f"pbm_fused_jnp_1M,{us_pbm:.0f},{N/us_pbm:.1f}_elts_per_us")
+    return {"rqm_fast_us": us_fast, "ref_us": us_ref}
+
+
+if __name__ == "__main__":
+    run()

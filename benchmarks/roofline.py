@@ -1,0 +1,88 @@
+"""Roofline reporting: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md tables (per arch x shape x mesh: three terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio, memory fit)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(out_dir="results/dryrun", tag=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ROOT, out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is None and r.get("tag"):
+            continue
+        if tag is not None and r.get("tag") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def table(recs, csv=print):
+    hdr = ("arch,shape,mesh,status,compute_ms,memory_ms,collective_ms,"
+           "dominant,useful_flops_ratio,hbm_gib,fits")
+    csv(hdr)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            csv(f"{r['arch']},{r['shape']},{r['mesh']},{r['status']},,,,,,,")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]["analytical"]["total"] / 2**30
+        ufr = r.get("useful_flops_ratio")
+        csv(f"{r['arch']},{r['shape']},{r['mesh']},ok,"
+            f"{fmt_ms(t['compute_s'])},{fmt_ms(t['memory_s'])},"
+            f"{fmt_ms(t['collective_s'])},{t['dominant']},"
+            f"{ufr:.3f},{mem:.2f},{r['memory']['fits']}")
+
+
+def markdown(recs):
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| dominant | useful FLOPs | HBM (GiB) | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"N/A (skip) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]["analytical"]["total"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_ms(t['compute_s'])} | {fmt_ms(t['memory_s'])} | "
+            f"{fmt_ms(t['collective_s'])} | **{t['dominant']}** | "
+            f"{r.get('useful_flops_ratio') or 0:.2f} | {mem:.2f} | "
+            f"{'yes' if r['memory']['fits'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def run(csv=print):
+    recs = load()
+    if not recs:
+        csv("roofline,0,no dryrun artifacts yet (run scripts/run_dryrun_sweep.py)")
+        return []
+    ok = [r for r in recs if r["status"] == "ok"]
+    csv(f"roofline_artifacts,{len(recs)},ok={len(ok)};"
+        f"skipped={sum(1 for r in recs if r['status']=='skipped')};"
+        f"errors={sum(1 for r in recs if r['status']=='error')}")
+    table(recs, csv=csv)
+    return recs
+
+
+if __name__ == "__main__":
+    run()

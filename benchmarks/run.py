@@ -1,0 +1,51 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig45,fig3,kernels,qopt,roofline")
+    ap.add_argument("--fl-rounds", type=int, default=120)
+    args = ap.parse_args()
+    wanted = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return wanted is None or name in wanted
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if want("fig2"):
+        from benchmarks import fig2_renyi
+
+        fig2_renyi.run()
+    if want("fig45"):
+        from benchmarks import fig45_theta_sweep
+
+        fig45_theta_sweep.run()
+    if want("kernels"):
+        from benchmarks import kernel_bench
+
+        kernel_bench.run()
+    if want("fig3"):
+        from benchmarks import fig3_fl_emnist
+
+        fig3_fl_emnist.run(rounds=args.fl_rounds)
+    if want("qopt"):
+        from benchmarks import beyond_qopt
+
+        beyond_qopt.run()
+    if want("roofline"):
+        from benchmarks import roofline
+
+        roofline.run()
+    print(f"total_wall,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serve a small model with batched requests: continuous-batching-style demo
+on the framework's prefill/decode runtime (reduced configs, CPU).
+
+  PYTHONPATH=src python examples/serve_demo.py --arch gemma3-4b --requests 6
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape
+from repro.configs.registry import get_config
+from repro.models import model as model_lib
+from repro.models.common import ParallelCtx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    ctx = ParallelCtx()
+    params = model_lib.init_params(jax.random.key(0), cfg, tp=1)
+    cap = args.prompt_len + args.gen
+    shape = InputShape("serve", cap, args.batch, "decode")
+    Pfx = cfg.frontend.prefix_len if cfg.frontend else 0
+
+    prefill = jax.jit(lambda p, t, e: model_lib.prefill(
+        p, cfg, ctx, t, shape, prefix_embeds=e, compute_dtype=jnp.float32))
+    decode = jax.jit(lambda p, c, t, pos: model_lib.decode_step(
+        p, c, cfg, ctx, t, pos, compute_dtype=jnp.float32))
+
+    # request queue -> fixed-size batches (simple static batching)
+    rng = np.random.default_rng(0)
+    queue = [rng.integers(0, cfg.vocab_size,
+                          size=args.prompt_len - Pfx).astype(np.int32)
+             for _ in range(args.requests)]
+    served, t0 = 0, time.time()
+    while queue:
+        batch_reqs = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
+        while len(batch_reqs) < args.batch:  # pad the last batch
+            batch_reqs.append(batch_reqs[-1])
+        toks = jnp.asarray(np.stack(batch_reqs))
+        pe = (jnp.zeros((args.batch, Pfx, cfg.d_model), jnp.float32)
+              if Pfx else None)
+        nxt, caches = prefill(params, toks, pe)
+        outs = [np.asarray(nxt)]
+        for i in range(args.gen - 1):
+            nxt, caches = decode(params, caches, nxt[:, None],
+                                 jnp.int32(args.prompt_len + i))
+            outs.append(np.asarray(nxt))
+        gen = np.stack(outs, axis=1)
+        served += len(batch_reqs)
+        print(f"batch done: generated {gen.shape[1]} tokens x "
+              f"{gen.shape[0]} requests; sample: {gen[0][:10].tolist()}")
+    dt = time.time() - t0
+    print(f"served {served} requests ({served*args.gen} tokens) "
+          f"in {dt:.1f}s = {served*args.gen/dt:,.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Regenerate the data-driven tables of EXPERIMENTS.md from
+results/dryrun/*.json. Narrative sections are maintained in the template
+below; tables are injected between markers."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+sys.path.insert(0, ROOT)
+
+from benchmarks.roofline import load, markdown  # noqa: E402
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def perf_rows():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "results/dryrun/*perf*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"] != "ok":
+            rows.append((r.get("tag", "?"), r["arch"], r["shape"], "ERROR",
+                         "", "", "", "", ""))
+            continue
+        t = r["roofline"]
+        rows.append((
+            r["tag"], r["arch"], r["shape"],
+            fmt_ms(t["compute_s"]), fmt_ms(t["memory_s"]),
+            fmt_ms(t["collective_s"]), t["dominant"],
+            f"{r['memory']['analytical']['total']/2**30:.2f}",
+            "yes" if r["memory"]["fits"] else "NO",
+        ))
+    return rows
+
+
+def perf_table():
+    lines = ["| tag | arch | shape | compute (ms) | memory (ms) | "
+             "collective (ms) | dominant | HBM (GiB) | fits |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for row in perf_rows():
+        lines.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    roof = markdown(recs)
+    perf = perf_table()
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        doc = f.read()
+    for marker, content in (("ROOFLINE_TABLE", roof), ("PERF_TABLE", perf)):
+        start = f"<!-- BEGIN {marker} -->"
+        end = f"<!-- END {marker} -->"
+        if start in doc and end in doc:
+            pre, rest = doc.split(start, 1)
+            _, post = rest.split(end, 1)
+            doc = pre + start + "\n" + content + "\n" + end + post
+    with open(path, "w") as f:
+        f.write(doc)
+    print(f"updated {path}: {len(recs)} artifacts, {len(perf_rows())} perf rows")
+
+
+if __name__ == "__main__":
+    main()

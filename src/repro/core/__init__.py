@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution (RQM) + baselines + accounting."""
+from repro.core.grid import RQMParams, decode_sum, encode_value
+from repro.core.pbm import PBMParams
+from repro.core.mechanisms import (
+    Mechanism,
+    make_mechanism,
+    make_noise_free_mechanism,
+    make_pbm_mechanism,
+    make_rqm_mechanism,
+)
+
+__all__ = [
+    "RQMParams",
+    "PBMParams",
+    "Mechanism",
+    "make_mechanism",
+    "make_rqm_mechanism",
+    "make_pbm_mechanism",
+    "make_noise_free_mechanism",
+    "decode_sum",
+    "encode_value",
+]

@@ -1,0 +1,28 @@
+"""Gradient clipping (Algorithm 1, line 5).
+
+The paper's mechanisms are per-coordinate on [-c, c], so the faithful clip is
+a per-coordinate value clip. Global-norm clipping is provided for comparison
+ablations (it composes with a per-coordinate c = norm_bound since each
+coordinate of a norm-clipped vector lies in [-c, c]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def value_clip(tree, c: float):
+    """Per-coordinate clip of every leaf to [-c, c]."""
+    return jax.tree_util.tree_map(lambda g: jnp.clip(g, -c, c), tree)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def global_norm_clip(tree, max_norm: float):
+    """Scale the whole tree so its global L2 norm is <= max_norm."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), tree)

@@ -1,0 +1,116 @@
+"""Exact outcome distributions of the mechanisms.
+
+``rqm_outcome_distribution`` implements Lemma 5.1 (Eq. 2) of the paper — the
+closed-form pmf over the m levels for a given scalar input x. This is the
+basis of the numerically-exact Renyi accounting (Section 6.1) and of the
+statistical validation of both the pure-JAX mechanism and the Pallas kernel.
+
+``pbm_outcome_distribution`` gives the Binomial(m, p) pmf of the Poisson
+Binomial Mechanism baseline (Chen et al., 2022).
+
+``aggregate_distribution`` convolves per-device pmfs into the pmf of the
+SecAgg sum — what the weaker aggregate-level adversary observes.
+
+Host-side numerics (numpy float64): these run in accountants / benchmarks /
+tests, never inside a jitted step.
+"""
+from __future__ import annotations
+
+from math import lgamma
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.grid import RQMParams
+
+
+def rqm_outcome_distribution(x: float, params: RQMParams) -> np.ndarray:
+    """Pr(Q(x) = i) for i = 0..m-1, per Lemma 5.1 (Eq. 2).
+
+    j is the unique integer with x in [B(j), B(j+1)).
+
+    Case (I)  0 < i <= j:      q (1-q)^{j-i}   * DOWN(i)
+    Case (II) i = 0:           (1-q)^{j}       * DOWN(0)
+    Case (III) j+1 <= i < m-1: q (1-q)^{i-j-1} * UP(i)
+    Case (IV) i = m-1:         (1-q)^{m-j-2}   * UP(m-1)
+
+    with
+
+      DOWN(i) = (1-q)^{m-j-2} (B(m-1)-x)/(B(m-1)-B(i))
+                + sum_{k=j+1}^{m-2} q (1-q)^{k-j-1} (B(k)-x)/(B(k)-B(i))
+      UP(i)   = (1-q)^{j} (x-B(0))/(B(i)-B(0))
+                + sum_{k=1}^{j}   q (1-q)^{j-k}   (x-B(k))/(B(i)-B(k))
+    """
+    m, q = params.m, params.q
+    B = params.levels()  # float64, length m
+    if not (-params.c - 1e-12 <= x <= params.c + 1e-12):
+        raise ValueError(f"x={x} outside [-c, c] with c={params.c}")
+    x = float(np.clip(x, -params.c, params.c))
+
+    # j with B(j) <= x < B(j+1); x in (B(0), B(m-1)) strictly since delta > 0.
+    j = int(np.clip(np.floor((x - B[0]) / params.step), 0, m - 2))
+
+    p = np.zeros(m, dtype=np.float64)
+
+    def down(i: int) -> float:
+        acc = (1.0 - q) ** (m - j - 2) * (B[m - 1] - x) / (B[m - 1] - B[i])
+        for k in range(j + 1, m - 1):  # k = j+1 .. m-2
+            acc += q * (1.0 - q) ** (k - j - 1) * (B[k] - x) / (B[k] - B[i])
+        return acc
+
+    def up(i: int) -> float:
+        acc = (1.0 - q) ** j * (x - B[0]) / (B[i] - B[0])
+        for k in range(1, j + 1):  # k = 1 .. j
+            acc += q * (1.0 - q) ** (j - k) * (x - B[k]) / (B[i] - B[k])
+        return acc
+
+    for i in range(0, j + 1):
+        pref = (1.0 - q) ** j if i == 0 else q * (1.0 - q) ** (j - i)
+        p[i] = pref * down(i)
+    for i in range(j + 1, m):
+        pref = (
+            (1.0 - q) ** (m - j - 2)
+            if i == m - 1
+            else q * (1.0 - q) ** (i - j - 1)
+        )
+        p[i] = pref * up(i)
+    return p
+
+
+def _log_binom_coeff(n: int, k: np.ndarray) -> np.ndarray:
+    lg = np.vectorize(lgamma)
+    return lg(n + 1.0) - lg(k + 1.0) - lg(n - k + 1.0)
+
+
+def binomial_pmf(n: int, p: float) -> np.ndarray:
+    """pmf of Binomial(n, p) over support 0..n (log-space, float64)."""
+    k = np.arange(n + 1, dtype=np.float64)
+    if p <= 0.0:
+        out = np.zeros(n + 1)
+        out[0] = 1.0
+        return out
+    if p >= 1.0:
+        out = np.zeros(n + 1)
+        out[-1] = 1.0
+        return out
+    logpmf = _log_binom_coeff(n, k) + k * np.log(p) + (n - k) * np.log1p(-p)
+    return np.exp(logpmf)
+
+
+def pbm_outcome_distribution(x: float, c: float, m: int, theta: float) -> np.ndarray:
+    """Poisson Binomial Mechanism (Chen et al. 2022): z ~ Binomial(m, p(x))
+    with p(x) = 1/2 + theta * x / c in [1/2 - theta, 1/2 + theta].
+
+    Support 0..m (m+1 outcomes; the paper compares at equal *levels* m, i.e.
+    the same log2-ish message size).
+    """
+    p = 0.5 + theta * float(np.clip(x, -c, c)) / c
+    return binomial_pmf(m, p)
+
+
+def aggregate_distribution(pmfs: Sequence[np.ndarray]) -> np.ndarray:
+    """pmf of the sum of independent discrete variables (SecAgg output)."""
+    out = np.asarray(pmfs[0], dtype=np.float64)
+    for pmf in pmfs[1:]:
+        out = np.convolve(out, np.asarray(pmf, dtype=np.float64))
+    return out

@@ -1,0 +1,106 @@
+"""Quantization-grid geometry shared by the RQM mechanism, its Pallas kernel,
+the closed-form outcome distribution (Lemma 5.1), and the server decode.
+
+The grid is the paper's (Algorithm 2, lines 2-3):
+
+    X_max = c + delta
+    B(i)  = -X_max + 2 * i * X_max / (m - 1),   i = 0..m-1
+
+so B(0) = -(c+delta), B(m-1) = +(c+delta), and the step is
+2*(c+delta)/(m-1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RQMParams:
+    """Hyperparameters of the Randomized Quantization Mechanism.
+
+    Attributes:
+      c:     per-coordinate clipping threshold; inputs live in [-c, c].
+      delta: range extension; output grid spans [-(c+delta), c+delta].
+      m:     number of quantization levels (static; log2(m) bits on the wire).
+      q:     probability of keeping each *interior* level (endpoints always
+             kept).
+    """
+
+    c: float
+    delta: float
+    m: int
+    q: float
+
+    def __post_init__(self):
+        if self.c <= 0:
+            raise ValueError(f"c must be > 0, got {self.c}")
+        if self.delta <= 0:
+            raise ValueError(
+                f"delta must be > 0 (delta=0 gives eps=inf, Thm 5.2), got {self.delta}"
+            )
+        if self.m < 2:
+            raise ValueError(f"m must be >= 2, got {self.m}")
+        if not 0.0 < self.q < 1.0:
+            raise ValueError(f"q must be in (0,1), got {self.q}")
+
+    @property
+    def x_max(self) -> float:
+        return self.c + self.delta
+
+    @property
+    def step(self) -> float:
+        return 2.0 * self.x_max / (self.m - 1)
+
+    @property
+    def bits_per_coordinate(self) -> float:
+        """Client->aggregator message size per gradient coordinate."""
+        return float(np.log2(self.m))
+
+    def levels(self) -> np.ndarray:
+        """B(0..m-1) as a numpy array (host-side)."""
+        i = np.arange(self.m, dtype=np.float64)
+        return -self.x_max + 2.0 * i * self.x_max / (self.m - 1)
+
+    def levels_jnp(self, dtype=jnp.float32) -> jnp.ndarray:
+        i = jnp.arange(self.m, dtype=dtype)
+        return (-self.x_max + 2.0 * i * self.x_max / (self.m - 1)).astype(dtype)
+
+    def epsilon_infinity(self) -> float:
+        """Theorem 5.2 closed-form upper bound on D_inf (= (eps,0)-DP eps).
+
+        eps = log(2 (1-q)^2 (1 + c/delta)) + m log(1/(1-q))
+        """
+        return float(
+            np.log(2.0 * (1.0 - self.q) ** 2 * (1.0 + self.c / self.delta))
+            + self.m * np.log(1.0 / (1.0 - self.q))
+        )
+
+
+def bin_index(x: jnp.ndarray, params: RQMParams) -> jnp.ndarray:
+    """j such that x in [B(j), B(j+1)), clipped to [0, m-2].
+
+    Inputs are expected in [-c, c] subset of (B(0), B(m-1)); clipping guards
+    float round-off at the boundaries.
+    """
+    j = jnp.floor((x + params.x_max) / params.step)
+    return jnp.clip(j, 0, params.m - 2).astype(jnp.int32)
+
+
+def decode_sum(z_sum: jnp.ndarray, n: int, params: RQMParams) -> jnp.ndarray:
+    """Server decode of the SecAgg sum of n devices' levels (Algorithm 1 l.10):
+
+        g_hat = -(c+delta) + 2 * z_sum * (c+delta) / (n * (m-1))
+
+    Unbiased for mean(x_i) because each device's randomized rounding on the
+    sub-sampled grid is an unbiased estimator of its x_i.
+    """
+    scale = 2.0 * params.x_max / (n * (params.m - 1))
+    return -params.x_max + z_sum.astype(jnp.float32) * scale
+
+
+def encode_value(z: jnp.ndarray, params: RQMParams) -> jnp.ndarray:
+    """Map a level index back to its grid value B(z) (single device)."""
+    return -params.x_max + z.astype(jnp.float32) * params.step

@@ -1,0 +1,109 @@
+"""Mechanism registry: a uniform interface over {rqm, pbm, none} so the
+federated runtime and the distributed train step are mechanism-agnostic.
+
+Each mechanism maps a clipped per-client gradient leaf -> integer message,
+and decodes the cross-client SUM of messages -> aggregated gradient estimate.
+This is exactly the Algorithm-1 contract (encode on device, SecAgg-sum,
+decode on server).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pbm as pbm_lib
+from repro.core import rqm as rqm_lib
+from repro.core.grid import RQMParams
+from repro.core.pbm import PBMParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Mechanism:
+    """encode: (x, key) -> int32 levels; decode_sum: (z_sum, n) -> float grad.
+
+    ``sum_bound(n)`` bounds the aggregated message value — used to pick the
+    aggregation lane width. ``bits`` is the per-coordinate client message
+    size (communication accounting).
+    """
+
+    name: str
+    encode: Callable[[jnp.ndarray, jax.Array], jnp.ndarray]
+    decode_sum: Callable[[jnp.ndarray, int], jnp.ndarray]
+    sum_bound: Callable[[int], int]
+    bits: float
+    clip: float
+
+
+def make_rqm_mechanism(params: RQMParams, *, use_kernel: bool = True) -> Mechanism:
+    if use_kernel:
+        # Pallas kernel on TPU; the kernel's exact math as fused jnp on CPU
+        # (bit-identical — shared counter-based RNG). See kernels/ops.py.
+        from repro.kernels import ops as kops
+
+        encode = lambda x, key: kops.rqm_fast(x, key, params)
+    else:
+        encode = lambda x, key: rqm_lib.quantize(x, key, params)
+    return Mechanism(
+        name="rqm",
+        encode=encode,
+        decode_sum=lambda z, n: rqm_lib.decode_sum(z, n, params),
+        sum_bound=lambda n: n * (params.m - 1),
+        bits=params.bits_per_coordinate,
+        clip=params.c,
+    )
+
+
+def make_pbm_mechanism(params: PBMParams) -> Mechanism:
+    from repro.kernels import ops as kops
+
+    return Mechanism(
+        name="pbm",
+        encode=lambda x, key: kops.pbm_fast(x, key, params),
+        decode_sum=lambda z, n: pbm_lib.decode_sum(z, n, params),
+        sum_bound=lambda n: n * params.m,
+        bits=params.bits_per_coordinate,
+        clip=params.c,
+    )
+
+
+def make_noise_free_mechanism(c: float) -> Mechanism:
+    """Noise-free clipped SGD: the paper's non-private upper-bound benchmark.
+    'Levels' are the clipped float gradients themselves (identity encode);
+    decode averages. No privacy."""
+    return Mechanism(
+        name="none",
+        encode=lambda x, key: jnp.clip(x, -c, c),
+        decode_sum=lambda g_sum, n: g_sum / n,
+        sum_bound=lambda n: 0,
+        bits=32.0,
+        clip=c,
+    )
+
+
+def make_mechanism(
+    name: str,
+    *,
+    c: float,
+    m: int = 16,
+    q: float = 0.42,
+    delta_ratio: float = 1.0,
+    theta: float = 0.25,
+    use_kernel: bool = True,
+) -> Mechanism:
+    """Build a mechanism from flat CLI-style options.
+
+    Paper defaults: m=16; RQM (delta, q) = (c, 0.42); PBM theta = 0.25.
+    """
+    if name == "rqm":
+        return make_rqm_mechanism(
+            RQMParams(c=c, delta=delta_ratio * c, m=m, q=q), use_kernel=use_kernel
+        )
+    if name == "pbm":
+        return make_pbm_mechanism(PBMParams(c=c, m=m, theta=theta))
+    if name == "none":
+        return make_noise_free_mechanism(c)
+    raise ValueError(f"unknown mechanism {name!r}; expected rqm|pbm|none")

@@ -1,0 +1,59 @@
+"""Poisson Binomial Mechanism (PBM) baseline (Chen et al., ICML 2022).
+
+The paper's state-of-the-art comparison point. Each device maps its clipped
+scalar x in [-c, c] to p(x) = 1/2 + theta * x / c and releases
+z ~ Binomial(m, p(x)). The SecAgg sum of n devices is a Poisson-Binomial
+variable; the server decode
+
+    g_hat = c / (theta * m * n) * (z_sum - n * m / 2)
+
+is unbiased for mean(x_i).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PBMParams:
+    c: float
+    m: int
+    theta: float
+
+    def __post_init__(self):
+        if not 0.0 < self.theta <= 0.5:
+            raise ValueError(f"theta must be in (0, 1/2], got {self.theta}")
+        if self.m < 1:
+            raise ValueError(f"m must be >= 1, got {self.m}")
+
+    @property
+    def bits_per_coordinate(self) -> float:
+        import numpy as np
+
+        return float(np.log2(self.m + 1))
+
+
+def quantize(x: jnp.ndarray, key: jax.Array, params: PBMParams) -> jnp.ndarray:
+    """z ~ Binomial(m, 1/2 + theta x / c), vectorized over x. int32 output."""
+    x = jnp.clip(x.astype(jnp.float32), -params.c, params.c)
+    p = 0.5 + params.theta * x / params.c
+    u = jax.random.uniform(key, (params.m,) + x.shape, jnp.float32)
+    return jnp.sum(u < p[None], axis=0, dtype=jnp.int32)
+
+
+def quantize_with_uniforms(
+    x: jnp.ndarray, u: jnp.ndarray, params: PBMParams
+) -> jnp.ndarray:
+    """Deterministic core: u has shape (m,) + x.shape."""
+    x = jnp.clip(x.astype(jnp.float32), -params.c, params.c)
+    p = 0.5 + params.theta * x / params.c
+    return jnp.sum(u < p[None], axis=0, dtype=jnp.int32)
+
+
+def decode_sum(z_sum: jnp.ndarray, n: int, params: PBMParams) -> jnp.ndarray:
+    """Unbiased decode of the SecAgg sum of n devices' Binomial draws."""
+    scale = params.c / (params.theta * params.m * n)
+    return scale * (z_sum.astype(jnp.float32) - 0.5 * n * params.m)

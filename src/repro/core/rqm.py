@@ -1,0 +1,91 @@
+"""The Randomized Quantization Mechanism (Algorithm 2 of the paper).
+
+Pure-JAX reference implementation, vectorized over arbitrary input shapes.
+The Pallas kernel in ``repro.kernels.rqm_kernel`` implements the identical
+computation tiled for VMEM; both share the deterministic core
+``quantize_with_uniforms`` so they can be compared *exactly* (same uniforms
+in, same levels out).
+
+Mechanism per coordinate x in [-c, c]:
+
+  1. grid  B(i) = -(c+delta) + i * step, i = 0..m-1  (see core.grid)
+  2. keep mask: B(0), B(m-1) always kept; interior level i kept iff
+     u_level[i] < q
+  3. i_lo = max kept index <= j, i_hi = min kept index >= j+1,
+     where x in [B(j), B(j+1))
+  4. z = i_hi with prob (x - B(i_lo)) / (B(i_hi) - B(i_lo)), else i_lo
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import RQMParams, bin_index, decode_sum, encode_value
+
+__all__ = [
+    "RQMParams",
+    "quantize",
+    "quantize_with_uniforms",
+    "decode_sum",
+    "encode_value",
+]
+
+
+def quantize_with_uniforms(
+    x: jnp.ndarray,
+    u_levels: jnp.ndarray,
+    u_round: jnp.ndarray,
+    params: RQMParams,
+) -> jnp.ndarray:
+    """Deterministic RQM core: uniforms in, int32 levels out.
+
+    Args:
+      x:        any shape, values expected in [-c, c] (clipped for safety).
+      u_levels: shape ``x.shape + (m,)`` uniforms in [0,1) — level keep draws.
+      u_round:  shape ``x.shape`` uniforms in [0,1) — randomized rounding draw.
+      params:   grid hyperparameters (c, delta, m, q).
+
+    Returns:
+      int32 level indices in [0, m-1], same shape as x.
+    """
+    m = params.m
+    if u_levels.shape != x.shape + (m,):
+        raise ValueError(f"u_levels shape {u_levels.shape} != {x.shape + (m,)}")
+    if u_round.shape != x.shape:
+        raise ValueError(f"u_round shape {u_round.shape} != {x.shape}")
+
+    compute_dtype = jnp.float32
+    x = jnp.clip(x.astype(compute_dtype), -params.c, params.c)
+    j = bin_index(x, params)  # int32, in [0, m-2]
+
+    idx = jnp.arange(m, dtype=jnp.int32)  # (m,)
+    # Keep mask: endpoints always kept, interior kept iff u < q.
+    interior = (idx > 0) & (idx < m - 1)
+    keep = jnp.where(interior, u_levels < params.q, True)  # x.shape + (m,)
+
+    j_b = j[..., None]  # broadcast j against the level axis
+    # Largest kept index <= j. keep[0] is always True so the max is >= 0.
+    lo_cand = jnp.where(keep & (idx <= j_b), idx, -1)
+    i_lo = jnp.max(lo_cand, axis=-1)
+    # Smallest kept index >= j+1. keep[m-1] always True so the min is <= m-1.
+    hi_cand = jnp.where(keep & (idx > j_b), idx, m)
+    i_hi = jnp.min(hi_cand, axis=-1)
+
+    b_lo = encode_value(i_lo, params)
+    b_hi = encode_value(i_hi, params)
+    # Randomized rounding: up with prob (x - B(lo)) / (B(hi) - B(lo)).
+    p_up = (x - b_lo) / (b_hi - b_lo)
+    z = jnp.where(u_round.astype(compute_dtype) < p_up, i_hi, i_lo)
+    return z.astype(jnp.int32)
+
+
+def quantize(x: jnp.ndarray, key: jax.Array, params: RQMParams) -> jnp.ndarray:
+    """RQM with jax.random-driven randomness (reference path).
+
+    The production hot path is the Pallas kernel (repro.kernels.ops.rqm);
+    this is the oracle and the CPU fallback.
+    """
+    k_lvl, k_rnd = jax.random.split(key)
+    u_levels = jax.random.uniform(k_lvl, x.shape + (params.m,), jnp.float32)
+    u_round = jax.random.uniform(k_rnd, x.shape, jnp.float32)
+    return quantize_with_uniforms(x, u_levels, u_round, params)

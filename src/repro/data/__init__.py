@@ -1,0 +1,11 @@
+from repro.data.emnist import SyntheticEMNIST
+from repro.data.federated import FederatedPartition, sample_clients
+from repro.data.lm import TokenPipeline, synthetic_token_batch
+
+__all__ = [
+    "SyntheticEMNIST",
+    "FederatedPartition",
+    "sample_clients",
+    "TokenPipeline",
+    "synthetic_token_batch",
+]

@@ -1,0 +1,8 @@
+from repro.distributed.step import (
+    MeshPlan,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = ["MeshPlan", "make_train_step", "make_decode_step", "make_prefill_step"]

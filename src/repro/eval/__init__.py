@@ -1,0 +1,3 @@
+from repro.eval.lm_eval import evaluate_lm, perplexity
+
+__all__ = ["evaluate_lm", "perplexity"]

@@ -1,0 +1,4 @@
+from repro.fed.cnn import cnn_apply, cnn_init
+from repro.fed.loop import FedConfig, FedTrainer
+
+__all__ = ["FedConfig", "FedTrainer", "cnn_init", "cnn_apply"]

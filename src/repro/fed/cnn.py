@@ -1,0 +1,55 @@
+"""The paper's EMNIST model: a small CNN (Appendix C), pure JAX."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.emnist import IMAGE_SHAPE, NUM_CLASSES
+
+
+def cnn_init(key, channels=(16, 32), hidden: int = 128):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, c2 = channels
+    std = lambda fan: 1.0 / jnp.sqrt(fan)
+    return {
+        "conv1": jax.random.normal(k1, (5, 5, 1, c1)) * std(25),
+        "conv2": jax.random.normal(k2, (5, 5, c1, c2)) * std(25 * c1),
+        "dense1": jax.random.normal(k3, (7 * 7 * c2, hidden)) * std(7 * 7 * c2),
+        "b1": jnp.zeros((hidden,)),
+        "dense2": jax.random.normal(k4, (hidden, NUM_CLASSES)) * std(hidden),
+        "b2": jnp.zeros((NUM_CLASSES,)),
+    }
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_apply(params, images):
+    """images (B, 28, 28) -> logits (B, 62)."""
+    x = images[..., None]
+    x = _maxpool2(jax.nn.relu(_conv(x, params["conv1"])))
+    x = _maxpool2(jax.nn.relu(_conv(x, params["conv2"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["dense1"] + params["b1"])
+    return x @ params["dense2"] + params["b2"]
+
+
+def cnn_loss(params, images, labels):
+    logits = cnn_apply(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def cnn_accuracy(params, images, labels):
+    logits = cnn_apply(params, images)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's per-coordinate hot loops:
+rqm_kernel (client encode), pbm_kernel (baseline encode),
+decode_apply_kernel (server decode + SGD apply). ops.py holds the jit'd
+public wrappers; ref.py the pure-jnp oracles."""
+from repro.kernels import ops
+
+__all__ = ["ops"]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused server-side decode + SGD apply (Algorithm 1,
+lines 10-11) — the second per-coordinate hot loop of the system.
+
+    w <- w - eta * ( -(c+delta) + 2 * z_sum * (c+delta) / (n (m-1)) )
+
+Naively this is three HBM sweeps (decode z -> g_hat, read w, write w); the
+fused kernel does one read of (w, z_sum) and one write of w per tile —
+matching the RQM encode kernel's single-pass design on the other side of
+the SecAgg collective. Tiled (block_rows, 128) in VMEM like the encode
+kernel; the affine decode folds into two scalars computed at trace time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.grid import RQMParams
+
+LANE = 128
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _kernel(w_ref, z_ref, o_ref, *, scale: float, shift: float):
+    """o = w - (shift + scale * z); shift/scale fold eta and the decode."""
+    w = w_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    o_ref[...] = (w - (shift + scale * z)).astype(o_ref.dtype)
+
+
+def decode_apply_2d(w, z_sum, params: RQMParams, n: int, lr: float,
+                    *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: bool = False):
+    """w: (rows, 128) float params; z_sum: (rows, 128) int32 SecAgg sums.
+    Returns updated params (same dtype as w)."""
+    rows, cols = w.shape
+    if cols != LANE:
+        raise ValueError(f"expected lane dim {LANE}, got {cols}")
+    if rows % block_rows != 0:
+        raise ValueError(f"rows {rows} not a multiple of block_rows {block_rows}")
+    # g_hat = -(c+d) + z * 2(c+d)/(n(m-1));  w' = w - lr*g_hat
+    scale = lr * 2.0 * params.x_max / (n * (params.m - 1))
+    shift = -lr * params.x_max
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, shift=shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), w.dtype),
+        interpret=interpret,
+    )(w, z_sum)
+
+
+def decode_apply_ref(w, z_sum, params: RQMParams, n: int, lr: float):
+    """Pure-jnp oracle."""
+    from repro.core.grid import decode_sum
+
+    g_hat = decode_sum(z_sum, n, params)
+    return (w.astype(jnp.float32) - lr * g_hat).astype(w.dtype)
+
+
+def decode_apply(w, z_sum, params: RQMParams, n: int, lr: float,
+                 *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool | None = None):
+    """Arbitrary-shape wrapper (flatten -> pad -> kernel -> unpad)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = w.shape
+    wf = w.reshape(-1)
+    zf = z_sum.reshape(-1)
+    nel = wf.shape[0]
+    tile = block_rows * LANE
+    pad = (nel + tile - 1) // tile * tile - nel
+    w2 = jnp.pad(wf, (0, pad)).reshape(-1, LANE)
+    z2 = jnp.pad(zf, (0, pad)).reshape(-1, LANE)
+    out = decode_apply_2d(w2, z2, params, n, lr,
+                          block_rows=block_rows, interpret=interpret)
+    return out.reshape(-1)[:nel].reshape(shape)

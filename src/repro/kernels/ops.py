@@ -1,0 +1,131 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles arbitrary input shapes (flatten -> pad to (rows, 128) tiles ->
+kernel -> slice -> reshape), key->seed derivation, interpret-mode fallback
+on CPU, and pytree mapping for whole gradient trees.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import RQMParams
+from repro.core.pbm import PBMParams
+from repro.kernels import pbm_kernel, rqm_kernel
+from repro.kernels.rqm_kernel import LANE
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def key_to_seed(key: jax.Array) -> jnp.ndarray:
+    """Derive the kernel's uint32 scalar seed from a jax PRNG key."""
+    return jax.random.bits(key, (), jnp.uint32)
+
+
+def _tile(x_flat: jnp.ndarray, block_rows: int):
+    """Pad a flat vector and reshape to (rows, 128) with rows % block_rows == 0."""
+    n = x_flat.shape[0]
+    tile = block_rows * LANE
+    padded = ((n + tile - 1) // tile) * tile
+    x2 = jnp.pad(x_flat, (0, padded - n)).reshape(-1, LANE)
+    return x2, n
+
+
+@functools.partial(jax.jit, static_argnames=("params", "block_rows", "interpret"))
+def _rqm_flat(x_flat, seed, params: RQMParams, block_rows: int, interpret: bool):
+    x2, n = _tile(x_flat, block_rows)
+    z2 = rqm_kernel.rqm_quantize_2d(
+        x2, seed, params, block_rows=block_rows, interpret=interpret
+    )
+    return z2.reshape(-1)[:n]
+
+
+def rqm(
+    x: jnp.ndarray,
+    key: jax.Array,
+    params: RQMParams,
+    *,
+    block_rows: int = rqm_kernel.DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """RQM-quantize an arbitrary-shape array via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    seed = key_to_seed(key)
+    z = _rqm_flat(x.reshape(-1), seed, params, block_rows, interpret)
+    return z.reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "block_rows", "interpret"))
+def _pbm_flat(x_flat, seed, params: PBMParams, block_rows: int, interpret: bool):
+    x2, n = _tile(x_flat, block_rows)
+    z2 = pbm_kernel.pbm_quantize_2d(
+        x2, seed, params, block_rows=block_rows, interpret=interpret
+    )
+    return z2.reshape(-1)[:n]
+
+
+def pbm(
+    x: jnp.ndarray,
+    key: jax.Array,
+    params: PBMParams,
+    *,
+    block_rows: int = pbm_kernel.DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _interpret_default()
+    seed = key_to_seed(key)
+    z = _pbm_flat(x.reshape(-1), seed, params, block_rows, interpret)
+    return z.reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _rqm_flat_jnp(x_flat, seed, params: RQMParams):
+    """The kernel's exact math as one fused jnp expression (no pallas grid).
+
+    Bit-identical to the Pallas kernel for the same seed (the counter-based
+    RNG depends only on the flat element index). This is the hot path on
+    CPU (smoke tests, the federated example) and what the dry-run lowers —
+    pallas interpret mode would unroll its grid into a python loop, which
+    is both slow and unrepresentative in compiled HLO.
+    """
+    from repro.kernels.rqm_kernel import _rqm_block
+
+    z = _rqm_block(x_flat.reshape(1, -1), seed, jnp.uint32(0), params)
+    return z.reshape(-1)
+
+
+def rqm_fast(x: jnp.ndarray, key: jax.Array, params: RQMParams) -> jnp.ndarray:
+    """RQM via the Pallas kernel on TPU, via the fused jnp path elsewhere."""
+    if jax.default_backend() == "tpu":
+        return rqm(x, key, params)
+    seed = key_to_seed(key)
+    return _rqm_flat_jnp(x.reshape(-1), seed, params).reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _pbm_flat_jnp(x_flat, seed, params: PBMParams):
+    from repro.kernels.pbm_kernel import _pbm_block
+
+    z = _pbm_block(x_flat.reshape(1, -1), seed, jnp.uint32(0), params)
+    return z.reshape(-1)
+
+
+def pbm_fast(x: jnp.ndarray, key: jax.Array, params: PBMParams) -> jnp.ndarray:
+    if jax.default_backend() == "tpu":
+        return pbm(x, key, params)
+    seed = key_to_seed(key)
+    return _pbm_flat_jnp(x.reshape(-1), seed, params).reshape(x.shape)
+
+
+def rqm_tree(tree, key: jax.Array, params: RQMParams, **kw):
+    """Apply RQM leaf-wise to a gradient pytree with independent seeds."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [rqm(leaf, k, params, **kw) for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two layers of validation:
+
+1. *Exact*: ``rqm_ref`` / ``pbm_ref`` re-implement the kernels' math
+   (same counter-based splitmix32 draws, same clip/bin/round algebra) as
+   flat jnp on the un-tiled input. Because the RNG is counter-based, the
+   kernel must produce bit-identical int32 levels for every block shape —
+   asserted in tests/test_kernels.py across a shape/dtype/block sweep.
+2. *Distributional*: the closed form of Lemma 5.1
+   (repro.core.distribution) is compared against kernel output histograms,
+   tying the kernel back to the paper's theory, not just to another
+   implementation.
+
+``rqm_ref_with_uniforms`` additionally routes the kernel's own uniforms into
+the mechanism-level reference ``repro.core.rqm.quantize_with_uniforms``,
+proving kernel == Algorithm 2 (not merely kernel == copy-of-kernel).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.grid import RQMParams
+from repro.core.pbm import PBMParams
+from repro.core.rqm import quantize_with_uniforms
+from repro.kernels.prng import random_uniform
+
+
+def _counters(n: int) -> jnp.ndarray:
+    return jnp.arange(n, dtype=jnp.uint32)
+
+
+def rqm_uniforms(n: int, seed: jnp.ndarray, params: RQMParams):
+    """The exact uniforms the kernel draws for a flat input of n elements:
+    (n, m) level-keep draws (streams 1..m-2 for interior; endpoint streams
+    are unused but filled for shape compatibility) + (n,) rounding draws
+    (stream m)."""
+    cnt = _counters(n)
+    cols = []
+    for lvl in range(params.m):
+        if 0 < lvl < params.m - 1:
+            cols.append(random_uniform(seed, cnt, stream=lvl))
+        else:
+            cols.append(jnp.ones((n,), jnp.float32))  # endpoints: always kept
+    u_levels = jnp.stack(cols, axis=-1)
+    u_round = random_uniform(seed, cnt, stream=params.m)
+    return u_levels, u_round
+
+
+def rqm_ref(x_flat: jnp.ndarray, seed: jnp.ndarray, params: RQMParams) -> jnp.ndarray:
+    """Oracle: flat float input -> int32 levels, bit-identical to the kernel.
+
+    Implemented by generating the kernel's uniforms and running them through
+    the mechanism-level Algorithm-2 reference. Endpoint keep-draw slots are
+    ones (u < q is False) which matches ``quantize_with_uniforms`` forcing
+    endpoints kept regardless.
+    """
+    if x_flat.ndim != 1:
+        raise ValueError(f"rqm_ref expects flat input, got {x_flat.shape}")
+    u_levels, u_round = rqm_uniforms(x_flat.shape[0], seed, params)
+    return quantize_with_uniforms(x_flat, u_levels, u_round, params)
+
+
+def pbm_ref(x_flat: jnp.ndarray, seed: jnp.ndarray, params: PBMParams) -> jnp.ndarray:
+    if x_flat.ndim != 1:
+        raise ValueError(f"pbm_ref expects flat input, got {x_flat.shape}")
+    x = jnp.clip(x_flat.astype(jnp.float32), -params.c, params.c)
+    p = 0.5 + jnp.float32(params.theta) * x / jnp.float32(params.c)
+    cnt = _counters(x_flat.shape[0])
+    z = jnp.zeros(x.shape, jnp.int32)
+    for trial in range(params.m):
+        z = z + (random_uniform(seed, cnt, stream=trial) < p).astype(jnp.int32)
+    return z

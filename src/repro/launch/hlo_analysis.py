@@ -1,0 +1,159 @@
+"""Collective accounting + roofline terms from a compiled dry-run artifact.
+
+``collective_bytes`` parses the optimized HLO text and charges each
+collective with a ring-model cost on its parallelism group:
+
+  all-reduce          2 (n-1)/n * bytes     (reduce-scatter + all-gather)
+  all-gather            (n-1)/n * bytes     (bytes = full output)
+  reduce-scatter        (n-1)/n * bytes     (bytes = full input)
+  all-to-all            (n-1)/n * bytes
+  collective-permute            1 * bytes
+
+The result is bytes crossing each device's ICI links (per device, matching
+cost_analysis' per-device FLOPs/bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# replica_groups={{0,1,2},{3,4,5}} (explicit) or [8,16]<=[128] (iota form)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind: dict
+    total_bytes: float  # ring-model bytes per device
+
+    def summary(self):
+        return {"total_ring_bytes": self.total_bytes, **self.by_kind}
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_kind: dict = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("//"):
+            continue
+        kind = None
+        for k in _COLLECTIVES:
+            # op forms: `%name = <shape> all-reduce(...)`, async
+            # `all-reduce-start(`, and VARIADIC tuple outputs whose lhs
+            # contains `/*index=N*/` comments — match the op name directly
+            # rather than scanning from '=' (comments contain '=').
+            if re.search(rf"\s{k}(-start)?\(", stripped) and " = " in stripped:
+                kind = k
+                break
+        if kind is None:
+            continue
+        m = re.search(rf"\s{kind}(-start)?\(", stripped)
+        lhs = stripped[: m.start()]
+        size = _shape_bytes(lhs)
+        n = _group_size(stripped) or 1
+        if kind == "all-reduce":
+            cost = 2.0 * (n - 1) / max(n, 1) * size
+        elif kind == "collective-permute":
+            cost = float(size)
+        else:
+            cost = (n - 1) / max(n, 1) * size
+        ent = by_kind.setdefault(kind, {"count": 0, "bytes": 0.0, "ring_bytes": 0.0})
+        ent["count"] += 1
+        ent["bytes"] += size
+        ent["ring_bytes"] += cost
+        total += cost
+    return CollectiveStats(by_kind=by_kind, total_bytes=total)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float, hw) -> dict:
+    compute_s = flops / hw["peak_flops_bf16"]
+    memory_s = hbm_bytes / hw["hbm_bandwidth"]
+    collective_s = coll_bytes / hw["ici_link_bandwidth"]
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }
+
+
+def model_flops(cfg, shape, tp: int = 1) -> float:
+    """MODEL_FLOPS = 6 * N_active * tokens (train) / 2 * N_active * tokens
+    (inference), counting MoE experts at top_k/E utilization. Global (all
+    devices); divide by device count to compare with per-device HLO flops."""
+    from repro.models import meta as meta_lib
+    from repro.models import model as model_lib
+
+    meta_tree = model_lib.param_meta(cfg, tp=tp)
+    # count UNIQUE logical params: divide duplicated leaves by their sync
+    # group, replicated leaves by tp
+    leaves = []
+    import jax
+
+    for m in jax.tree_util.tree_leaves(meta_tree, is_leaf=meta_lib.is_meta):
+        n = 1
+        for d in m.shape:
+            n *= d
+        dup = max(1, min(m.sync, tp))
+        leaves.append((n, dup))
+    n_total = sum(n / dup for n, dup in leaves)
+
+    if cfg.moe is not None:
+        moe_meta = None
+        # expert leaves: (tp, e_l, D, F) ... identified by utilization factor
+        expert_n = 0
+        for m in jax.tree_util.tree_leaves(meta_tree, is_leaf=meta_lib.is_meta):
+            if len(m.shape) == 4 and m.shape[1] == cfg.moe.num_experts // tp:
+                n = 1
+                for d in m.shape:
+                    n *= d
+                expert_n += n
+        n_active = n_total - expert_n * (1 - cfg.moe.top_k / cfg.moe.num_experts)
+    else:
+        n_active = n_total
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * tokens

@@ -1,0 +1,147 @@
+"""Analytical per-device HBM model for the dry-run report.
+
+Why this exists: ``compiled.memory_analysis()`` on the CPU stand-in backend
+reports a peak computed under the CPU thunk scheduler, which (verified
+empirically — see EXPERIMENTS.md §Dry-run notes) schedules jax.checkpoint
+recompute such that rematerialization never reduces the reported peak. The
+TPU compiler's memory-minimizing scheduler does honor remat, so the CPU
+number is a large over-estimate. The dry-run therefore reports BOTH the
+XLA-CPU number (as an upper bound / allocation volume) and this analytical
+model (the fits-in-16GiB check), with every term derived from the config:
+
+  train:  params(f32) + opt state + grads(f32) + levels(int32)
+          + saved residual-stream activations (remat -> one (B_l, S[/tp], D)
+            bf16 tensor per layer) + transient working set
+  decode: params(bf16) + KV/SSM caches + small working set
+  prefill: params(bf16) + caches + forward working set
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import meta as meta_lib
+from repro.models import model as model_lib
+
+
+def _leaf_device_bytes(m: meta_lib.Meta, mesh_shape: dict) -> float:
+    n = 1
+    for d in m.shape:
+        n *= d
+    shard = 1
+    for entry in m.pspec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            shard *= mesh_shape[a]
+    return n * jnp.dtype(m.dtype).itemsize / shard
+
+
+def params_device_bytes(meta_tree, mesh_shape: dict) -> float:
+    return sum(
+        _leaf_device_bytes(m, mesh_shape)
+        for m in jax.tree_util.tree_leaves(meta_tree, is_leaf=meta_lib.is_meta)
+    )
+
+
+def max_leaf_device_bytes(meta_tree, mesh_shape: dict) -> float:
+    return max(
+        _leaf_device_bytes(m, mesh_shape)
+        for m in jax.tree_util.tree_leaves(meta_tree, is_leaf=meta_lib.is_meta)
+    )
+
+
+def estimate(cfg: ModelConfig, shape: InputShape, mesh_shape: dict, *,
+             optimizer: str = "sgd", seq_parallel: bool = True,
+             compute_bytes: int = 2, zero1: bool = False,
+             kv_quant: bool = False) -> dict:
+    tp = mesh_shape.get("model", 1)
+    n_clients = 1
+    for a, s in mesh_shape.items():
+        if a != "model":
+            n_clients *= s
+    D = cfg.d_model
+    B_l = max(1, shape.global_batch // n_clients)
+    S = shape.seq_len
+    L = cfg.num_layers
+
+    meta_train = model_lib.param_meta(cfg, tp=tp, dtype=jnp.float32)
+    p_bytes = params_device_bytes(meta_train, mesh_shape)
+    out = {}
+
+    if shape.kind == "train":
+        opt_factor = {"sgd": 0.0, "momentum": 1.0, "adam": 2.0}[optimizer]
+        s_store = S // tp if seq_parallel else S
+        saved_acts = L * B_l * s_store * D * compute_bytes
+        # transient working set: a few gathered residual copies + the widest
+        # sublayer intermediate + one attention score chunk + one CE chunk
+        h_full = B_l * S * D * compute_bytes
+        widest = 0
+        if cfg.d_ff:
+            widest = B_l * S * (cfg.d_ff // max(tp, 1)) * compute_bytes * 2
+        if cfg.moe is not None:
+            e_l = cfg.moe.num_experts // max(tp, 1)
+            C = max(1, int(cfg.moe.capacity_factor * B_l * S * cfg.moe.top_k
+                           / cfg.moe.num_experts))
+            widest = max(widest, 3 * e_l * C * D * compute_bytes
+                         + 2 * B_l * S * cfg.moe.num_experts * 4)
+        if cfg.ssm is not None:
+            hl = cfg.ssm.num_heads // max(tp, 1)
+            Q = cfg.ssm.chunk
+            widest = max(widest, B_l * (S // Q) * Q * Q * hl * 4
+                         + 2 * B_l * S * (cfg.ssm.d_inner // max(tp, 1)) * compute_bytes)
+        score_chunk = 0
+        if cfg.num_heads:
+            from repro.models.common import plan_attn_sharding
+
+            sh = plan_attn_sharding(cfg.num_heads, cfg.num_kv_heads, tp)
+            k_span = min(S, max((l.window or S) for l in cfg.layers) + cfg.q_chunk)
+            score_chunk = B_l * sh.q_local * cfg.q_chunk * k_span * 4 * 2
+        v_l = cfg.padded_vocab(tp) // tp
+        ce_chunk = 2 * B_l * min(512, S) * v_l * 4
+        workset = 4 * h_full + max(widest, score_chunk, ce_chunk)
+        # levels/clip copies are per-LEAF transients (the encode->psum->
+        # decode loop consumes one gradient leaf at a time and XLA frees
+        # donated/consumed buffers), so they cost ~2 copies of the largest
+        # leaf, not a whole extra tree.
+        leaf_transient = 2 * max_leaf_device_bytes(meta_train, mesh_shape)
+        if zero1:
+            # bf16 compute params + f32 master sharded over clients; bf16
+            # grads from AD
+            n_coords = p_bytes / 4
+            out = {
+                "params": n_coords * 2,
+                "master+optimizer": (1 + opt_factor) * p_bytes / max(1, n_clients),
+                "grads+levels": n_coords * 2 + leaf_transient,
+                "saved_activations": saved_acts,
+                "working_set": workset,
+            }
+        else:
+            out = {
+                "params": p_bytes,
+                "optimizer": opt_factor * p_bytes,
+                "grads+levels": p_bytes + leaf_transient,  # f32 grad tree
+                "saved_activations": saved_acts,
+                "working_set": workset,
+            }
+    else:
+        meta_serve = model_lib.param_meta(cfg, tp=tp, dtype=jnp.bfloat16)
+        p_bytes = params_device_bytes(meta_serve, mesh_shape)
+        cache_meta = model_lib.cache_meta(
+            cfg, tp, shape, tuple(a for a in mesh_shape if a != "model"),
+            kv_quant=kv_quant,
+        )
+        c_bytes = params_device_bytes(cache_meta, mesh_shape)
+        if shape.kind == "prefill":
+            h_full = B_l * S * D * compute_bytes
+            workset = 4 * h_full
+        else:
+            workset = 64 * 1024**2
+        out = {"params": p_bytes, "caches": c_bytes, "working_set": workset}
+
+    total = sum(out.values())
+    out["total"] = total
+    out["fits_16g"] = total < 16 * 1024**3
+    return out

@@ -1,0 +1,36 @@
+"""Production meshes (TPU v5e target).
+
+Functions, not module constants: importing this module never touches jax
+device state. The dry-run sets XLA_FLAGS for 512 host devices BEFORE
+importing jax; smoke tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+V5E = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bandwidth": 819e9,     # bytes/s per chip
+    "ici_link_bandwidth": 50e9, # bytes/s per link
+    "hbm_bytes": 16 * 1024**3,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale sharded tests (requires >=prod(shape) devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def client_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,118 @@
+"""Training launcher.
+
+Two modes:
+  * real run (CPU-feasible): reduced configs / small meshes — actually
+    initializes params, streams synthetic LM batches, applies the chosen
+    DP mechanism, logs loss, checkpoints.
+      PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b \\
+          --reduced --steps 100 --mechanism rqm --batch 8 --seq 256
+  * mesh run: pass --mesh-shape to run sharded (requires that many
+    devices; on CPU export XLA_FLAGS=--xla_force_host_platform_device_count=N
+    before launch — the dry-run module does this for the production meshes).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save
+from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.configs.registry import get_config
+from repro.core.mechanisms import make_mechanism
+from repro.data.lm import TokenPipeline
+from repro.distributed.step import MeshPlan, build_train_step_fn, make_train_step
+from repro.models import meta as meta_lib
+from repro.models import model as model_lib
+from repro.models.common import ParallelCtx
+from repro.optim import make_optimizer
+from repro.optim.schedules import warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mechanism", default="rqm", choices=["rqm", "pbm", "none"])
+    ap.add_argument("--clip", type=float, default=0.02)
+    ap.add_argument("--m", type=int, default=16)
+    ap.add_argument("--q", type=float, default=0.42)
+    ap.add_argument("--delta-ratio", type=float, default=1.0)
+    ap.add_argument("--lr", type=float, default=0.2)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 2x2 => (data,model); 2x2x2 => (pod,data,model)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    mech = make_mechanism(
+        args.mechanism, c=args.clip, m=args.m, q=args.q,
+        delta_ratio=args.delta_ratio,
+    )
+    opt = make_optimizer(args.optimizer)
+    lr_fn = warmup_cosine(args.lr, warmup=args.steps // 10 + 1, total_steps=args.steps)
+    pipe = TokenPipeline(cfg, args.seq, args.batch, seed=args.seed)
+    key = jax.random.key(args.seed)
+
+    if args.mesh_shape:
+        dims = tuple(int(x) for x in args.mesh_shape.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(dims, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        plan = MeshPlan(mesh=mesh, client_axes=tuple(n for n in names if n != "model"))
+        step_fn, specs = make_train_step(
+            cfg, plan, mech, opt, lr_fn, shape, packed=args.packed,
+            compute_dtype=jnp.float32,
+        )
+        tp = plan.tp
+        with jax.set_mesh(mesh):
+            params = model_lib.init_params(jax.random.key(args.seed + 1), cfg, tp=tp)
+            params = jax.device_put(params, meta_lib.shardings(specs["param_meta"], mesh))
+            opt_state = opt.init(params)
+            run_step = lambda p, o, s, b, k: step_fn(p, o, s, b, k)
+            _loop(args, cfg, pipe, run_step, params, opt_state, key)
+    else:
+        ctx = ParallelCtx()
+        body = build_train_step_fn(
+            cfg, mech, opt, lr_fn, ctx, compute_dtype=jnp.float32,
+            packed=args.packed,
+        )
+        step_fn = jax.jit(body, donate_argnums=(0, 1))
+        params = model_lib.init_params(jax.random.key(args.seed + 1), cfg, tp=1)
+        opt_state = opt.init(params)
+        _loop(args, cfg, pipe, step_fn, params, opt_state, key)
+
+
+def _loop(args, cfg, pipe, step_fn, params, opt_state, key):
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+        key, sub = jax.random.split(key)
+        params, opt_state, metrics = step_fn(
+            params, opt_state, jnp.int32(step), batch, sub
+        )
+        if (step + 1) % args.log_every == 0 or step == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            rate = (step + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {step+1:5d} loss={m['loss']:.4f} ce={m['ce_loss']:.4f} "
+                  f"tok/s={rate:,.0f}", flush=True)
+        if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, {"params": params, "opt": opt_state})
+    print(f"done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

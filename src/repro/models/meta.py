@@ -1,0 +1,88 @@
+"""Parameter metadata: the bridge between model code and the launcher.
+
+Every parameter leaf is described by a ``Meta`` giving its GLOBAL shape, its
+dtype, the PartitionSpec used by the manual shard_map in_specs, and its
+gradient-sync subgroup size on the model axis:
+
+  sync == 1    fully sharded leaf (distinct content per shard) — no sync.
+  sync == g    duplicated across aligned subgroups of size g — gradients are
+               summed over the subgroup (recursive-doubling ppermute).
+  sync == tp   replicated leaf — gradients psum'd over the whole model axis.
+
+``tree_*`` helpers convert a Meta tree into ShapeDtypeStructs (dry-run),
+shardings (launcher) and apply gradient sync (train step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParallelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Meta:
+    shape: tuple
+    dtype: Any
+    pspec: P
+    sync: int = 1
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, Meta)
+
+
+def tree_map(f, tree, *rest):
+    return jax.tree_util.tree_map(f, tree, *rest, is_leaf=is_meta)
+
+
+def shape_dtype_structs(meta_tree):
+    return tree_map(lambda m: jax.ShapeDtypeStruct(m.shape, m.dtype), meta_tree)
+
+
+def pspecs(meta_tree):
+    return tree_map(lambda m: m.pspec, meta_tree)
+
+
+def shardings(meta_tree, mesh):
+    return tree_map(lambda m: NamedSharding(mesh, m.pspec), meta_tree)
+
+
+def sync_grads(grads, meta_tree, ctx: ParallelCtx):
+    """Tensor-parallel gradient correction (see module docstring)."""
+
+    def sync_leaf(g, m: Meta):
+        if m.sync <= 1 or ctx.model_axis is None or ctx.tp == 1:
+            return g
+        if m.sync >= ctx.tp:
+            return ctx.psum_model(g)
+        return ctx.subgroup_psum(g, m.sync)
+
+    return tree_map(lambda m, g: sync_leaf(g, m), meta_tree, grads)
+
+
+def param_bytes(meta_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(meta_tree, is_leaf=is_meta)
+    total = 0
+    for m in leaves:
+        n = 1
+        for d in m.shape:
+            n *= d
+        total += n * jnp.dtype(m.dtype).itemsize
+    return total
+
+
+def param_count(meta_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(meta_tree, is_leaf=is_meta)
+    total = 0
+    for m in leaves:
+        n = 1
+        for d in m.shape:
+            n *= d
+        total += n
+    return total

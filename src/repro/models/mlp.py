@@ -1,0 +1,64 @@
+"""Dense MLP variants: column-parallel in, row-parallel out (+psum).
+
+Kinds:
+  swiglu        silu(x Wg) * (x Wu) Wd        (llama/mistral/chatglm/qwen…)
+  geglu         gelu(x Wg) * (x Wu) Wd        (gemma)
+  squared_relu  relu(x W1)^2 Wd               (nemotron-4)
+  gelu          gelu(x W1) Wd                 (musicgen)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import squeeze_tp
+from repro.models.common import ParallelCtx, dense_init
+
+GATED = {"swiglu", "geglu"}
+
+
+def init_params(key, kind: str, d_model: int, d_ff: int, tp: int, dtype=jnp.float32):
+    if d_ff % tp != 0:
+        raise ValueError(f"d_ff={d_ff} not divisible by tp={tp}")
+    f_l = d_ff // tp
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_down": dense_init(k3, (tp, f_l, d_model), in_axis=1, dtype=dtype)}
+    if kind in GATED:
+        p["w_gate"] = dense_init(k1, (d_model, tp, f_l), in_axis=0, dtype=dtype)
+        p["w_up"] = dense_init(k2, (d_model, tp, f_l), in_axis=0, dtype=dtype)
+    else:
+        p["w_in"] = dense_init(k1, (d_model, tp, f_l), in_axis=0, dtype=dtype)
+    return p
+
+
+def param_meta(kind: str, d_model: int, d_ff: int, tp: int, dtype=jnp.float32):
+    from repro.models.meta import Meta
+
+    f_l = d_ff // tp
+    m = {"w_down": Meta((tp, f_l, d_model), dtype, P("model", None, None), 1)}
+    if kind in GATED:
+        m["w_gate"] = Meta((d_model, tp, f_l), dtype, P(None, "model", None), 1)
+        m["w_up"] = Meta((d_model, tp, f_l), dtype, P(None, "model", None), 1)
+    else:
+        m["w_in"] = Meta((d_model, tp, f_l), dtype, P(None, "model", None), 1)
+    return m
+
+
+def forward(params, kind: str, ctx: ParallelCtx, x):
+    """x: (..., D) replicated over the model axis -> (..., D) replicated."""
+    if kind in GATED:
+        g = jnp.einsum("...d,df->...f", x, squeeze_tp(params["w_gate"], 1).astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, squeeze_tp(params["w_up"], 1).astype(x.dtype))
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, squeeze_tp(params["w_in"], 1).astype(x.dtype))
+        if kind == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        elif kind == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            raise ValueError(f"unknown mlp kind {kind!r}")
+    y = jnp.einsum("...f,fd->...d", h, squeeze_tp(params["w_down"], 0).astype(h.dtype))
+    return ctx.sp_scatter(y)

@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    make_optimizer,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "make_optimizer",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,114 @@
+"""Server-side optimizers (Algorithm 1 line 11: w <- w - eta * g_hat).
+
+The paper's server step is plain SGD; momentum and Adam are provided for the
+framework (their states shard exactly like the parameters, so the Meta tree
+of the optimizer state is derived from the model's Meta tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state; update(grads, state, params, lr) ->
+    (new_params, new_state). All pure pytree ops — safe inside shard_map."""
+
+    name: str
+    init: Callable
+    update: Callable
+    state_meta: Callable  # meta_tree(model Meta tree) -> state Meta tree
+
+
+def _zeros_like_tree(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - lr * (g + weight_decay * p).astype(p.dtype), params, grads
+        )
+        return new_params, state
+
+    def state_meta(meta_tree):
+        return ()
+
+    return Optimizer("sgd", init, update, state_meta)
+
+
+def momentum(beta: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_tree(params)}
+
+    def update(grads, state, params, lr):
+        m = jax.tree_util.tree_map(
+            lambda m_, g: beta * m_ + g, state["m"], grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, m_: p - lr * (m_ + weight_decay * p).astype(p.dtype), params, m
+        )
+        return new_params, {"m": m}
+
+    def state_meta(meta_tree):
+        return {"m": meta_tree}
+
+    return Optimizer("momentum", init, update, state_meta)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": _zeros_like_tree(params),
+            "v": _zeros_like_tree(params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return p - lr * (step + weight_decay * p).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+    def state_meta(meta_tree):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.models.meta import Meta
+
+        return {
+            "m": meta_tree,
+            "v": meta_tree,
+            "t": Meta((), jnp.int32, P(), 0),
+        }
+
+    return Optimizer("adam", init, update, state_meta)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(**kw)
+    if name == "momentum":
+        return momentum(**kw)
+    if name == "adam":
+        return adam(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

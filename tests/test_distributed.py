@@ -1,0 +1,93 @@
+"""Distributed-correctness tests. The heavy sharded checks run in a
+SUBPROCESS with 8 fake CPU devices so the main pytest process keeps the
+default single device (dry-run contract: only launch/dryrun.py forces the
+device count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_sharded_checks_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "sharded_checks.py")],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout[-3000:]}\nSTDERR:\n{p.stderr[-3000:]}"
+    assert "ALL SHARDED CHECKS PASS" in p.stdout
+
+
+def test_mesh_plan_geometry():
+    """MeshPlan bookkeeping (no devices needed — abstract mesh)."""
+    import jax
+    import numpy as np
+    from jax.sharding import AbstractMesh
+
+    from repro.distributed.step import MeshPlan
+
+    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    plan = MeshPlan(mesh=mesh, client_axes=("pod", "data"))
+    assert plan.tp == 16
+    assert plan.n_clients == 32
+    ctx = plan.ctx(seq_parallel=True)
+    assert ctx.seq_parallel and ctx.tp == 16
+    assert ctx.seq_axis == ("pod", "data")
+    assert ctx.seq_axis_sizes == (2, 16)
+
+
+def test_attn_sharding_plans():
+    """Geometry table for every assigned arch at tp=16."""
+    from repro.configs.registry import ARCH_IDS, get_config
+    from repro.models.common import plan_attn_sharding
+
+    expect = {
+        "nemotron-4-15b": (16, 1, 2),   # (tp_attn, dup_attn, kv_group)
+        "gemma3-4b": (8, 2, 4),
+        "zamba2-1.2b": (16, 1, 1),
+        "phi3.5-moe-42b-a6.6b": (16, 1, 2),
+        "musicgen-medium": (8, 2, 2),
+        "h2o-danube-3-4b": (16, 1, 2),
+        "qwen3-moe-30b-a3b": (16, 1, 4),
+        "pixtral-12b": (16, 1, 2),
+        "chatglm3-6b": (16, 1, 8),
+    }
+    for arch, (tpa, dup, kvg) in expect.items():
+        cfg = get_config(arch)
+        sh = plan_attn_sharding(cfg.num_heads, cfg.num_kv_heads, 16)
+        assert sh.tp_attn == tpa, (arch, sh)
+        assert sh.dup_attn == dup, (arch, sh)
+        assert sh.kv_group == kvg, (arch, sh)
+        # every shard's q heads map within one kv head when kv replicated
+        assert sh.q_local * sh.tp_attn == cfg.num_heads
+
+
+def test_param_meta_divisibility_tp16():
+    """Every assigned architecture's params shard cleanly on tp=16."""
+    from repro.configs.registry import ARCH_IDS, get_config
+    from repro.models import meta as meta_lib
+    from repro.models import model as model_lib
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        meta = model_lib.param_meta(cfg, tp=16)  # raises if not divisible
+        n = meta_lib.param_count(meta)
+        assert n > 0
+
+
+def test_sync_grads_local_noop():
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.common import ParallelCtx
+    from repro.models.meta import Meta, sync_grads
+
+    meta = {"a": Meta((4,), jnp.float32, P(None), 16)}
+    grads = {"a": jnp.arange(4.0)}
+    out = sync_grads(grads, meta, ParallelCtx())
+    assert (out["a"] == grads["a"]).all()

@@ -1,0 +1,66 @@
+"""HLO collective parser + roofline-term unit tests (synthetic HLO snippets,
+including the variadic tuple all-reduce form whose /*index=N*/ comments broke
+an earlier regex — regression-guarded here)."""
+import pytest
+
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+
+HLO = """
+HloModule jit_train_step
+
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %all-gather.1 = bf16[8,4096,2560]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={1}
+  %all-reduce.2 = f32[1024,512]{1,0} all-reduce(%y), replica_groups=[16,16]<=[256], to_apply=%add
+  // a variadic tuple all-reduce with /*index=N*/ comments:
+  %all-reduce.8 = (s16[1,256,256]{2,1,0}, s16[256]{0}, /*index=2*/s16[256,128]{1,0}) all-reduce(%a, %b, %c), replica_groups=[64,4]<=[256], to_apply=%add16
+  %reduce-scatter.3 = bf16[8,256,2560]{2,1,0} reduce-scatter(%z), replica_groups=[16,16]<=[256], dimensions={1}
+  %collective-permute.4 = f32[128]{0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %all-to-all.5 = s8[64,64]{1,0} all-to-all(%v), replica_groups={{0,1,2,3}}, dimensions={0}
+  %all-reduce-done.9 = f32[4]{0} all-reduce-done(%ar_started)
+  ROOT %out = f32[16,128]{1,0} copy(%p0)
+}
+"""
+
+
+def test_kinds_and_counts():
+    st = collective_bytes(HLO)
+    assert st.by_kind["all-gather"]["count"] == 1
+    assert st.by_kind["all-reduce"]["count"] == 2  # incl. the tuple one
+    assert st.by_kind["reduce-scatter"]["count"] == 1
+    assert st.by_kind["collective-permute"]["count"] == 1
+    assert st.by_kind["all-to-all"]["count"] == 1
+
+
+def test_tuple_all_reduce_bytes():
+    st = collective_bytes(HLO)
+    tuple_bytes = (1 * 256 * 256 + 256 + 256 * 128) * 2  # s16
+    plain_bytes = 1024 * 512 * 4
+    n16, n4 = 16, 4
+    expect = (2 * (n16 - 1) / n16 * plain_bytes
+              + 2 * (n4 - 1) / n4 * tuple_bytes)
+    assert st.by_kind["all-reduce"]["ring_bytes"] == pytest.approx(expect)
+
+
+def test_ring_factors():
+    st = collective_bytes(HLO)
+    ag = 8 * 4096 * 2560 * 2
+    assert st.by_kind["all-gather"]["ring_bytes"] == pytest.approx(ag * 15 / 16)
+    cp = 128 * 4
+    assert st.by_kind["collective-permute"]["ring_bytes"] == pytest.approx(cp)
+
+
+def test_done_ops_not_double_counted():
+    st = collective_bytes(HLO)
+    # the all-reduce-done must not add a third all-reduce
+    assert st.by_kind["all-reduce"]["count"] == 2
+
+
+def test_roofline_terms():
+    hw = {"peak_flops_bf16": 100e12, "hbm_bandwidth": 800e9,
+          "ici_link_bandwidth": 50e9}
+    t = roofline_terms(1e12, 8e9, 5e9, hw)
+    assert t["compute_s"] == pytest.approx(0.01)
+    assert t["memory_s"] == pytest.approx(0.01)
+    assert t["collective_s"] == pytest.approx(0.1)
+    assert t["dominant"] == "collective"

@@ -1,0 +1,59 @@
+"""Analytical HBM model sanity tests."""
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch.memory_model import estimate, params_device_bytes
+from repro.models import model as model_lib
+
+MESH = {"data": 16, "model": 16}
+MESH_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_param_bytes_scale_with_sharding():
+    cfg = get_config("gemma3-4b")
+    meta = model_lib.param_meta(cfg, tp=16)
+    per_dev = params_device_bytes(meta, MESH)
+    # ~4B params f32 / 16-way model sharding ~ 1 GiB (duplication adds some)
+    assert 0.7e9 < per_dev < 2.5e9
+
+
+def test_train_components_positive_and_fit_flags():
+    for arch in ("gemma3-4b", "nemotron-4-15b", "qwen3-moe-30b-a3b"):
+        cfg = get_config(arch)
+        est = estimate(cfg, INPUT_SHAPES["train_4k"], MESH)
+        for k, v in est.items():
+            if k != "fits_16g":
+                assert v >= 0, (arch, k, v)
+        assert est["total"] == pytest.approx(
+            sum(v for k, v in est.items() if k not in ("total", "fits_16g")))
+
+
+def test_seq_parallel_reduces_activations():
+    cfg = get_config("nemotron-4-15b")
+    sp = estimate(cfg, INPUT_SHAPES["train_4k"], MESH, seq_parallel=True)
+    nosp = estimate(cfg, INPUT_SHAPES["train_4k"], MESH, seq_parallel=False)
+    assert nosp["saved_activations"] == pytest.approx(
+        16 * sp["saved_activations"])
+
+
+def test_zero1_reduces_total():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    base = estimate(cfg, INPUT_SHAPES["train_4k"], MESH)
+    z1 = estimate(cfg, INPUT_SHAPES["train_4k"], MESH, zero1=True)
+    assert z1["total"] < base["total"]
+    assert z1["fits_16g"]
+
+
+def test_decode_dominated_by_params_and_caches():
+    cfg = get_config("nemotron-4-15b")
+    est = estimate(cfg, INPUT_SHAPES["decode_32k"], MESH)
+    assert est["params"] > 0 and est["caches"] > 0
+    assert est["total"] < 16 * 1024**3
+
+
+def test_multipod_not_larger():
+    cfg = get_config("nemotron-4-15b")
+    sp = estimate(cfg, INPUT_SHAPES["train_4k"], MESH)
+    mp = estimate(cfg, INPUT_SHAPES["train_4k"], MESH_MP)
+    assert mp["total"] <= sp["total"] + 1e6

@@ -1,0 +1,132 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import rqm
+from repro.core.distribution import rqm_outcome_distribution
+from repro.core.grid import RQMParams, decode_sum, encode_value
+from repro.core.renyi import renyi_divergence
+from repro.core.secagg import max_clients_for_packing, pack_levels, unpack_levels
+
+params_strategy = st.builds(
+    RQMParams,
+    c=st.floats(0.01, 10.0),
+    delta=st.floats(0.01, 10.0),
+    m=st.integers(2, 40),
+    q=st.floats(0.05, 0.95),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(params=params_strategy, frac=st.floats(-1.0, 1.0))
+def test_closed_form_is_distribution_and_unbiased(params, frac):
+    """Lemma 5.1 for arbitrary hyperparameters: pmf sums to 1, E[B(z)] = x."""
+    x = frac * params.c
+    p = rqm_outcome_distribution(x, params)
+    assert np.all(p >= -1e-12)
+    np.testing.assert_allclose(p.sum(), 1.0, atol=1e-10)
+    np.testing.assert_allclose((p * params.levels()).sum(), x, atol=1e-7 * max(1, params.x_max))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    params=params_strategy,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mechanism_output_range(params, seed):
+    key = jax.random.key(seed)
+    x = jax.random.uniform(key, (512,), jnp.float32, -2 * params.c, 2 * params.c)
+    z = rqm.quantize(x, key, params)
+    assert int(z.min()) >= 0 and int(z.max()) <= params.m - 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    params=params_strategy,
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 12),
+)
+def test_encode_decode_bracket(params, seed, n):
+    """decode(sum of z) lies inside the grid range, and within one max-gap of
+    the true mean (each client's value is bracketed by kept levels)."""
+    key = jax.random.key(seed)
+    x = jax.random.uniform(key, (n, 64), jnp.float32, -params.c, params.c)
+    keys = jax.random.split(key, n)
+    z = jnp.stack([rqm.quantize(x[i], keys[i], params) for i in range(n)])
+    g = decode_sum(z.sum(axis=0), n, params)
+    assert float(g.min()) >= -params.x_max - 1e-5
+    assert float(g.max()) <= params.x_max + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(st.integers(0, 15), min_size=1, max_size=300),
+)
+def test_lane_packing_roundtrip(data):
+    z = jnp.asarray(data, jnp.int32)
+    packed, n = pack_levels(z)
+    out = unpack_levels(packed, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(z))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    n_clients=st.integers(2, 50),
+)
+def test_lane_packing_sum_exact(seed, n_clients):
+    """Sum of packed words == packed sum of words while lanes don't overflow
+    (the SecAgg-emulation invariant)."""
+    rng = np.random.default_rng(seed)
+    m = 16
+    assert n_clients <= max_clients_for_packing(m)
+    z = rng.integers(0, m, size=(n_clients, 41))
+    packed = []
+    for i in range(n_clients):
+        p, n = pack_levels(jnp.asarray(z[i], jnp.int32))
+        packed.append(p)
+    summed = jnp.sum(jnp.stack(packed), axis=0)
+    out = unpack_levels(summed, n)
+    np.testing.assert_array_equal(np.asarray(out), z.sum(axis=0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    alpha=st.floats(1.01, 64.0),
+)
+def test_renyi_nonnegative_random_pmfs(seed, alpha):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet([0.5] * 12)
+    q = rng.dirichlet([0.5] * 12)
+    assert renyi_divergence(p, q, alpha) >= -1e-10
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_renyi_monotone_random(seed):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet([1.0] * 8)
+    q = rng.dirichlet([1.0] * 8)
+    alphas = [1.0, 2.0, 8.0, 64.0, float("inf")]
+    vals = [renyi_divergence(p, q, a) for a in alphas]
+    assert all(a <= b + 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    params=params_strategy,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_oracle_agreement_random_params(params, seed):
+    """Kernel == oracle for arbitrary mechanism hyperparameters."""
+    from repro.kernels import ops, ref
+
+    key = jax.random.key(seed)
+    x = jax.random.uniform(key, (777,), jnp.float32, -params.c, params.c)
+    z_k = ops.rqm(x, key, params, interpret=True, block_rows=8)
+    z_r = ref.rqm_ref(x, ops.key_to_seed(key), params)
+    np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))

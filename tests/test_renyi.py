@@ -1,0 +1,93 @@
+"""Renyi divergence + accounting."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.distribution import rqm_outcome_distribution
+from repro.core.grid import RQMParams
+from repro.core.renyi import RenyiAccountant, renyi_divergence, worst_case_inputs
+
+P = np.array([0.1, 0.2, 0.3, 0.4])
+Q = np.array([0.25, 0.25, 0.25, 0.25])
+
+
+def test_nonnegative_and_zero_on_equal():
+    assert renyi_divergence(P, P, 2.0) == pytest.approx(0.0, abs=1e-12)
+    assert renyi_divergence(P, Q, 2.0) > 0
+
+
+def test_monotone_in_alpha():
+    """Lemma 3.4: D_alpha nondecreasing in alpha."""
+    alphas = [1.0, 1.5, 2.0, 4.0, 16.0, 256.0, float("inf")]
+    vals = [renyi_divergence(P, Q, a) for a in alphas]
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_alpha_one_is_kl():
+    kl = float(np.sum(P * np.log(P / Q)))
+    assert renyi_divergence(P, Q, 1.0) == pytest.approx(kl, rel=1e-9)
+
+
+def test_alpha_inf_is_max_log_ratio():
+    expect = float(np.max(np.log(P / Q)))
+    assert renyi_divergence(P, Q, float("inf")) == pytest.approx(expect, rel=1e-9)
+
+
+def test_infinite_when_q_zero():
+    q0 = np.array([0.5, 0.5, 0.0, 0.0])
+    p0 = np.array([0.25, 0.25, 0.25, 0.25])
+    assert math.isinf(renyi_divergence(p0, q0, 2.0))
+
+
+def test_support_mismatch_raises():
+    with pytest.raises(ValueError):
+        renyi_divergence(P, Q[:3], 2.0)
+
+
+def test_worst_case_inputs_shape():
+    x, xp = worst_case_inputs(1.5, 10, seed=1)
+    assert x.shape == (10,) and xp.shape == (10,)
+    assert x[0] == 1.5 and xp[0] == -1.5
+    np.testing.assert_array_equal(x[1:], xp[1:])
+
+
+def test_quasi_convexity_extremes():
+    """Sec 6.1: the divergence is maximized at extreme inputs."""
+    params = RQMParams(c=1.0, delta=1.0, m=16, q=0.42)
+    d_extreme = renyi_divergence(
+        rqm_outcome_distribution(1.0, params),
+        rqm_outcome_distribution(-1.0, params),
+        4.0,
+    )
+    for a, b in [(0.5, -0.5), (0.9, -0.2), (0.3, 0.1)]:
+        d = renyi_divergence(
+            rqm_outcome_distribution(a, params),
+            rqm_outcome_distribution(b, params),
+            4.0,
+        )
+        assert d <= d_extreme + 1e-9
+
+
+class TestAccountant:
+    def test_additive_composition(self):
+        acc = RenyiAccountant(alphas=(2.0, 8.0))
+        acc.step([0.1, 0.3])
+        acc.step([0.1, 0.3])
+        assert acc.rounds == 2
+        assert acc.rdp_epsilon(2.0) == pytest.approx(0.2)
+        assert acc.rdp_epsilon(8.0) == pytest.approx(0.6)
+
+    def test_dp_conversion(self):
+        acc = RenyiAccountant(alphas=(2.0, 8.0, 32.0))
+        for _ in range(10):
+            acc.step([0.05, 0.2, 0.5])
+        eps, alpha = acc.dp_epsilon(delta=1e-5)
+        # eps = min over alpha of rdp + log(1/delta)/(alpha-1)
+        expect = min(
+            0.5 + math.log(1e5) / 1.0,
+            2.0 + math.log(1e5) / 7.0,
+            5.0 + math.log(1e5) / 31.0,
+        )
+        assert eps == pytest.approx(expect)
+        assert alpha in (2.0, 8.0, 32.0)

@@ -1,0 +1,61 @@
+"""Generalized (per-level-q) RQM — the paper's Discussion extension."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distribution import rqm_outcome_distribution
+from repro.core.grid import RQMParams
+from repro.core.rqm_general import (
+    GeneralRQMParams,
+    aggregate_epsilon,
+    mechanism_variance,
+    outcome_distribution,
+    quantize,
+)
+
+BASE = RQMParams(c=1.5, delta=1.5, m=16, q=0.42)
+
+
+@pytest.mark.parametrize("x", [-1.5, -0.4, 0.0, 0.3, 1.5])
+def test_reduces_to_lemma51_at_uniform_q(x):
+    g = GeneralRQMParams.from_scalar(BASE)
+    np.testing.assert_allclose(
+        outcome_distribution(x, g), rqm_outcome_distribution(x, BASE),
+        atol=1e-12,
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_general_pmf_is_distribution_and_unbiased(seed):
+    rng = np.random.default_rng(seed)
+    q = tuple(rng.uniform(0.1, 0.9, size=14))
+    g = GeneralRQMParams(1.0, 0.8, 16, q)
+    for x in np.linspace(-1.0, 1.0, 7):
+        p = outcome_distribution(float(x), g)
+        np.testing.assert_allclose(p.sum(), 1.0, atol=1e-12)
+        np.testing.assert_allclose((p * g.levels()).sum(), x, atol=1e-9)
+        assert np.all(p >= -1e-15)
+
+
+def test_sampler_matches_pmf():
+    q = tuple(np.linspace(0.25, 0.65, 14))
+    g = GeneralRQMParams(1.5, 1.5, 16, q)
+    z = quantize(jnp.full((120_000,), -0.8), jax.random.key(1), g)
+    hist = np.bincount(np.asarray(z), minlength=16) / 120_000
+    assert np.abs(hist - outcome_distribution(-0.8, g)).max() < 7e-3
+
+
+def test_aggregate_epsilon_matches_scalar_path():
+    from repro.core.renyi import rqm_aggregate_epsilon
+
+    g = GeneralRQMParams.from_scalar(BASE)
+    e_gen = aggregate_epsilon(g, 5, 8.0)
+    e_ref = rqm_aggregate_epsilon(BASE, 5, 8.0)
+    assert e_gen == pytest.approx(e_ref, rel=1e-9)
+
+
+def test_variance_positive_and_bounded():
+    g = GeneralRQMParams.from_scalar(BASE)
+    v = mechanism_variance(g)
+    assert 0 < v < (2 * g.x_max) ** 2

@@ -1,0 +1,155 @@
+"""Mechanism-level tests: Lemma 5.1, Theorem 5.2, unbiasedness, and the
+paper's headline claims (Fig 2) as regression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rqm
+from repro.core.distribution import (
+    aggregate_distribution,
+    binomial_pmf,
+    pbm_outcome_distribution,
+    rqm_outcome_distribution,
+)
+from repro.core.grid import RQMParams, decode_sum, encode_value
+from repro.core.pbm import PBMParams
+from repro.core.renyi import (
+    pbm_aggregate_epsilon,
+    renyi_divergence,
+    rqm_aggregate_epsilon,
+    rqm_pairwise_divergence,
+)
+
+PAPER = RQMParams(c=1.5, delta=1.5, m=16, q=0.42)  # Sec 6.1 hyperparameters
+
+
+class TestLemma51:
+    @pytest.mark.parametrize("x", np.linspace(-1.5, 1.5, 9).tolist())
+    def test_normalization(self, x):
+        p = rqm_outcome_distribution(x, PAPER)
+        assert p.shape == (16,)
+        assert np.all(p >= -1e-15)
+        np.testing.assert_allclose(p.sum(), 1.0, atol=1e-12)
+
+    @pytest.mark.parametrize("x", np.linspace(-1.5, 1.5, 9).tolist())
+    def test_closed_form_unbiased(self, x):
+        """E[B(Q(x))] = x — the mechanism is unbiased (Sec 5.1 step 3)."""
+        p = rqm_outcome_distribution(x, PAPER)
+        np.testing.assert_allclose((p * PAPER.levels()).sum(), x, atol=1e-9)
+
+    @pytest.mark.parametrize(
+        "params",
+        [
+            RQMParams(c=1.0, delta=0.5, m=8, q=0.3),
+            RQMParams(c=0.02, delta=0.04, m=32, q=0.6),
+            RQMParams(c=1.5, delta=0.99, m=16, q=0.42),
+        ],
+    )
+    def test_mechanism_matches_closed_form(self, params):
+        """Empirical histogram of the sampled mechanism == Eq. (2)."""
+        x_val = 0.37 * params.c
+        n = 120_000
+        z = rqm.quantize(jnp.full((n,), x_val), jax.random.key(0), params)
+        hist = np.bincount(np.asarray(z), minlength=params.m) / n
+        exact = rqm_outcome_distribution(x_val, params)
+        assert np.abs(hist - exact).max() < 7e-3
+
+    def test_endpoints_always_feasible(self):
+        """B(0)/B(m-1) are always kept: z stays in [0, m-1] even at x=+-c."""
+        z = rqm.quantize(
+            jnp.array([-PAPER.c, PAPER.c] * 500), jax.random.key(1), PAPER
+        )
+        assert int(z.min()) >= 0 and int(z.max()) <= PAPER.m - 1
+
+
+class TestTheorem52:
+    @pytest.mark.parametrize(
+        "params",
+        [
+            PAPER,
+            RQMParams(c=1.5, delta=3.0, m=16, q=0.57),
+            RQMParams(c=1.5, delta=0.66 * 1.5, m=16, q=0.33),
+            RQMParams(c=1.0, delta=0.25, m=8, q=0.37),
+        ],
+    )
+    def test_exact_dinf_below_bound(self, params):
+        d_inf = rqm_pairwise_divergence(params.c, -params.c, params, float("inf"))
+        assert d_inf <= params.epsilon_infinity() + 1e-9
+
+    def test_bound_decreases_with_delta(self):
+        eps = [
+            RQMParams(c=1.0, delta=d, m=16, q=0.42).epsilon_infinity()
+            for d in (0.25, 0.5, 1.0, 2.0, 4.0)
+        ]
+        assert all(a > b for a, b in zip(eps, eps[1:]))
+
+    def test_bound_increases_with_m(self):
+        eps = [
+            RQMParams(c=1.0, delta=1.0, m=m, q=0.42).epsilon_infinity()
+            for m in (4, 8, 16, 32)
+        ]
+        assert all(a < b for a, b in zip(eps, eps[1:]))
+
+
+class TestPaperClaims:
+    """Fig 2: RQM (delta=c, q=0.42) beats PBM (theta=0.25) at m=16."""
+
+    @pytest.mark.parametrize("n", [1, 5, 20, 40])
+    def test_fig2_left_rqm_beats_pbm_alpha2(self, n):
+        e_rqm = rqm_aggregate_epsilon(PAPER, n, alpha=2.0)
+        e_pbm = pbm_aggregate_epsilon(PBMParams(c=1.5, m=16, theta=0.25), n, 2.0)
+        assert e_rqm < e_pbm
+
+    @pytest.mark.parametrize("alpha", [2.0, 16.0, 128.0, 1000.0])
+    def test_fig2_right_rqm_beats_pbm_n40(self, alpha):
+        e_rqm = rqm_aggregate_epsilon(PAPER, 40, alpha=alpha)
+        e_pbm = pbm_aggregate_epsilon(PBMParams(c=1.5, m=16, theta=0.25), 40, alpha)
+        assert e_rqm < e_pbm
+
+    def test_fig45_theta_sweep(self):
+        """Appendix D pairings also hold (theta=0.15 / 0.35)."""
+        for theta, (dr, q) in [(0.15, (2.33, 0.42)), (0.35, (0.429, 0.49))]:
+            p = RQMParams(c=1.5, delta=dr * 1.5, m=16, q=q)
+            e_rqm = rqm_aggregate_epsilon(p, 40, alpha=8.0)
+            e_pbm = pbm_aggregate_epsilon(
+                PBMParams(c=1.5, m=16, theta=theta), 40, 8.0
+            )
+            assert e_rqm < e_pbm
+
+
+class TestAggregation:
+    def test_decode_sum_unbiased(self):
+        """mean over clients of decode(sum z_i) ~= mean(x_i)."""
+        n, dim = 24, 4000
+        key = jax.random.key(3)
+        x = jax.random.uniform(key, (n, dim), minval=-1.0, maxval=1.0)
+        params = RQMParams(c=1.0, delta=1.0, m=16, q=0.42)
+        keys = jax.random.split(jax.random.key(4), n)
+        z = jnp.stack([rqm.quantize(x[i], keys[i], params) for i in range(n)])
+        g = decode_sum(z.sum(axis=0), n, params)
+        err = jnp.abs(g - x.mean(axis=0)).mean()
+        # RQM std per coordinate is O(step); averaged over n clients
+        assert float(err) < 0.08
+
+    def test_aggregate_distribution_is_convolution(self):
+        p1 = rqm_outcome_distribution(0.5, PAPER)
+        p2 = rqm_outcome_distribution(-0.5, PAPER)
+        agg = aggregate_distribution([p1, p2])
+        assert agg.shape == (31,)
+        np.testing.assert_allclose(agg.sum(), 1.0, atol=1e-12)
+        # mean adds
+        mean = (np.arange(31) * agg).sum()
+        m1 = (np.arange(16) * p1).sum()
+        m2 = (np.arange(16) * p2).sum()
+        np.testing.assert_allclose(mean, m1 + m2, atol=1e-9)
+
+    def test_binomial_pmf(self):
+        p = binomial_pmf(10, 0.3)
+        np.testing.assert_allclose(p.sum(), 1.0, atol=1e-12)
+        np.testing.assert_allclose((np.arange(11) * p).sum(), 3.0, atol=1e-9)
+
+    def test_pbm_outcome_mean(self):
+        p = pbm_outcome_distribution(0.6, c=1.0, m=16, theta=0.25)
+        mean = (np.arange(17) * p).sum()
+        np.testing.assert_allclose(mean, 16 * (0.5 + 0.25 * 0.6), atol=1e-9)
