@@ -49,7 +49,25 @@ def run(csv=print):
     pbm_p = PBMParams(c=1.0, m=16, theta=0.25)
     us_pbm = _time(lambda x: ops.pbm_fast(x, key, pbm_p), x)
     csv(f"pbm_fused_jnp_1M,{us_pbm:.0f},{N/us_pbm:.1f}_elts_per_us")
-    return {"rqm_fast_us": us_fast, "ref_us": us_ref}
+
+    # batched (clients, dim) encode — the federated round engine's shape:
+    # ONE fused call over the stacked batch vs a per-client vmap with
+    # split keys (the pre-engine dispatch).
+    clients, dim = 40, 25_000
+    xb = jax.random.uniform(
+        jax.random.key(3), (clients, dim), jnp.float32, -1, 1
+    )
+
+    def vmapped(xb):
+        keys = jax.random.split(key, clients)
+        return jax.vmap(lambda x, k: ops.rqm_fast(x, k, PARAMS))(xb, keys)
+
+    us_batch = _time(jax.jit(lambda xb: ops.rqm_batch(xb, key, PARAMS)), xb)
+    us_vmap = _time(jax.jit(vmapped), xb)
+    csv(f"rqm_batched_40x25k,{us_batch:.0f},"
+        f"fused_batch_vs_vmap={us_vmap/us_batch:.2f}x")
+    return {"rqm_fast_us": us_fast, "ref_us": us_ref,
+            "batch_us": us_batch, "vmap_us": us_vmap}
 
 
 if __name__ == "__main__":

@@ -2,8 +2,13 @@
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+# `python benchmarks/run.py` puts benchmarks/ itself on sys.path; the
+# `from benchmarks import ...` imports below need the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:

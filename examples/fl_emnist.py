@@ -18,6 +18,8 @@ from repro.fed.loop import FedConfig, FedTrainer
 
 
 def run_one(name, fcfg, c, m, q, delta_ratio, theta):
+    """One mechanism end-to-end: train with the configured round engine,
+    then report the composed Renyi accounting."""
     mech = make_mechanism(name, c=c, m=m, q=q, delta_ratio=delta_ratio,
                           theta=theta)
     tr = FedTrainer(mech, fcfg)
@@ -50,6 +52,11 @@ def main():
     ap.add_argument("--theta", type=float, default=0.25)
     ap.add_argument("--mechanism", default="all",
                     choices=["all", "rqm", "pbm", "none"])
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "perround", "host"],
+                    help="round engine: 'scan' = device-resident jitted "
+                         "blocks (fastest), 'perround' = same step driven "
+                         "per round, 'host' = legacy host loop")
     ap.add_argument("--out", default=None, help="write results JSON")
     args = ap.parse_args()
 
@@ -57,6 +64,7 @@ def main():
         num_clients=args.clients, clients_per_round=args.per_round,
         rounds=args.rounds, lr=args.lr, eval_size=1000,
         data_noise=1.5, data_deform=1.2,  # see benchmarks/fig3_fl_emnist.py
+        engine=args.engine,
     )
     names = ["none", "rqm", "pbm"] if args.mechanism == "all" else [args.mechanism]
     results = [

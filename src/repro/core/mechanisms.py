@@ -5,6 +5,19 @@ Each mechanism maps a clipped per-client gradient leaf -> integer message,
 and decodes the cross-client SUM of messages -> aggregated gradient estimate.
 This is exactly the Algorithm-1 contract (encode on device, SecAgg-sum,
 decode on server).
+
+Two encode entry points:
+
+  * ``encode(x, key)``       — one client's vector (any shape).
+  * ``encode_batch(x, key)`` — a stacked ``(clients, dim)`` batch, the shape
+    the federated round engine produces. When ``use_kernel`` is set the
+    batch is quantized in ONE fused kernel invocation (Pallas on TPU, the
+    kernel's exact math as fused jnp elsewhere): the counter-based RNG
+    spans the flattened batch, so every client draws independent randomness
+    from a single per-round seed, and the output is bit-identical to the
+    ``quantize_with_uniforms`` reference on the flattened input
+    (see kernels/ref.py). Without the kernel it falls back to a vmap of
+    ``encode`` over per-client subkeys.
 """
 from __future__ import annotations
 
@@ -13,7 +26,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pbm as pbm_lib
 from repro.core import rqm as rqm_lib
@@ -27,7 +39,10 @@ class Mechanism:
 
     ``sum_bound(n)`` bounds the aggregated message value — used to pick the
     aggregation lane width. ``bits`` is the per-coordinate client message
-    size (communication accounting).
+    size (communication accounting). ``encode_batch`` handles a stacked
+    ``(clients, dim)`` input; if not provided it is derived as a vmap of
+    ``encode`` over split keys. ``use_kernel`` records whether encoding is
+    routed through the fused Pallas/jnp kernel path.
     """
 
     name: str
@@ -36,6 +51,29 @@ class Mechanism:
     sum_bound: Callable[[int], int]
     bits: float
     clip: float
+    encode_batch: Optional[Callable[[jnp.ndarray, jax.Array], jnp.ndarray]] = None
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        if self.encode_batch is None:
+            enc = self.encode
+
+            def vmapped(x, key):
+                keys = jax.random.split(key, x.shape[0])
+                return jax.vmap(enc)(x, keys)
+
+            object.__setattr__(self, "encode_batch", vmapped)
+
+    # -- shared clip->encode dispatch (used by fed engine + distributed step)
+    def quantize(self, g: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        """Full client-side pipeline for one leaf: clip then encode."""
+        g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
+        return self.encode(g, key)
+
+    def quantize_batch(self, g: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        """clip + batched encode for a stacked ``(clients, dim)`` input."""
+        g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
+        return self.encode_batch(g, key)
 
 
 def make_rqm_mechanism(params: RQMParams, *, use_kernel: bool = True) -> Mechanism:
@@ -45,8 +83,10 @@ def make_rqm_mechanism(params: RQMParams, *, use_kernel: bool = True) -> Mechani
         from repro.kernels import ops as kops
 
         encode = lambda x, key: kops.rqm_fast(x, key, params)
+        encode_batch = lambda x, key: kops.rqm_batch(x, key, params)
     else:
         encode = lambda x, key: rqm_lib.quantize(x, key, params)
+        encode_batch = None  # derived vmap of the pure-JAX reference
     return Mechanism(
         name="rqm",
         encode=encode,
@@ -54,19 +94,29 @@ def make_rqm_mechanism(params: RQMParams, *, use_kernel: bool = True) -> Mechani
         sum_bound=lambda n: n * (params.m - 1),
         bits=params.bits_per_coordinate,
         clip=params.c,
+        encode_batch=encode_batch,
+        use_kernel=use_kernel,
     )
 
 
-def make_pbm_mechanism(params: PBMParams) -> Mechanism:
-    from repro.kernels import ops as kops
+def make_pbm_mechanism(params: PBMParams, *, use_kernel: bool = True) -> Mechanism:
+    if use_kernel:
+        from repro.kernels import ops as kops
 
+        encode = lambda x, key: kops.pbm_fast(x, key, params)
+        encode_batch = lambda x, key: kops.pbm_batch(x, key, params)
+    else:
+        encode = lambda x, key: pbm_lib.quantize(x, key, params)
+        encode_batch = None
     return Mechanism(
         name="pbm",
-        encode=lambda x, key: kops.pbm_fast(x, key, params),
+        encode=encode,
         decode_sum=lambda z, n: pbm_lib.decode_sum(z, n, params),
         sum_bound=lambda n: n * params.m,
         bits=params.bits_per_coordinate,
         clip=params.c,
+        encode_batch=encode_batch,
+        use_kernel=use_kernel,
     )
 
 
@@ -74,13 +124,15 @@ def make_noise_free_mechanism(c: float) -> Mechanism:
     """Noise-free clipped SGD: the paper's non-private upper-bound benchmark.
     'Levels' are the clipped float gradients themselves (identity encode);
     decode averages. No privacy."""
+    encode = lambda x, key: jnp.clip(x, -c, c)
     return Mechanism(
         name="none",
-        encode=lambda x, key: jnp.clip(x, -c, c),
+        encode=encode,
         decode_sum=lambda g_sum, n: g_sum / n,
         sum_bound=lambda n: 0,
         bits=32.0,
         clip=c,
+        encode_batch=encode,  # clip is shape-agnostic; no per-client keys
     )
 
 
@@ -103,7 +155,9 @@ def make_mechanism(
             RQMParams(c=c, delta=delta_ratio * c, m=m, q=q), use_kernel=use_kernel
         )
     if name == "pbm":
-        return make_pbm_mechanism(PBMParams(c=c, m=m, theta=theta))
+        return make_pbm_mechanism(
+            PBMParams(c=c, m=m, theta=theta), use_kernel=use_kernel
+        )
     if name == "none":
         return make_noise_free_mechanism(c)
     raise ValueError(f"unknown mechanism {name!r}; expected rqm|pbm|none")

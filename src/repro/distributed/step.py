@@ -111,8 +111,7 @@ def encode_aggregate_decode(grads, meta_tree, mech: Mechanism, ctx: ParallelCtx,
     for i, (g, m) in enumerate(zip(leaves, metas)):
         leaf_key = jax.random.fold_in(key, i)
         leaf_key = jax.random.fold_in(leaf_key, _shard_seed_index(ctx, m.sync))
-        g_clip = jnp.clip(g.astype(jnp.float32), -mech.clip, mech.clip)
-        z = mech.encode(g_clip, leaf_key)
+        z = mech.quantize(g, leaf_key)  # shared clip->encode dispatch
         if mech.name == "none":
             agg = ctx.psum_clients(z)
         elif packed:
@@ -232,8 +231,7 @@ def build_zero1_train_step_fn(cfg: ModelConfig, mech: Mechanism, lr_fn,
             mast = jnp.squeeze(mast, 0)
             leaf_key = jax.random.fold_in(key, i)
             leaf_key = jax.random.fold_in(leaf_key, _shard_seed_index(ctx, m.sync))
-            g_clip = jnp.clip(g.astype(jnp.float32), -mech.clip, mech.clip)
-            z = mech.encode(g_clip, leaf_key).reshape(-1)
+            z = mech.quantize(g, leaf_key).reshape(-1)
             pad = mast.size * n - z.size
             z = jnp.pad(z, (0, pad))
             if mech.name != "none" and agg_dtype == "int16":

@@ -7,6 +7,23 @@ mechanism (RQM levels / PBM binomial draws / raw floats for noise-free);
 SecAgg sums the integer messages (modular-sum emulation); the server
 decodes g_hat and takes the SGD step. The Renyi accountant composes the
 per-round aggregate-level epsilon across rounds.
+
+Three round engines (FedConfig.engine), same Algorithm-1 semantics:
+
+  * ``"scan"`` (default) — the device-resident engine. All client datasets
+    are staged on device ONCE at construction; client sampling is
+    ``jax.random.choice`` on device; a whole block of rounds runs inside a
+    single jitted ``jax.lax.scan`` (unrolled on CPU, see FedConfig) with
+    the flat parameter buffer donated. Zero host<->device transfers and
+    zero dispatch per round.
+  * ``"perround"`` — the identical device-resident round step, driven one
+    jitted call per round from Python. Exists to prove the scan engine
+    correct: both trace the same ``round_step``, so a fixed seed yields
+    bit-identical parameters (asserted in tests/test_fed_engine.py).
+  * ``"host"`` — the legacy loop: numpy client sampling, per-round host
+    stacking of client data, per-client vmap encode. Kept as the baseline
+    the rounds/sec benchmark (benchmarks/fig3_fl_emnist.py) measures the
+    scan engine against.
 """
 from __future__ import annotations
 
@@ -23,6 +40,8 @@ from repro.core.mechanisms import Mechanism
 from repro.core.renyi import RenyiAccountant, pbm_aggregate_epsilon, rqm_aggregate_epsilon
 from repro.data.federated import FederatedPartition, sample_clients
 from repro.fed.cnn import cnn_accuracy, cnn_init, cnn_loss
+
+ENGINES = ("scan", "perround", "host")
 
 
 @dataclasses.dataclass
@@ -44,10 +63,24 @@ class FedConfig:
     # quantity is still one [-c,c]^f vector per client per round).
     local_steps: int = 1
     local_lr: float = 0.1
+    engine: str = "scan"  # "scan" | "perround" | "host" (see module docstring)
+    # scan engine tuning. Blocks are executed in chunks of at most
+    # scan_block rounds (bounds compile time of unrolled blocks; each
+    # distinct chunk length compiles once). scan_unroll=None auto-selects:
+    # full unroll on CPU (XLA:CPU runs while-loop bodies single-threaded,
+    # so an un-unrolled scan would serialize the per-client gradient work),
+    # no unroll on TPU/GPU (the while loop is free there and unrolling
+    # only bloats compile time and program size).
+    scan_block: int = 64
+    scan_unroll: Optional[int] = None
 
 
 class FedTrainer:
     def __init__(self, mech: Mechanism, fed_cfg: FedConfig):
+        if fed_cfg.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {fed_cfg.engine!r}; expected one of {ENGINES}"
+            )
         self.mech = mech
         self.cfg = fed_cfg
         self.partition = FederatedPartition(
@@ -60,22 +93,43 @@ class FedTrainer:
         key = jax.random.key(fed_cfg.seed)
         self.params = cnn_init(key)
         self.flat, self.unravel = jax.flatten_util.ravel_pytree(self.params)
-        self.eval_images, self.eval_labels = self.partition.gen.make_split(
+        ev_im, ev_lb = self.partition.gen.make_split(
             seed=10_000 + fed_cfg.seed, size=fed_cfg.eval_size
         )
-        self._rng = np.random.default_rng(fed_cfg.seed + 7)
+        self.eval_images = jnp.asarray(ev_im)
+        self.eval_labels = jnp.asarray(ev_lb)
+        self._rng = np.random.default_rng(fed_cfg.seed + 7)  # host engine only
         self._key = jax.random.key(fed_cfg.seed + 11)
         self.accountant = RenyiAccountant(alphas=fed_cfg.accountant_alphas)
         self._per_round_eps: Optional[np.ndarray] = None
+        if fed_cfg.engine != "host":
+            self._stage_clients()
         self._build_jits()
+
+    # -- device staging -----------------------------------------------------
+    def _stage_clients(self):
+        """Materialize every client's dataset on device ONCE.
+
+        (N, s, 28, 28) images + (N, s) labels. At the paper's scale
+        (N=3400, s=20) this is ~210 MB — one transfer for the whole run,
+        vs the host engine's per-round stack-and-ship of the sampled
+        clients (which re-reads clients across rounds)."""
+        imgs, lbls = [], []
+        for i in range(self.cfg.num_clients):
+            im, lb = self.partition.client_data(i)
+            imgs.append(im)
+            lbls.append(lb)
+        self.client_images = jnp.asarray(np.stack(imgs))
+        self.client_labels = jnp.asarray(np.stack(lbls))
 
     # -- jitted inner pieces ------------------------------------------------
     def _build_jits(self):
         mech = self.mech
         unravel = self.unravel
+        cfg = self.cfg
 
-        local_steps = self.cfg.local_steps
-        local_lr = self.cfg.local_lr
+        local_steps = cfg.local_steps
+        local_lr = cfg.local_lr
 
         def client_grad(flat_params, images, labels):
             if local_steps <= 1:
@@ -100,6 +154,7 @@ class FedTrainer:
         def encode(gflat, key):
             return mech.encode(gflat, key)
 
+        # host engine pieces (legacy loop) + shared eval
         self._client_grads = jax.jit(jax.vmap(client_grad, in_axes=(None, 0, 0)))
         self._encode = jax.jit(jax.vmap(encode, in_axes=(0, 0)))
         self._decode = jax.jit(lambda zsum, n: mech.decode_sum(zsum, n))
@@ -108,6 +163,59 @@ class FedTrainer:
         )
         self._eval_loss = jax.jit(
             lambda flat, im, lb: cnn_loss(unravel(flat), im, lb)
+        )
+
+        if cfg.engine == "host":
+            return
+
+        # Device-resident round step, shared verbatim by "perround" and
+        # "scan". The trailing optimization_barrier pins the round boundary:
+        # XLA cannot fuse one round's float math into the next, so the body
+        # compiles to the same numerics whether it stands alone (perround)
+        # or is repeated inside an unrolled scan block — the bit-for-bit
+        # parity the engine test asserts on CPU. (Without it, cross-round
+        # fusion and while-loop single-threading on XLA:CPU shift gradients
+        # by ~1 ULP, which RQM's randomized rounding then amplifies.)
+        def round_step(flat, key, images, labels):
+            key, k_sample, k_enc = jax.random.split(key, 3)
+            ids = jax.random.choice(
+                k_sample, cfg.num_clients, (cfg.clients_per_round,),
+                replace=False,
+            )
+            grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
+                flat, images[ids], labels[ids]
+            )
+            # Shared clip->encode dispatch (clip is idempotent on the
+            # already-clipped grads): one fused kernel call over the whole
+            # (clients, dim) stack when the mechanism is kernel-backed.
+            z = mech.quantize_batch(grads, k_enc)
+            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
+            g_hat = mech.decode_sum(z_sum, cfg.clients_per_round)
+            return jax.lax.optimization_barrier(flat - cfg.lr * g_hat), key
+
+        self._round_jit = jax.jit(round_step)
+
+        def block_fn(flat, key, images, labels, length):
+            unroll = cfg.scan_unroll
+            if unroll is None:
+                # Full unroll ONLY on CPU, where XLA runs while-loop bodies
+                # single-threaded; TPU/GPU while loops lose nothing and
+                # unrolling would just bloat compile time and program size.
+                unroll = length if jax.default_backend() == "cpu" else 1
+
+            def body(carry, _):
+                f, k = carry
+                f, k = round_step(f, k, images, labels)
+                return (f, k), None
+
+            (flat, key), _ = jax.lax.scan(
+                body, (flat, key), None, length=length,
+                unroll=min(unroll, length),
+            )
+            return flat, key
+
+        self._run_block_jit = jax.jit(
+            block_fn, static_argnums=(4,), donate_argnums=(0,)
         )
 
     # -- privacy accounting -------------------------------------------------
@@ -127,21 +235,51 @@ class FedTrainer:
                 eps.append(0.0)
         self._per_round_eps = np.asarray(eps)
 
+    def _account(self, rounds: int):
+        if self._per_round_eps is not None:
+            for _ in range(rounds):
+                self.accountant.step(self._per_round_eps)
+
     # -- the loop -----------------------------------------------------------
     def round(self, t: int):
+        """Advance one round (perround/host engines; scan uses run_block)."""
         cfg = self.cfg
-        ids = sample_clients(self._rng, cfg.num_clients, cfg.clients_per_round)
-        images = np.stack([self.partition.client_data(i)[0] for i in ids])
-        labels = np.stack([self.partition.client_data(i)[1] for i in ids])
-        grads = self._client_grads(self.flat, jnp.asarray(images), jnp.asarray(labels))
-        self._key, sub = jax.random.split(self._key)
-        keys = jax.random.split(sub, cfg.clients_per_round)
-        z = self._encode(grads, keys)  # (n, dim) int32 (or float for 'none')
-        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
-        g_hat = self._decode(z_sum, cfg.clients_per_round)
-        self.flat = self.flat - cfg.lr * g_hat
-        if self._per_round_eps is not None:
-            self.accountant.step(self._per_round_eps)
+        if cfg.engine == "host":
+            ids = sample_clients(self._rng, cfg.num_clients, cfg.clients_per_round)
+            images = np.stack([self.partition.client_data(i)[0] for i in ids])
+            labels = np.stack([self.partition.client_data(i)[1] for i in ids])
+            grads = self._client_grads(self.flat, jnp.asarray(images), jnp.asarray(labels))
+            self._key, sub = jax.random.split(self._key)
+            keys = jax.random.split(sub, cfg.clients_per_round)
+            z = self._encode(grads, keys)  # (n, dim) int32 (or float for 'none')
+            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
+            g_hat = self._decode(z_sum, cfg.clients_per_round)
+            self.flat = self.flat - cfg.lr * g_hat
+        else:
+            self.flat, self._key = self._round_jit(
+                self.flat, self._key, self.client_images, self.client_labels
+            )
+        self._account(1)
+
+    def run_block(self, rounds: int):
+        """Advance ``rounds`` rounds inside jitted scan blocks (scan engine).
+
+        The flat parameter buffer is donated to each call, so blocks update
+        parameters in place with no per-round dispatch. Blocks longer than
+        cfg.scan_block are split into chunks (compile-time bound; each
+        distinct chunk length compiles once and is then reused)."""
+        if self.cfg.engine != "scan":
+            raise ValueError(f"run_block requires engine='scan', "
+                             f"got {self.cfg.engine!r}")
+        done = 0
+        while done < rounds:
+            step = min(self.cfg.scan_block, rounds - done)
+            self.flat, self._key = self._run_block_jit(
+                self.flat, self._key, self.client_images, self.client_labels,
+                step,
+            )
+            done += step
+        self._account(rounds)
 
     def evaluate(self):
         acc = float(self._eval(self.flat, self.eval_images, self.eval_labels))
@@ -152,12 +290,24 @@ class FedTrainer:
         rounds = rounds or self.cfg.rounds
         history = []
         t0 = time.time()
-        for t in range(rounds):
-            self.round(t)
-            if (t + 1) % eval_every == 0 or t == rounds - 1:
-                m = self.evaluate()
-                m.update(round=t + 1, seconds=round(time.time() - t0, 1))
-                history.append(m)
-                log(f"[{self.mech.name}] round {t+1:4d} "
-                    f"loss={m['loss']:.4f} acc={m['accuracy']:.4f}")
+
+        def record(done):
+            m = self.evaluate()
+            m.update(round=done, seconds=round(time.time() - t0, 1))
+            history.append(m)
+            log(f"[{self.mech.name}] round {done:4d} "
+                f"loss={m['loss']:.4f} acc={m['accuracy']:.4f}")
+
+        if self.cfg.engine == "scan":
+            done = 0
+            while done < rounds:
+                block = min(eval_every, rounds - done)
+                self.run_block(block)
+                done += block
+                record(done)
+        else:
+            for t in range(rounds):
+                self.round(t)
+                if (t + 1) % eval_every == 0 or t == rounds - 1:
+                    record(t + 1)
         return history

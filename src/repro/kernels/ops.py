@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
 from repro.kernels import pbm_kernel, rqm_kernel
-from repro.kernels.rqm_kernel import LANE
+from repro.kernels.rqm_kernel import LANE, pick_block_rows
 
 
 def _interpret_default() -> bool:
@@ -49,13 +49,18 @@ def rqm(
     key: jax.Array,
     params: RQMParams,
     *,
-    block_rows: int = rqm_kernel.DEFAULT_BLOCK_ROWS,
+    block_rows: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """RQM-quantize an arbitrary-shape array via the Pallas kernel."""
+    """RQM-quantize an arbitrary-shape array via the Pallas kernel.
+
+    block_rows=None auto-sizes the block to the input (pick_block_rows);
+    an explicit value is honored as given."""
     if interpret is None:
         interpret = _interpret_default()
     seed = key_to_seed(key)
+    if block_rows is None:
+        block_rows = pick_block_rows(x.size)
     z = _rqm_flat(x.reshape(-1), seed, params, block_rows, interpret)
     return z.reshape(x.shape)
 
@@ -74,12 +79,14 @@ def pbm(
     key: jax.Array,
     params: PBMParams,
     *,
-    block_rows: int = pbm_kernel.DEFAULT_BLOCK_ROWS,
+    block_rows: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     if interpret is None:
         interpret = _interpret_default()
     seed = key_to_seed(key)
+    if block_rows is None:
+        block_rows = pick_block_rows(x.size)
     z = _pbm_flat(x.reshape(-1), seed, params, block_rows, interpret)
     return z.reshape(x.shape)
 
@@ -121,6 +128,27 @@ def pbm_fast(x: jnp.ndarray, key: jax.Array, params: PBMParams) -> jnp.ndarray:
         return pbm(x, key, params)
     seed = key_to_seed(key)
     return _pbm_flat_jnp(x.reshape(-1), seed, params).reshape(x.shape)
+
+
+def rqm_batch(x: jnp.ndarray, key: jax.Array, params: RQMParams) -> jnp.ndarray:
+    """Kernel-backed RQM encode for a stacked ``(clients, dim)`` batch.
+
+    ONE fused invocation over the whole batch (Pallas on TPU, fused jnp
+    elsewhere): the counter-based RNG indexes the flattened batch, so each
+    client row draws independent randomness from the single seed, and the
+    output is bit-identical to ``ref.rqm_ref`` on ``x.reshape(-1)`` — the
+    batched shape inherits the kernel<->Algorithm-2 parity contract.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"rqm_batch expects (clients, dim), got {x.shape}")
+    return rqm_fast(x, key, params)
+
+
+def pbm_batch(x: jnp.ndarray, key: jax.Array, params: PBMParams) -> jnp.ndarray:
+    """Kernel-backed PBM encode for a stacked ``(clients, dim)`` batch."""
+    if x.ndim != 2:
+        raise ValueError(f"pbm_batch expects (clients, dim), got {x.shape}")
+    return pbm_fast(x, key, params)
 
 
 def rqm_tree(tree, key: jax.Array, params: RQMParams, **kw):

@@ -34,7 +34,23 @@ from repro.core.grid import RQMParams
 from repro.kernels.prng import random_uniform
 
 LANE = 128
+SUBLANE = 8  # f32 sublane height: block_rows must stay a multiple of this
 DEFAULT_BLOCK_ROWS = 256  # (256, 128) f32 = 128 KiB per buffer in VMEM
+
+
+def pick_block_rows(n_elements: int, requested: int = DEFAULT_BLOCK_ROWS) -> int:
+    """Clamp the block height for a flat input of ``n_elements``.
+
+    The wrappers in ops.py pad a flat vector to whole (block_rows, LANE)
+    tiles; with the fixed default a tiny leaf (a bias vector in the
+    distributed step) would pad to a full 32K-element tile — 500x wasted
+    work. Clamping to the input's own (sublane-aligned) row count keeps
+    padding below one sublane row without changing any output: the
+    counter-based RNG makes the kernel invariant to tiling.
+    """
+    rows_needed = -(-n_elements // LANE)
+    rows_needed = -(-rows_needed // SUBLANE) * SUBLANE
+    return max(SUBLANE, min(requested, rows_needed))
 
 
 def _rqm_block(x, seed, base_offset, params: RQMParams):

@@ -1,0 +1,135 @@
+"""The device-resident federated round engine (fed/loop.py).
+
+Correctness contract:
+  * scan engine == perround engine BIT-FOR-BIT after K rounds at a fixed
+    seed (both execute the same barrier-bounded round step, one inside an
+    unrolled scan block, one as a standalone jit);
+  * the batched (clients, dim) kernel encode == the Algorithm-2 reference
+    via the shared quantize_with_uniforms contract (kernels/ref.py);
+  * the legacy host loop still runs, and accounting composes per round
+    under every engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.grid import RQMParams
+from repro.core.mechanisms import make_mechanism, make_rqm_mechanism
+from repro.fed.loop import FedConfig, FedTrainer
+from repro.kernels import ops, ref
+
+SMALL = dict(num_clients=24, clients_per_round=6, rounds=5, lr=1.0,
+             eval_size=64, samples_per_client=8)
+
+
+def _trainer(engine, name="rqm", **overrides):
+    mech = make_mechanism(name, c=0.05)
+    return FedTrainer(mech, FedConfig(engine=engine, **{**SMALL, **overrides}))
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("name", ["rqm", "pbm", "none"])
+    def test_scan_matches_perround_bit_for_bit(self, name):
+        """The acceptance contract: 5 fixed-seed rounds, identical params."""
+        a = _trainer("perround", name)
+        b = _trainer("scan", name)
+        a.train(rounds=5, eval_every=5, log=lambda *_: None)
+        b.train(rounds=5, eval_every=5, log=lambda *_: None)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        # PRNG streams stay in lockstep too
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(a._key)),
+            np.asarray(jax.random.key_data(b._key)),
+        )
+
+    def test_scan_block_chunking_is_invariant(self):
+        """Chunked blocks (scan_block < rounds) compose bit-exactly."""
+        a = _trainer("scan")
+        b = _trainer("scan", scan_block=2)
+        a.train(rounds=5, eval_every=5, log=lambda *_: None)
+        b.train(rounds=5, eval_every=5, log=lambda *_: None)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+
+    def test_host_engine_still_trains(self):
+        tr = _trainer("host", rounds=3)
+        hist = tr.train(rounds=3, eval_every=3, log=lambda *_: None)
+        assert np.isfinite(hist[-1]["loss"])
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            _trainer("warp")
+
+
+class TestEngineAccounting:
+    def test_accountant_steps_per_round_under_scan(self):
+        tr = _trainer("scan", rounds=4)
+        tr.attach_params(RQMParams(c=0.05, delta=0.05, m=16, q=0.42))
+        tr.train(rounds=4, eval_every=2, log=lambda *_: None)
+        assert tr.accountant.rounds == 4
+        assert tr.accountant.rdp_epsilon(8.0) > 0
+
+    def test_scan_engine_learns(self):
+        tr = _trainer("scan", rounds=10, num_clients=40, clients_per_round=8)
+        before = tr.evaluate()["loss"]
+        hist = tr.train(rounds=10, eval_every=10, log=lambda *_: None)
+        assert hist[-1]["loss"] < before
+
+
+class TestBatchedKernelEncode:
+    PARAMS = RQMParams(c=1.0, delta=1.0, m=16, q=0.42)
+
+    def _batch(self, clients=7, dim=555, seed=0):
+        return jax.random.uniform(
+            jax.random.key(seed), (clients, dim), jnp.float32, -1, 1
+        )
+
+    def test_batched_kernel_matches_reference(self):
+        """One fused call over (clients, dim) == quantize_with_uniforms via
+        the kernel's own uniforms on the flattened batch (ref.rqm_ref)."""
+        x = self._batch()
+        key = jax.random.key(3)
+        z = ops.rqm_batch(x, key, self.PARAMS)
+        z_ref = ref.rqm_ref(
+            x.reshape(-1), ops.key_to_seed(key), self.PARAMS
+        ).reshape(x.shape)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(z_ref))
+
+    def test_batched_pallas_kernel_matches_fused(self):
+        """The Pallas kernel (interpret mode) agrees at the batched shape."""
+        x = self._batch(clients=5, dim=300, seed=2)
+        key = jax.random.key(9)
+        z_pallas = ops.rqm(x, key, self.PARAMS, interpret=True, block_rows=8)
+        z_fused = ops.rqm_batch(x, key, self.PARAMS)
+        np.testing.assert_array_equal(np.asarray(z_pallas), np.asarray(z_fused))
+
+    def test_mechanism_routes_batch_through_kernel(self):
+        x = self._batch(seed=4)
+        key = jax.random.key(5)
+        mech = make_rqm_mechanism(self.PARAMS, use_kernel=True)
+        assert mech.use_kernel
+        np.testing.assert_array_equal(
+            np.asarray(mech.encode_batch(x, key)),
+            np.asarray(ops.rqm_batch(x, key, self.PARAMS)),
+        )
+
+    def test_pure_jax_fallback_is_vmapped_reference(self):
+        """use_kernel=False derives encode_batch as vmap(quantize) over
+        per-client subkeys — the pure-JAX reference semantics."""
+        from repro.core import rqm as rqm_lib
+
+        x = self._batch(seed=6)
+        key = jax.random.key(7)
+        mech = make_rqm_mechanism(self.PARAMS, use_kernel=False)
+        assert not mech.use_kernel
+        keys = jax.random.split(key, x.shape[0])
+        z_ref = jax.vmap(
+            lambda xi, ki: rqm_lib.quantize(xi, ki, self.PARAMS)
+        )(x, keys)
+        np.testing.assert_array_equal(
+            np.asarray(mech.encode_batch(x, key)), np.asarray(z_ref)
+        )
+
+    def test_rejects_non_batched_shapes(self):
+        with pytest.raises(ValueError, match="clients, dim"):
+            ops.rqm_batch(jnp.zeros((10,)), jax.random.key(0), self.PARAMS)

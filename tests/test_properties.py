@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; "
+                    "run scripts/ci.sh to install test deps")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import rqm
 from repro.core.distribution import rqm_outcome_distribution
