@@ -1,5 +1,6 @@
 """Fig 3 reproduction (short-budget): federated DP-SGD on synthetic-EMNIST,
-RQM (three (delta,q) pairs) vs PBM vs noise-free clipped SGD.
+RQM (three (delta,q) pairs) vs PBM vs the QMGeo-style truncated-geometric
+quantizer vs noise-free clipped SGD.
 
 The paper's claim is a privacy-accuracy TRADEOFF: at the paper's
 hyperparameters the two mechanisms have near-equal estimator variance
@@ -9,6 +10,10 @@ accuracy and the exact per-round aggregate eps(alpha=8), and assert
   (a) noise-free accuracy >= mechanism accuracies,
   (b) RQM accuracy is within noise of PBM accuracy or better,
   (c) RQM eps < PBM eps  ==> strictly better tradeoff.
+
+Privacy is SELF-ACCOUNTED (Mechanism API v2): every eps below is queried
+from ``mech.per_round_epsilon`` on the very object that encoded, so the
+tradeoff cannot drift from the parameters that actually ran.
 """
 from __future__ import annotations
 
@@ -16,10 +21,7 @@ import time
 
 import jax
 
-from repro.core.grid import RQMParams
-from repro.core.mechanisms import make_mechanism, make_pbm_mechanism, make_rqm_mechanism
-from repro.core.pbm import PBMParams
-from repro.core.renyi import pbm_aggregate_epsilon, rqm_aggregate_epsilon
+from repro.core.mechanisms import make_mechanism
 from repro.fed.loop import FedConfig, FedTrainer
 
 C = 0.02  # clip scaled to the synthetic task's gradient magnitudes
@@ -29,10 +31,14 @@ ROUNDS = 120
 FED = dict(num_clients=300, clients_per_round=20, lr=1.0, eval_size=800,
            samples_per_client=20, data_noise=1.5, data_deform=1.2)
 
-RQM_VARIANTS = {
-    "rqm(d=c,q=.42)": RQMParams(c=C, delta=C, m=16, q=0.42),
-    "rqm(d=2c,q=.57)": RQMParams(c=C, delta=2 * C, m=16, q=0.57),
-    "rqm(d=.66c,q=.33)": RQMParams(c=C, delta=0.66 * C, m=16, q=0.33),
+# Spec strings: the uniform construction surface (launchers/examples/tests).
+SPECS = {
+    "noise-free": f"none:c={C}",
+    "rqm(d=c,q=.42)": f"rqm:c={C},m=16,q=0.42,delta_ratio=1.0",
+    "rqm(d=2c,q=.57)": f"rqm:c={C},m=16,q=0.57,delta_ratio=2.0",
+    "rqm(d=.66c,q=.33)": f"rqm:c={C},m=16,q=0.33,delta_ratio=0.66",
+    "pbm(th=.25)": f"pbm:c={C},m=16,theta=0.25",
+    "qmgeo(r=.6)": f"qmgeo:c={C},m=16,r=0.6",
 }
 
 
@@ -43,9 +49,9 @@ def engine_bench(csv=print, rounds=12):
     compiled/warmed before timing, so the numbers compare steady-state
     round throughput (the host path's per-round numpy stacking and
     dispatch vs the scan engine's single donated-buffer block call)."""
-    p = RQM_VARIANTS["rqm(d=c,q=.42)"]
+    spec = SPECS["rqm(d=c,q=.42)"]
 
-    host = FedTrainer(make_rqm_mechanism(p),
+    host = FedTrainer(make_mechanism(spec),
                       FedConfig(rounds=rounds, engine="host", **FED))
     host.round(0)  # warm the per-round jits
     jax.block_until_ready(host.flat)
@@ -55,7 +61,7 @@ def engine_bench(csv=print, rounds=12):
     jax.block_until_ready(host.flat)
     host_rps = rounds / (time.time() - t0)
 
-    scan = FedTrainer(make_rqm_mechanism(p),
+    scan = FedTrainer(make_mechanism(spec),
                       FedConfig(rounds=rounds, engine="scan", **FED))
     scan.run_block(rounds)  # compile + warm the block program
     jax.block_until_ready(scan.flat)
@@ -76,40 +82,37 @@ def engine_bench(csv=print, rounds=12):
 def run(csv=print, rounds=ROUNDS):
     results = {}
     t0 = time.time()
-    runs = [("noise-free", make_mechanism("none", c=C), None)]
-    for name, p in RQM_VARIANTS.items():
-        runs.append((name, make_rqm_mechanism(p), p))
-    pbm_p = PBMParams(c=C, m=16, theta=0.25)
-    runs.append(("pbm(th=.25)", make_pbm_mechanism(pbm_p), pbm_p))
+    n = FED["clients_per_round"]
 
-    for name, mech, p in runs:
+    for name, spec in SPECS.items():
+        mech = make_mechanism(spec)
         cfg = FedConfig(rounds=rounds, **FED)
         tr = FedTrainer(mech, cfg)
-        if p is not None:
-            tr.attach_params(p)
         hist = tr.train(rounds=rounds, eval_every=max(rounds // 2, 1),
                         log=lambda *_: None)
-        eps8 = (tr.accountant.rdp_epsilon(8.0)
-                if p is not None else float("inf") * 0)
         results[name] = {"acc": hist[-1]["accuracy"],
                          "loss": hist[-1]["loss"],
-                         "eps_alpha8_total": eps8 if p is not None else 0.0}
-    us = (time.time() - t0) * 1e6 / len(runs)
+                         "per_round_eps8": mech.per_round_epsilon(n, 8.0),
+                         "eps_alpha8_total": tr.accountant.rdp_epsilon(8.0)}
+    us = (time.time() - t0) * 1e6 / len(SPECS)
     for name, r in results.items():
         csv(f"fig3_fl[{name}],{us:.0f},"
             f"acc={r['acc']:.4f};loss={r['loss']:.4f};"
             f"eps8={r['eps_alpha8_total']:.2f}")
-    # the tradeoff claim
+    # the tradeoff claim — eps from the mechanisms that actually encoded
     nf = results["noise-free"]["acc"]
     rq = results["rqm(d=c,q=.42)"]
     pb = results["pbm(th=.25)"]
-    eps_r = rqm_aggregate_epsilon(RQM_VARIANTS["rqm(d=c,q=.42)"],
-                                  FED["clients_per_round"], 8.0)
-    eps_p = pbm_aggregate_epsilon(pbm_p, FED["clients_per_round"], 8.0)
+    eps_r = rq["per_round_eps8"]
+    eps_p = pb["per_round_eps8"]
     csv(f"fig3_claim,{us:.0f},"
         f"nf_acc={nf:.3f};rqm_acc={rq['acc']:.3f};pbm_acc={pb['acc']:.3f};"
         f"rqm_eps8={eps_r:.3f};pbm_eps8={eps_p:.3f};"
         f"tradeoff_ok={(rq['acc'] >= pb['acc'] - 0.02) and (eps_r < eps_p)}")
+    qm = results["qmgeo(r=.6)"]
+    csv(f"fig3_qmgeo,{us:.0f},"
+        f"acc={qm['acc']:.3f};eps8={qm['per_round_eps8']:.3f};"
+        f"trains={qm['acc'] > 0.1}")
     results["engine"] = engine_bench(csv)
     return results
 

@@ -1,40 +1,42 @@
 """END-TO-END DRIVER — the paper's experiment (Sec 6.2 / Fig 3): federated
-DP-SGD on (synthetic-)EMNIST with RQM, vs PBM and noise-free clipped SGD,
-with exact Renyi accounting across rounds.
+DP-SGD on (synthetic-)EMNIST with RQM, vs PBM, the QMGeo-style
+truncated-geometric quantizer, and noise-free clipped SGD, with exact
+Renyi accounting across rounds.
 
 A few hundred rounds on CPU:
 
   PYTHONPATH=src python examples/fl_emnist.py --rounds 300
   PYTHONPATH=src python examples/fl_emnist.py --rounds 300 --mechanism rqm \\
       --delta-ratio 0.66 --q 0.33       # the paper's best (Δ,q) pair
+  PYTHONPATH=src python examples/fl_emnist.py --rounds 300 \\
+      --mechanism "qmgeo:c=0.02,m=16,r=0.6"   # any registered spec string
+
+Privacy is SELF-ACCOUNTED: the mechanism object that encodes also answers
+``per_round_epsilon(n, alpha)``, so the reported accuracy-vs-epsilon
+tradeoff is computed from the exact parameters that produced the updates.
 """
 import argparse
 import json
 
-from repro.core.grid import RQMParams
-from repro.core.pbm import PBMParams
-from repro.core.mechanisms import make_mechanism
+from repro.core.mechanisms import make_mechanism, mechanism_names
 from repro.fed.loop import FedConfig, FedTrainer
 
 
-def run_one(name, fcfg, c, m, q, delta_ratio, theta):
-    """One mechanism end-to-end: train with the configured round engine,
-    then report the composed Renyi accounting."""
-    mech = make_mechanism(name, c=c, m=m, q=q, delta_ratio=delta_ratio,
-                          theta=theta)
+def run_one(spec, fcfg, **defaults):
+    """One mechanism end-to-end: build from the spec, train with the
+    configured round engine, report the mechanism's own accounting."""
+    mech = make_mechanism(spec, **defaults)
     tr = FedTrainer(mech, fcfg)
-    if name == "rqm":
-        tr.attach_params(RQMParams(c=c, delta=delta_ratio * c, m=m, q=q))
-    elif name == "pbm":
-        tr.attach_params(PBMParams(c=c, m=m, theta=theta))
     hist = tr.train(eval_every=25)
-    out = {"mechanism": name, "history": hist}
-    if name != "none":
+    out = {"mechanism": mech.name, "spec": mech.describe(), "history": hist}
+    per_round = mech.per_round_epsilon(fcfg.clients_per_round, 8.0)
+    if per_round > 0:
+        out["per_round_eps_alpha8"] = per_round
         out["rdp_eps_alpha8"] = tr.accountant.rdp_epsilon(8.0)
         eps, alpha = tr.accountant.dp_epsilon(1e-5)
         out["dp_eps_at_1e-5"] = eps
         out["dp_alpha"] = alpha
-        print(f"[{name}] total RDP eps(alpha=8) = {out['rdp_eps_alpha8']:.3f}; "
+        print(f"[{mech.name}] total RDP eps(alpha=8) = {out['rdp_eps_alpha8']:.3f}; "
               f"(eps, delta=1e-5)-DP eps = {eps:.3f} via alpha={alpha}")
     return out
 
@@ -50,8 +52,12 @@ def main():
     ap.add_argument("--q", type=float, default=0.42)
     ap.add_argument("--delta-ratio", type=float, default=1.0)
     ap.add_argument("--theta", type=float, default=0.25)
+    ap.add_argument("--r", type=float, default=0.6)
     ap.add_argument("--mechanism", default="all",
-                    choices=["all", "rqm", "pbm", "none"])
+                    help="'all', a registered name "
+                         f"({', '.join(mechanism_names())}), or a "
+                         "'name:k=v,...' spec string; the flags above act "
+                         "as defaults for whatever the spec leaves unset")
     ap.add_argument("--engine", default="scan",
                     choices=["scan", "perround", "host"],
                     help="round engine: 'scan' = device-resident jitted "
@@ -66,12 +72,11 @@ def main():
         data_noise=1.5, data_deform=1.2,  # see benchmarks/fig3_fl_emnist.py
         engine=args.engine,
     )
-    names = ["none", "rqm", "pbm"] if args.mechanism == "all" else [args.mechanism]
-    results = [
-        run_one(n, fcfg, args.clip, args.m, args.q, args.delta_ratio,
-                args.theta)
-        for n in names
-    ]
+    specs = (["none", "rqm", "pbm", "qmgeo"] if args.mechanism == "all"
+             else [args.mechanism])
+    defaults = dict(c=args.clip, m=args.m, q=args.q,
+                    delta_ratio=args.delta_ratio, theta=args.theta, r=args.r)
+    results = [run_one(s, fcfg, **defaults) for s in specs]
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2)

@@ -44,3 +44,17 @@ for alpha in (2.0, 32.0):
     e_pbm = pbm_aggregate_epsilon(PBMParams(c=1.0, m=16, theta=0.25), 40, alpha)
     print(f"alpha={alpha:4.0f}, n=40: eps RQM={e_rqm:.3f} < PBM={e_pbm:.3f} "
           f"({e_pbm/e_rqm:.1f}x better)")
+
+# --- 5. Mechanism API v2: registry-backed, self-accounting ------------------
+# One spec string builds any registered mechanism; the object carries its
+# params and answers its own exact Renyi accounting (no attach_params).
+from repro.core.mechanisms import make_mechanism, mechanism_names
+
+print(f"registered mechanisms: {', '.join(mechanism_names())}")
+for spec in ("rqm:c=1.0,m=16,q=0.42", "pbm:c=1.0,theta=0.25",
+             "qmgeo:c=1.0,m=16,r=0.6"):
+    mech = make_mechanism(spec)
+    z = mech.quantize(grad[:4096], jax.random.key(6))
+    print(f"  {mech.describe():45s} -> per-round eps(alpha=8, n=40) = "
+          f"{mech.per_round_epsilon(40, 8.0):.3f}, "
+          f"{mech.bits:.0f} bits/coord")

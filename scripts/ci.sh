@@ -9,4 +9,17 @@ cd "$(dirname "$0")/.."
 python -m pip install --quiet hypothesis pytest 2>/dev/null \
     || echo "warning: pip install failed (offline?); continuing without"
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+set +e
+python -m pytest -x -q "$@"
+rc=$?
+set -e
+
+# pytest exit 2 = collection/usage errors (broken imports, syntax errors):
+# call it out loudly so a red run is never mistaken for a flaky test.
+if [ "$rc" -eq 2 ]; then
+    echo "FATAL: pytest collection/usage error (exit 2) — broken imports" \
+         "or syntax, not a test failure." >&2
+fi
+exit "$rc"

@@ -1,21 +1,39 @@
 """Core library: the paper's contribution (RQM) + baselines + accounting."""
 from repro.core.grid import RQMParams, decode_sum, encode_value
 from repro.core.pbm import PBMParams
+from repro.core.qmgeo import QMGeoParams
 from repro.core.mechanisms import (
     Mechanism,
+    NoiseFreeMechanism,
+    PBMMechanism,
+    QMGeoMechanism,
+    RQMMechanism,
     make_mechanism,
     make_noise_free_mechanism,
     make_pbm_mechanism,
+    make_qmgeo_mechanism,
     make_rqm_mechanism,
+    mechanism_names,
+    parse_mechanism_spec,
+    register_mechanism,
 )
 
 __all__ = [
     "RQMParams",
     "PBMParams",
+    "QMGeoParams",
     "Mechanism",
+    "RQMMechanism",
+    "PBMMechanism",
+    "QMGeoMechanism",
+    "NoiseFreeMechanism",
+    "register_mechanism",
+    "mechanism_names",
+    "parse_mechanism_spec",
     "make_mechanism",
     "make_rqm_mechanism",
     "make_pbm_mechanism",
+    "make_qmgeo_mechanism",
     "make_noise_free_mechanism",
     "decode_sum",
     "encode_value",

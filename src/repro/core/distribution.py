@@ -8,6 +8,10 @@ statistical validation of both the pure-JAX mechanism and the Pallas kernel.
 ``pbm_outcome_distribution`` gives the Binomial(m, p) pmf of the Poisson
 Binomial Mechanism baseline (Chen et al., 2022).
 
+``qmgeo_outcome_distribution`` gives the exact pmf of the QMGeo-style
+truncated-geometric quantizer (core.qmgeo): stochastic rounding mixed with
+a normalized two-sided geometric kernel over the m levels.
+
 ``aggregate_distribution`` convolves per-device pmfs into the pmf of the
 SecAgg sum — what the weaker aggregate-level adversary observes.
 
@@ -22,6 +26,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.grid import RQMParams
+from repro.core.qmgeo import QMGeoParams
 
 
 def rqm_outcome_distribution(x: float, params: RQMParams) -> np.ndarray:
@@ -75,6 +80,33 @@ def rqm_outcome_distribution(x: float, params: RQMParams) -> np.ndarray:
         )
         p[i] = pref * up(i)
     return p
+
+
+def qmgeo_outcome_distribution(x: float, params: QMGeoParams) -> np.ndarray:
+    """Pr(Q(x) = k) for k = 0..m-1 of the truncated-geometric quantizer.
+
+    x rounds stochastically to j in {lo, lo+1} (up with prob
+    (x - B(lo))/step), then z | j follows the normalized truncated
+    geometric r^{|k-j|} / Z_j. The pmf is the two-term mixture:
+
+        P(k) = (1-p_up) g_lo(k) + p_up g_{lo+1}(k),
+        g_j(k) = r^{|k-j|} / sum_k' r^{|k'-j|}.
+
+    Every outcome has mass >= r^{m-1}/Z > 0, so all Renyi orders are finite.
+    """
+    m, r = params.m, params.r
+    B = params.levels()
+    if not (-params.c - 1e-12 <= x <= params.c + 1e-12):
+        raise ValueError(f"x={x} outside [-c, c] with c={params.c}")
+    x = float(np.clip(x, -params.c, params.c))
+    lo = int(np.clip(np.floor((x - B[0]) / params.step), 0, m - 2))
+    p_up = (x - B[lo]) / params.step
+    k = np.arange(m, dtype=np.float64)
+    out = np.zeros(m, dtype=np.float64)
+    for j, pj in ((lo, 1.0 - p_up), (lo + 1, p_up)):
+        g = r ** np.abs(k - j)
+        out += pj * g / g.sum()
+    return out
 
 
 def _log_binom_coeff(n: int, k: np.ndarray) -> np.ndarray:

@@ -17,8 +17,41 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class GridGeometry:
+    """The shared m-level grid over [-(c+delta), c+delta].
+
+    Mixed into every params dataclass that quantizes on this grid (RQM
+    here, the truncated-geometric QMGeoParams in core.qmgeo): one source
+    of truth for level placement, step size, and the wire size — so the
+    affine ``decode_sum`` below works unchanged for every grid mechanism.
+    Inheriting dataclasses provide the ``c``, ``delta``, ``m`` fields.
+    """
+
+    @property
+    def x_max(self) -> float:
+        return self.c + self.delta
+
+    @property
+    def step(self) -> float:
+        return 2.0 * self.x_max / (self.m - 1)
+
+    @property
+    def bits_per_coordinate(self) -> float:
+        """Client->aggregator message size per gradient coordinate."""
+        return float(np.log2(self.m))
+
+    def levels(self) -> np.ndarray:
+        """B(0..m-1) as a numpy array (host-side)."""
+        i = np.arange(self.m, dtype=np.float64)
+        return -self.x_max + 2.0 * i * self.x_max / (self.m - 1)
+
+    def levels_jnp(self, dtype=jnp.float32) -> jnp.ndarray:
+        i = jnp.arange(self.m, dtype=dtype)
+        return (-self.x_max + 2.0 * i * self.x_max / (self.m - 1)).astype(dtype)
+
+
 @dataclasses.dataclass(frozen=True)
-class RQMParams:
+class RQMParams(GridGeometry):
     """Hyperparameters of the Randomized Quantization Mechanism.
 
     Attributes:
@@ -46,28 +79,6 @@ class RQMParams:
         if not 0.0 < self.q < 1.0:
             raise ValueError(f"q must be in (0,1), got {self.q}")
 
-    @property
-    def x_max(self) -> float:
-        return self.c + self.delta
-
-    @property
-    def step(self) -> float:
-        return 2.0 * self.x_max / (self.m - 1)
-
-    @property
-    def bits_per_coordinate(self) -> float:
-        """Client->aggregator message size per gradient coordinate."""
-        return float(np.log2(self.m))
-
-    def levels(self) -> np.ndarray:
-        """B(0..m-1) as a numpy array (host-side)."""
-        i = np.arange(self.m, dtype=np.float64)
-        return -self.x_max + 2.0 * i * self.x_max / (self.m - 1)
-
-    def levels_jnp(self, dtype=jnp.float32) -> jnp.ndarray:
-        i = jnp.arange(self.m, dtype=dtype)
-        return (-self.x_max + 2.0 * i * self.x_max / (self.m - 1)).astype(dtype)
-
     def epsilon_infinity(self) -> float:
         """Theorem 5.2 closed-form upper bound on D_inf (= (eps,0)-DP eps).
 
@@ -79,7 +90,7 @@ class RQMParams:
         )
 
 
-def bin_index(x: jnp.ndarray, params: RQMParams) -> jnp.ndarray:
+def bin_index(x: jnp.ndarray, params: GridGeometry) -> jnp.ndarray:
     """j such that x in [B(j), B(j+1)), clipped to [0, m-2].
 
     Inputs are expected in [-c, c] subset of (B(0), B(m-1)); clipping guards
@@ -89,18 +100,19 @@ def bin_index(x: jnp.ndarray, params: RQMParams) -> jnp.ndarray:
     return jnp.clip(j, 0, params.m - 2).astype(jnp.int32)
 
 
-def decode_sum(z_sum: jnp.ndarray, n: int, params: RQMParams) -> jnp.ndarray:
+def decode_sum(z_sum: jnp.ndarray, n: int, params: GridGeometry) -> jnp.ndarray:
     """Server decode of the SecAgg sum of n devices' levels (Algorithm 1 l.10):
 
         g_hat = -(c+delta) + 2 * z_sum * (c+delta) / (n * (m-1))
 
     Unbiased for mean(x_i) because each device's randomized rounding on the
-    sub-sampled grid is an unbiased estimator of its x_i.
+    sub-sampled grid is an unbiased estimator of its x_i. Shared by every
+    GridGeometry mechanism (RQM, QMGeo).
     """
     scale = 2.0 * params.x_max / (n * (params.m - 1))
     return -params.x_max + z_sum.astype(jnp.float32) * scale
 
 
-def encode_value(z: jnp.ndarray, params: RQMParams) -> jnp.ndarray:
+def encode_value(z: jnp.ndarray, params: GridGeometry) -> jnp.ndarray:
     """Map a level index back to its grid value B(z) (single device)."""
     return -params.x_max + z.astype(jnp.float32) * params.step

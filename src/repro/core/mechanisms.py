@@ -1,70 +1,139 @@
-"""Mechanism registry: a uniform interface over {rqm, pbm, none} so the
-federated runtime and the distributed train step are mechanism-agnostic.
+"""Mechanism API v2: registry-backed, self-accounting private quantizers.
 
-Each mechanism maps a clipped per-client gradient leaf -> integer message,
-and decodes the cross-client SUM of messages -> aggregated gradient estimate.
-This is exactly the Algorithm-1 contract (encode on device, SecAgg-sum,
-decode on server).
+Each mechanism is a frozen dataclass that CARRIES its parameter object and
+answers every question the runtime has about itself:
 
-Two encode entry points:
+  * ``encode(x, key)`` / ``encode_batch(x, key)`` — clipped gradient leaf
+    (or stacked ``(clients, dim)`` batch) -> integer message. Kernel-backed
+    mechanisms route through the fused Pallas/jnp path (``use_kernel``);
+    otherwise ``encode_batch`` falls back to a vmap of ``encode`` over
+    per-client subkeys.
+  * ``decode_sum(z_sum, n)`` — SecAgg sum of n messages -> aggregated
+    gradient estimate (the Algorithm-1 server decode).
+  * ``sum_bound(n)`` / ``bits`` / ``clip`` — aggregation lane width,
+    per-coordinate message size, and clipping threshold.
+  * ``per_round_epsilon(n, alpha)`` — the exact aggregate-level Renyi-DP
+    epsilon of ONE round with n participating clients, computed from the
+    very parameters that encode. The fed engine and the mesh step query
+    accounting from the mechanism itself; there is no second parameter
+    hand-off (the old ``FedTrainer.attach_params``) to drift out of sync.
 
-  * ``encode(x, key)``       — one client's vector (any shape).
-  * ``encode_batch(x, key)`` — a stacked ``(clients, dim)`` batch, the shape
-    the federated round engine produces. When ``use_kernel`` is set the
-    batch is quantized in ONE fused kernel invocation (Pallas on TPU, the
-    kernel's exact math as fused jnp elsewhere): the counter-based RNG
-    spans the flattened batch, so every client draws independent randomness
-    from a single per-round seed, and the output is bit-identical to the
-    ``quantize_with_uniforms`` reference on the flattened input
-    (see kernels/ref.py). Without the kernel it falls back to a vmap of
-    ``encode`` over per-client subkeys.
+Construction is data-driven. A mechanism class registers itself once:
+
+    @register_mechanism("rqm")
+    @dataclasses.dataclass(frozen=True)
+    class RQMMechanism(Mechanism): ...
+
+and ``make_mechanism`` builds any registered mechanism from a name, a
+CLI-style spec string, or a dict — uniformly across launchers, examples,
+and benchmarks:
+
+    make_mechanism("rqm", c=0.02)                    # name + options
+    make_mechanism("rqm:c=0.05,m=16,q=0.42")         # spec string
+    make_mechanism({"name": "pbm", "c": 0.02, "theta": 0.25})
+    make_mechanism("qmgeo:c=0.05,m=16,r=0.6")        # registered extension
+
+Keyword options passed to ``make_mechanism`` are DEFAULTS (unknown ones are
+ignored, so one CLI surface can serve every mechanism); options inline in
+the spec/dict are EXPLICIT (unknown ones raise). Adding a new mechanism is
+one registered class — no if-chains, no edits to fed/loop.py or
+distributed/step.py (see docs/mechanisms.md for the worked example).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import inspect
+from typing import Callable, ClassVar, Dict, Type, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import pbm as pbm_lib
+from repro.core import qmgeo as qmgeo_lib
 from repro.core import rqm as rqm_lib
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
+from repro.core.qmgeo import QMGeoParams
+
+MechanismSpec = Union[str, dict, "Mechanism"]
+
+_REGISTRY: Dict[str, Type["Mechanism"]] = {}
 
 
-@dataclasses.dataclass(frozen=True)
+def register_mechanism(name: str) -> Callable[[type], type]:
+    """Class decorator: register a Mechanism subclass under ``name``."""
+
+    def deco(cls: type) -> type:
+        if not (isinstance(cls, type) and issubclass(cls, Mechanism)):
+            raise TypeError(f"{cls!r} must subclass Mechanism")
+        existing = _REGISTRY.get(name)
+        if existing is not None and existing is not cls:
+            raise ValueError(f"mechanism {name!r} already registered to {existing}")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def mechanism_names() -> tuple[str, ...]:
+    """Registered mechanism names (stable registration order)."""
+    return tuple(_REGISTRY)
+
+
 class Mechanism:
-    """encode: (x, key) -> int32 levels; decode_sum: (z_sum, n) -> float grad.
+    """Base interface + shared clip->encode dispatch.
 
-    ``sum_bound(n)`` bounds the aggregated message value — used to pick the
-    aggregation lane width. ``bits`` is the per-coordinate client message
-    size (communication accounting). ``encode_batch`` handles a stacked
-    ``(clients, dim)`` input; if not provided it is derived as a vmap of
-    ``encode`` over split keys. ``use_kernel`` records whether encoding is
-    routed through the fused Pallas/jnp kernel path.
+    Subclasses are frozen dataclasses carrying their parameter object and
+    must implement ``encode``, ``decode_sum``, ``sum_bound``,
+    ``per_round_epsilon`` and the ``bits``/``clip`` properties, plus a
+    ``from_options`` classmethod that builds the class from flat CLI-style
+    options (its signature defines the options the spec parser accepts).
     """
 
-    name: str
-    encode: Callable[[jnp.ndarray, jax.Array], jnp.ndarray]
-    decode_sum: Callable[[jnp.ndarray, int], jnp.ndarray]
-    sum_bound: Callable[[int], int]
-    bits: float
-    clip: float
-    encode_batch: Optional[Callable[[jnp.ndarray, jax.Array], jnp.ndarray]] = None
+    name: ClassVar[str] = "?"
     use_kernel: bool = False
 
-    def __post_init__(self):
-        if self.encode_batch is None:
-            enc = self.encode
+    # -- interface (overridden by subclasses) -------------------------------
+    def encode(self, x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        raise NotImplementedError
 
-            def vmapped(x, key):
-                keys = jax.random.split(key, x.shape[0])
-                return jax.vmap(enc)(x, keys)
+    def encode_batch(self, x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        """Stacked ``(clients, dim)`` encode; default = vmap of ``encode``
+        over per-client subkeys (kernel-backed subclasses override with one
+        fused invocation over the whole batch)."""
+        keys = jax.random.split(key, x.shape[0])
+        return jax.vmap(self.encode)(x, keys)
 
-            object.__setattr__(self, "encode_batch", vmapped)
+    def decode_sum(self, z_sum: jnp.ndarray, n: int) -> jnp.ndarray:
+        raise NotImplementedError
 
-    # -- shared clip->encode dispatch (used by fed engine + distributed step)
+    def sum_bound(self, n: int) -> int:
+        """Upper bound on the aggregated message value for n clients —
+        used to pick the aggregation lane width."""
+        raise NotImplementedError
+
+    def per_round_epsilon(self, n: int, alpha: float) -> float:
+        """Exact aggregate-level Renyi-DP epsilon of one round with n
+        participating clients, at Renyi order alpha. 0.0 for non-private
+        mechanisms; host-side numerics (never traced)."""
+        raise NotImplementedError
+
+    @property
+    def bits(self) -> float:
+        """Per-coordinate client->aggregator message size."""
+        raise NotImplementedError
+
+    @property
+    def clip(self) -> float:
+        """Per-coordinate clipping threshold c."""
+        raise NotImplementedError
+
+    @classmethod
+    def from_options(cls, **options) -> "Mechanism":
+        raise NotImplementedError
+
+    # -- shared clip->encode dispatch (fed engine + distributed step) -------
     def quantize(self, g: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
         """Full client-side pipeline for one leaf: clip then encode."""
         g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
@@ -75,89 +144,305 @@ class Mechanism:
         g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
         return self.encode_batch(g, key)
 
+    # -- introspection -------------------------------------------------------
+    def spec(self) -> dict:
+        """Canonical dict spec: ``make_mechanism(mech.spec())`` rebuilds an
+        equal mechanism."""
+        out = {"name": self.name}
+        if dataclasses.is_dataclass(self):
+            d = dataclasses.asdict(self)  # nested params dataclass -> dict
+            out.update(d.pop("params", {}))
+            out.update(d)
+        return out
+
+    def describe(self) -> str:
+        """Human/CLI-readable one-liner, e.g. ``rqm:c=0.05,m=16,q=0.42``."""
+        opts = {k: v for k, v in self.spec().items() if k != "name"}
+        body = ",".join(f"{k}={v:g}" if isinstance(v, float) else f"{k}={v}"
+                        for k, v in opts.items())
+        return f"{self.name}:{body}" if body else self.name
+
+
+@register_mechanism("rqm")
+@dataclasses.dataclass(frozen=True)
+class RQMMechanism(Mechanism):
+    """The paper's Randomized Quantization Mechanism (Algorithm 2)."""
+
+    params: RQMParams
+    use_kernel: bool = True
+
+    @classmethod
+    def from_options(cls, c: float, m: int = 16, q: float = 0.42,
+                     delta_ratio: float = 1.0, delta: float = None,
+                     use_kernel: bool = True) -> "RQMMechanism":
+        # paper defaults: m=16, (delta, q) = (c, 0.42)
+        if delta is None:
+            delta = delta_ratio * c
+        return cls(RQMParams(c=c, delta=delta, m=m, q=q), use_kernel=use_kernel)
+
+    def encode(self, x, key):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.rqm_fast(x, key, self.params)
+        return rqm_lib.quantize(x, key, self.params)
+
+    def encode_batch(self, x, key):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.rqm_batch(x, key, self.params)
+        return super().encode_batch(x, key)
+
+    def decode_sum(self, z_sum, n):
+        return rqm_lib.decode_sum(z_sum, n, self.params)
+
+    def sum_bound(self, n):
+        return n * (self.params.m - 1)
+
+    def per_round_epsilon(self, n, alpha):
+        from repro.core.renyi import rqm_aggregate_epsilon
+
+        return rqm_aggregate_epsilon(self.params, n, alpha)
+
+    @property
+    def bits(self):
+        return self.params.bits_per_coordinate
+
+    @property
+    def clip(self):
+        return self.params.c
+
+
+@register_mechanism("pbm")
+@dataclasses.dataclass(frozen=True)
+class PBMMechanism(Mechanism):
+    """Poisson Binomial Mechanism baseline (Chen et al., ICML 2022)."""
+
+    params: PBMParams
+    use_kernel: bool = True
+
+    @classmethod
+    def from_options(cls, c: float, m: int = 16, theta: float = 0.25,
+                     use_kernel: bool = True) -> "PBMMechanism":
+        return cls(PBMParams(c=c, m=m, theta=theta), use_kernel=use_kernel)
+
+    def encode(self, x, key):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.pbm_fast(x, key, self.params)
+        return pbm_lib.quantize(x, key, self.params)
+
+    def encode_batch(self, x, key):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.pbm_batch(x, key, self.params)
+        return super().encode_batch(x, key)
+
+    def decode_sum(self, z_sum, n):
+        return pbm_lib.decode_sum(z_sum, n, self.params)
+
+    def sum_bound(self, n):
+        return n * self.params.m
+
+    def per_round_epsilon(self, n, alpha):
+        from repro.core.renyi import pbm_aggregate_epsilon
+
+        return pbm_aggregate_epsilon(self.params, n, alpha)
+
+    @property
+    def bits(self):
+        return self.params.bits_per_coordinate
+
+    @property
+    def clip(self):
+        return self.params.c
+
+
+@register_mechanism("qmgeo")
+@dataclasses.dataclass(frozen=True)
+class QMGeoMechanism(Mechanism):
+    """QMGeo-style truncated-geometric randomized quantizer (core.qmgeo):
+    stochastic rounding + normalized two-sided geometric noise over the m
+    levels. The registry's extensibility proof — added with zero edits to
+    the fed engine or the mesh step."""
+
+    params: QMGeoParams
+    use_kernel: bool = True
+
+    @classmethod
+    def from_options(cls, c: float, m: int = 16, r: float = 0.6,
+                     delta_ratio: float = 1.0, delta: float = None,
+                     use_kernel: bool = True) -> "QMGeoMechanism":
+        if delta is None:
+            delta = delta_ratio * c
+        return cls(QMGeoParams(c=c, delta=delta, m=m, r=r), use_kernel=use_kernel)
+
+    def encode(self, x, key):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.qmgeo_fast(x, key, self.params)
+        return qmgeo_lib.quantize(x, key, self.params)
+
+    def encode_batch(self, x, key):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.qmgeo_batch(x, key, self.params)
+        return super().encode_batch(x, key)
+
+    def decode_sum(self, z_sum, n):
+        return qmgeo_lib.decode_sum(z_sum, n, self.params)
+
+    def sum_bound(self, n):
+        return n * (self.params.m - 1)
+
+    def per_round_epsilon(self, n, alpha):
+        from repro.core.renyi import qmgeo_aggregate_epsilon
+
+        return qmgeo_aggregate_epsilon(self.params, n, alpha)
+
+    @property
+    def bits(self):
+        return self.params.bits_per_coordinate
+
+    @property
+    def clip(self):
+        return self.params.c
+
+
+@register_mechanism("none")
+@dataclasses.dataclass(frozen=True)
+class NoiseFreeMechanism(Mechanism):
+    """Noise-free clipped SGD: the paper's non-private upper-bound benchmark.
+    'Levels' are the clipped float gradients themselves (identity encode);
+    decode averages. No privacy (per_round_epsilon = 0)."""
+
+    c: float
+
+    @classmethod
+    def from_options(cls, c: float) -> "NoiseFreeMechanism":
+        return cls(c=c)
+
+    def encode(self, x, key):
+        return jnp.clip(x, -self.c, self.c)
+
+    def encode_batch(self, x, key):
+        return jnp.clip(x, -self.c, self.c)  # shape-agnostic; no per-client keys
+
+    def decode_sum(self, g_sum, n):
+        return g_sum / n
+
+    def sum_bound(self, n):
+        return 0
+
+    def per_round_epsilon(self, n, alpha):
+        return 0.0
+
+    @property
+    def bits(self):
+        return 32.0
+
+    @property
+    def clip(self):
+        return self.c
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing + construction
+# ---------------------------------------------------------------------------
+
+
+def _coerce(text: str):
+    """CLI option value -> bool | int | float | str."""
+    low = text.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    try:
+        return int(text)
+    except ValueError:
+        pass
+    try:
+        return float(text)
+    except ValueError:
+        return text
+
+
+def parse_mechanism_spec(spec: Union[str, dict]) -> tuple[str, dict]:
+    """Normalize a spec to ``(name, explicit_options)``.
+
+    ``"rqm"`` -> ("rqm", {}); ``"rqm:c=0.05,m=16"`` -> ("rqm", {...});
+    ``{"name": "pbm", "c": 0.02}`` -> ("pbm", {"c": 0.02}).
+    """
+    if isinstance(spec, dict):
+        opts = dict(spec)
+        try:
+            name = opts.pop("name")
+        except KeyError:
+            raise ValueError(f"dict spec needs a 'name' key, got {spec!r}")
+        return name, opts
+    if not isinstance(spec, str):
+        raise TypeError(f"spec must be str | dict | Mechanism, got {type(spec)}")
+    name, _, body = spec.partition(":")
+    name = name.strip()
+    opts: dict = {}
+    if body.strip():
+        for item in body.split(","):
+            k, sep, v = item.partition("=")
+            if not sep or not k.strip():
+                raise ValueError(f"malformed option {item!r} in spec {spec!r} "
+                                 f"(expected key=value)")
+            opts[k.strip()] = _coerce(v.strip())
+    return name, opts
+
+
+def make_mechanism(spec: MechanismSpec, **defaults) -> Mechanism:
+    """Build a registered mechanism from a name / spec string / dict.
+
+    ``defaults`` are fallback options (one CLI surface serving every
+    mechanism): unknown keys are silently dropped per mechanism. Options
+    inside the spec are explicit: they override defaults and unknown ones
+    raise. A Mechanism instance passes through unchanged.
+    """
+    if isinstance(spec, Mechanism):
+        return spec
+    name, explicit = parse_mechanism_spec(spec)
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown mechanism {name!r}; registered: {', '.join(_REGISTRY)}"
+        )
+    accepted = set(inspect.signature(cls.from_options).parameters)
+    unknown = set(explicit) - accepted
+    if unknown:
+        raise ValueError(
+            f"mechanism {name!r} does not accept option(s) "
+            f"{sorted(unknown)}; accepted: {sorted(accepted)}"
+        )
+    options = {k: v for k, v in defaults.items() if k in accepted}
+    options.update(explicit)
+    return cls.from_options(**options)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat factory helpers (v1 API)
+# ---------------------------------------------------------------------------
+
 
 def make_rqm_mechanism(params: RQMParams, *, use_kernel: bool = True) -> Mechanism:
-    if use_kernel:
-        # Pallas kernel on TPU; the kernel's exact math as fused jnp on CPU
-        # (bit-identical — shared counter-based RNG). See kernels/ops.py.
-        from repro.kernels import ops as kops
-
-        encode = lambda x, key: kops.rqm_fast(x, key, params)
-        encode_batch = lambda x, key: kops.rqm_batch(x, key, params)
-    else:
-        encode = lambda x, key: rqm_lib.quantize(x, key, params)
-        encode_batch = None  # derived vmap of the pure-JAX reference
-    return Mechanism(
-        name="rqm",
-        encode=encode,
-        decode_sum=lambda z, n: rqm_lib.decode_sum(z, n, params),
-        sum_bound=lambda n: n * (params.m - 1),
-        bits=params.bits_per_coordinate,
-        clip=params.c,
-        encode_batch=encode_batch,
-        use_kernel=use_kernel,
-    )
+    return RQMMechanism(params, use_kernel=use_kernel)
 
 
 def make_pbm_mechanism(params: PBMParams, *, use_kernel: bool = True) -> Mechanism:
-    if use_kernel:
-        from repro.kernels import ops as kops
+    return PBMMechanism(params, use_kernel=use_kernel)
 
-        encode = lambda x, key: kops.pbm_fast(x, key, params)
-        encode_batch = lambda x, key: kops.pbm_batch(x, key, params)
-    else:
-        encode = lambda x, key: pbm_lib.quantize(x, key, params)
-        encode_batch = None
-    return Mechanism(
-        name="pbm",
-        encode=encode,
-        decode_sum=lambda z, n: pbm_lib.decode_sum(z, n, params),
-        sum_bound=lambda n: n * params.m,
-        bits=params.bits_per_coordinate,
-        clip=params.c,
-        encode_batch=encode_batch,
-        use_kernel=use_kernel,
-    )
+
+def make_qmgeo_mechanism(params: QMGeoParams, *, use_kernel: bool = True) -> Mechanism:
+    return QMGeoMechanism(params, use_kernel=use_kernel)
 
 
 def make_noise_free_mechanism(c: float) -> Mechanism:
-    """Noise-free clipped SGD: the paper's non-private upper-bound benchmark.
-    'Levels' are the clipped float gradients themselves (identity encode);
-    decode averages. No privacy."""
-    encode = lambda x, key: jnp.clip(x, -c, c)
-    return Mechanism(
-        name="none",
-        encode=encode,
-        decode_sum=lambda g_sum, n: g_sum / n,
-        sum_bound=lambda n: 0,
-        bits=32.0,
-        clip=c,
-        encode_batch=encode,  # clip is shape-agnostic; no per-client keys
-    )
-
-
-def make_mechanism(
-    name: str,
-    *,
-    c: float,
-    m: int = 16,
-    q: float = 0.42,
-    delta_ratio: float = 1.0,
-    theta: float = 0.25,
-    use_kernel: bool = True,
-) -> Mechanism:
-    """Build a mechanism from flat CLI-style options.
-
-    Paper defaults: m=16; RQM (delta, q) = (c, 0.42); PBM theta = 0.25.
-    """
-    if name == "rqm":
-        return make_rqm_mechanism(
-            RQMParams(c=c, delta=delta_ratio * c, m=m, q=q), use_kernel=use_kernel
-        )
-    if name == "pbm":
-        return make_pbm_mechanism(
-            PBMParams(c=c, m=m, theta=theta), use_kernel=use_kernel
-        )
-    if name == "none":
-        return make_noise_free_mechanism(c)
-    raise ValueError(f"unknown mechanism {name!r}; expected rqm|pbm|none")
+    return NoiseFreeMechanism(c=c)

@@ -1,0 +1,151 @@
+"""QMGeo-style truncated-geometric randomized quantizer (after arXiv
+2312.05761: quantization + truncated-geometric perturbation as the privacy
+noise; studied for quantizer-induced Renyi DP by Kang et al., 2405.10096).
+
+This is the registry's extensibility proof: a THIRD private mechanism that
+rides the same grid geometry as RQM but replaces level sub-sampling with an
+explicit discrete perturbation of the rounded index.
+
+Per coordinate x in [-c, c] on the m-level grid over [-(c+delta), c+delta]
+(same B(i) grid as Algorithm 2, see core.grid):
+
+  1. stochastic rounding: x -> index j in {lo, lo+1}, up with probability
+     (x - B(lo)) / step  (unbiased: E[B(j)] = x);
+  2. truncated two-sided geometric noise: release z with
+
+         Pr(z = k | j) = r^{|k - j|} / Z_j,   k = 0..m-1,
+         Z_j = sum_k r^{|k - j|},
+
+     sampled by inverse-CDF over the m levels (static unroll — no gather,
+     no data-dependent control flow; the same VPU-friendly shape as the
+     RQM kernel's level search).
+
+Every outcome has probability >= r^{m-1}/Z > 0, so the Renyi divergence is
+finite at every order including infinity — the accounting in core.renyi is
+numerically exact on the closed-form pmf (core.distribution).
+
+The range extension delta keeps inputs away from the grid edges, where the
+truncation of the noise would otherwise bias the estimator; with the
+default delta = c the residual truncation bias is O(r^{m/4}) grid steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grid as grid_lib
+from repro.core.grid import GridGeometry
+
+__all__ = [
+    "QMGeoParams",
+    "quantize",
+    "quantize_with_uniforms",
+    "decode_sum",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QMGeoParams(GridGeometry):
+    """Hyperparameters of the truncated-geometric quantizer.
+
+    Attributes:
+      c:     per-coordinate clipping threshold; inputs live in [-c, c].
+      delta: range extension; the grid spans [-(c+delta), c+delta].
+      m:     number of quantization levels (log2(m) bits on the wire).
+      r:     geometric noise ratio in (0, 1) — larger r = flatter noise =
+             more privacy, more estimator variance.
+
+    Level placement / step / wire size come from the shared GridGeometry
+    mixin — the same grid RQM quantizes on.
+    """
+
+    c: float
+    delta: float
+    m: int
+    r: float
+
+    def __post_init__(self):
+        if self.c <= 0:
+            raise ValueError(f"c must be > 0, got {self.c}")
+        if self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+        if self.m < 2:
+            raise ValueError(f"m must be >= 2, got {self.m}")
+        if not 0.0 < self.r < 1.0:
+            raise ValueError(f"r must be in (0,1), got {self.r}")
+
+
+def quantize_with_uniforms(
+    x: jnp.ndarray,
+    u_round: jnp.ndarray,
+    u_noise: jnp.ndarray,
+    params: QMGeoParams,
+) -> jnp.ndarray:
+    """Deterministic core: uniforms in, int32 levels out.
+
+    Element-wise only (no per-level axis in memory): the inverse-CDF walk
+    over the m levels is a static unroll with a running cumulative weight,
+    so the identical expression serves as the mechanism reference, the
+    fused-jnp CPU path, AND the Pallas kernel body — they are bit-identical
+    by construction (see kernels/qmgeo_kernel.py).
+
+    Args:
+      x:       any shape, values expected in [-c, c] (clipped for safety).
+      u_round: shape ``x.shape`` uniforms in [0,1) — stochastic rounding.
+      u_noise: shape ``x.shape`` uniforms in [0,1) — noise inverse-CDF draw.
+    """
+    if u_round.shape != x.shape:
+        raise ValueError(f"u_round shape {u_round.shape} != {x.shape}")
+    if u_noise.shape != x.shape:
+        raise ValueError(f"u_noise shape {u_noise.shape} != {x.shape}")
+    m = params.m
+    r = float(params.r)
+    x_max = jnp.float32(params.x_max)
+    step = jnp.float32(params.step)
+    # static python-float constants -> jaxpr literals (no traced captures)
+    log_r = jnp.float32(math.log(r))
+    inv_1mr = jnp.float32(1.0 / (1.0 - r))
+    r_over_1mr = jnp.float32(r / (1.0 - r))
+
+    x = jnp.clip(x.astype(jnp.float32), -jnp.float32(params.c), jnp.float32(params.c))
+
+    # 1. stochastic rounding to a neighboring level (unbiased in B(j)).
+    lo = jnp.clip(jnp.floor((x + x_max) / step), 0, m - 2).astype(jnp.int32)
+    b_lo = -x_max + lo.astype(jnp.float32) * step
+    p_up = (x - b_lo) / step
+    j = lo + (u_round.astype(jnp.float32) < p_up).astype(jnp.int32)
+    jf = j.astype(jnp.float32)
+
+    # 2. truncated geometric noise via inverse CDF. Normalizer in closed
+    #    form: Z_j = (1 - r^{j+1})/(1-r) + r(1 - r^{m-1-j})/(1-r).
+    z_norm = (1.0 - jnp.exp((jf + 1.0) * log_r)) * inv_1mr + r_over_1mr * (
+        1.0 - jnp.exp((jnp.float32(m - 1) - jf) * log_r)
+    )
+    t = u_noise.astype(jnp.float32) * z_norm
+    cum = jnp.zeros_like(x)
+    z = jnp.zeros_like(j)
+    for k in range(m):  # static unroll over the m levels
+        w = jnp.exp(jnp.abs(jnp.float32(k) - jf) * log_r)  # r^{|k-j|}
+        cum = cum + w
+        z = z + (cum <= t).astype(jnp.int32)
+    # float round-off in Z vs the accumulated cum can push t past cum[m-1]
+    return jnp.minimum(z, m - 1)
+
+
+def quantize(x: jnp.ndarray, key: jax.Array, params: QMGeoParams) -> jnp.ndarray:
+    """Truncated-geometric quantizer with jax.random-driven randomness
+    (reference path; the hot path is kernels/ops.qmgeo_fast)."""
+    k_round, k_noise = jax.random.split(key)
+    u_round = jax.random.uniform(k_round, x.shape, jnp.float32)
+    u_noise = jax.random.uniform(k_noise, x.shape, jnp.float32)
+    return quantize_with_uniforms(x, u_round, u_noise, params)
+
+
+def decode_sum(z_sum: jnp.ndarray, n: int, params: QMGeoParams) -> jnp.ndarray:
+    """Server decode of the SecAgg sum of n devices' levels: the shared
+    affine grid decode (core.grid.decode_sum — same grid as RQM), unbiased
+    up to the (delta-suppressed) noise-truncation bias."""
+    return grid_lib.decode_sum(z_sum, n, params)

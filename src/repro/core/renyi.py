@@ -16,10 +16,12 @@ import numpy as np
 from repro.core.distribution import (
     aggregate_distribution,
     pbm_outcome_distribution,
+    qmgeo_outcome_distribution,
     rqm_outcome_distribution,
 )
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
+from repro.core.qmgeo import QMGeoParams
 
 _EPS = 1e-300
 
@@ -108,6 +110,17 @@ def pbm_aggregate_epsilon(
         x,
         xp,
         alpha,
+    )
+
+
+def qmgeo_aggregate_epsilon(
+    params: QMGeoParams, n: int, alpha: float, seed: int = 0
+) -> float:
+    """Worst-case aggregate Renyi-DP epsilon of the truncated-geometric
+    quantizer with n devices (same worst-case-input construction)."""
+    x, xp = worst_case_inputs(params.c, n, seed)
+    return aggregate_renyi_divergence(
+        lambda v: qmgeo_outcome_distribution(v, params), x, xp, alpha
     )
 
 

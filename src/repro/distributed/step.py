@@ -36,6 +36,19 @@ from repro.models.common import ParallelCtx
 from repro.optim import Optimizer
 
 
+def compat_shard_map(body, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map across jax versions: the stable jax.shard_map
+    (check_vma) when present, else the 0.4.x experimental shard_map
+    (same semantics, check_rep spelling)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
     """Binding of mesh axes to roles."""
@@ -66,6 +79,16 @@ class MeshPlan:
             seq_shards=self.n_clients,
             seq_parallel=seq_parallel,
         )
+
+
+def round_privacy(mech: Mechanism, n_clients: int,
+                  alphas=(2.0, 4.0, 8.0, 16.0, 32.0)) -> dict[float, float]:
+    """Per-step aggregate-level Renyi eps of the mesh train step, queried
+    from the self-accounting mechanism (Mechanism API v2). The mesh client
+    axes play the federated clients, so one train step releases exactly one
+    mechanism round over ``n_clients`` participants; the launcher composes
+    these additively across steps (RDP composition)."""
+    return {float(a): float(mech.per_round_epsilon(n_clients, a)) for a in alphas}
 
 
 def _client_key(key, ctx: ParallelCtx):
@@ -352,7 +375,7 @@ def make_train_step(cfg: ModelConfig, plan: MeshPlan, mech: Mechanism,
     opt_specs = meta_lib.pspecs(opt_meta) if opt_meta else ()
 
     metric_specs = {k: P() for k in ("loss", "ce_loss", "moe_aux_loss")}
-    mapped = jax.shard_map(
+    mapped = compat_shard_map(
         body,
         mesh=plan.mesh,
         in_specs=(param_specs, opt_specs, P(), batch_specs, P()),
@@ -410,7 +433,7 @@ def make_decode_step(cfg: ModelConfig, plan: MeshPlan, shape: InputShape, *,
     tok_spec = P(None if seq_sharded else plan.client_axes, None)
     out_tok_spec = P(None if seq_sharded else plan.client_axes)
 
-    mapped = jax.shard_map(
+    mapped = compat_shard_map(
         body,
         mesh=plan.mesh,
         in_specs=(param_specs, cache_specs, tok_spec, P()),
@@ -465,7 +488,7 @@ def make_prefill_step(cfg: ModelConfig, plan: MeshPlan, shape: InputShape, *,
 
         in_specs = (param_specs, tok_spec)
 
-    mapped = jax.shard_map(
+    mapped = compat_shard_map(
         body,
         mesh=plan.mesh,
         in_specs=in_specs,

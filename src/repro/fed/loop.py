@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -37,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mechanisms import Mechanism
-from repro.core.renyi import RenyiAccountant, pbm_aggregate_epsilon, rqm_aggregate_epsilon
+from repro.core.renyi import RenyiAccountant
 from repro.data.federated import FederatedPartition, sample_clients
 from repro.fed.cnn import cnn_accuracy, cnn_init, cnn_loss
 
@@ -101,7 +102,15 @@ class FedTrainer:
         self._rng = np.random.default_rng(fed_cfg.seed + 7)  # host engine only
         self._key = jax.random.key(fed_cfg.seed + 11)
         self.accountant = RenyiAccountant(alphas=fed_cfg.accountant_alphas)
-        self._per_round_eps: Optional[np.ndarray] = None
+        # Self-accounting: the mechanism carries its own parameters, so the
+        # exact per-round aggregate-level eps vector comes straight from the
+        # object that encodes — no second parameter hand-off to drift. All
+        # rounds are identical, so it is computed once and composed
+        # additively by the accountant.
+        self._per_round_eps = np.asarray([
+            mech.per_round_epsilon(fed_cfg.clients_per_round, a)
+            for a in fed_cfg.accountant_alphas
+        ])
         if fed_cfg.engine != "host":
             self._stage_clients()
         self._build_jits()
@@ -219,26 +228,33 @@ class FedTrainer:
         )
 
     # -- privacy accounting -------------------------------------------------
-    def attach_params(self, mech_params):
-        """Provide the mechanism's parameter object (RQMParams / PBMParams)
-        to enable exact per-round aggregate-level Renyi accounting. All
-        rounds are identical, so the per-round eps vector is computed once
-        and composed additively by the accountant."""
-        n = self.cfg.clients_per_round
-        eps = []
-        for a in self.cfg.accountant_alphas:
-            if self.mech.name == "rqm":
-                eps.append(rqm_aggregate_epsilon(mech_params, n, a))
-            elif self.mech.name == "pbm":
-                eps.append(pbm_aggregate_epsilon(mech_params, n, a))
-            else:
-                eps.append(0.0)
-        self._per_round_eps = np.asarray(eps)
+    def attach_params(self, mech_params=None):
+        """DEPRECATED no-op (v1 API): mechanisms are self-accounting.
+
+        Accounting is always on and computed from ``self.mech``'s own
+        parameter object via ``Mechanism.per_round_epsilon`` — exactly the
+        params that encode, so no mismatch is possible. This shim only
+        warns (and flags a params mismatch, the bug the v2 API removes);
+        it will be deleted next release."""
+        mech_self = getattr(self.mech, "params", None)
+        mismatch = (
+            mech_params is not None
+            and mech_self is not None
+            and mech_params != mech_self
+        )
+        warnings.warn(
+            "FedTrainer.attach_params is deprecated and a no-op: the "
+            "mechanism is self-accounting (Mechanism.per_round_epsilon)."
+            + (f" NOTE: the params passed here {mech_params} differ from "
+               f"the mechanism's own {mech_self}; accounting uses the "
+               f"latter." if mismatch else ""),
+            DeprecationWarning,
+            stacklevel=2,
+        )
 
     def _account(self, rounds: int):
-        if self._per_round_eps is not None:
-            for _ in range(rounds):
-                self.accountant.step(self._per_round_eps)
+        for _ in range(rounds):
+            self.accountant.step(self._per_round_eps)
 
     # -- the loop -----------------------------------------------------------
     def round(self, t: int):

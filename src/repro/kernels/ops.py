@@ -3,6 +3,25 @@
 Handles arbitrary input shapes (flatten -> pad to (rows, 128) tiles ->
 kernel -> slice -> reshape), key->seed derivation, interpret-mode fallback
 on CPU, and pytree mapping for whole gradient trees.
+
+Every mechanism kernel gets the same three entry points, built once by
+``_make_fast_ops`` from its (pallas ``*_quantize_2d``, element-wise
+``*_block``) pair:
+
+  * ``<name>(x, key, params, *, block_rows, interpret)`` — the Pallas path
+    on an arbitrary-shape array (auto block sizing via pick_block_rows);
+  * ``<name>_fast(x, key, params)`` — Pallas on TPU, the kernel's exact
+    math as ONE fused jnp expression elsewhere. Bit-identical for the same
+    seed (the counter-based RNG depends only on the flat element index);
+    this is the hot path on CPU and what the dry-run lowers — pallas
+    interpret mode would unroll its grid into a python loop, which is both
+    slow and unrepresentative in compiled HLO.
+  * ``<name>_batch(x, key, params)`` — ``_fast`` restricted to a stacked
+    ``(clients, dim)`` batch, the shape the federated round engine
+    produces: one fused invocation whose RNG spans the flattened batch, so
+    every client row draws independent randomness from one per-round seed
+    and the output inherits the kernel<->mechanism parity contract on the
+    flattened input (see kernels/ref.py).
 """
 from __future__ import annotations
 
@@ -13,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
-from repro.kernels import pbm_kernel, rqm_kernel
+from repro.core.qmgeo import QMGeoParams
+from repro.kernels import pbm_kernel, qmgeo_kernel, rqm_kernel
 from repro.kernels.rqm_kernel import LANE, pick_block_rows
 
 
@@ -35,120 +55,62 @@ def _tile(x_flat: jnp.ndarray, block_rows: int):
     return x2, n
 
 
-@functools.partial(jax.jit, static_argnames=("params", "block_rows", "interpret"))
-def _rqm_flat(x_flat, seed, params: RQMParams, block_rows: int, interpret: bool):
-    x2, n = _tile(x_flat, block_rows)
-    z2 = rqm_kernel.rqm_quantize_2d(
-        x2, seed, params, block_rows=block_rows, interpret=interpret
-    )
-    return z2.reshape(-1)[:n]
+def _make_fast_ops(quantize_2d, block_fn, name: str):
+    """Build the (pallas, fast, batch) wrapper trio for one mechanism kernel.
 
-
-def rqm(
-    x: jnp.ndarray,
-    key: jax.Array,
-    params: RQMParams,
-    *,
-    block_rows: int | None = None,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """RQM-quantize an arbitrary-shape array via the Pallas kernel.
-
-    block_rows=None auto-sizes the block to the input (pick_block_rows);
-    an explicit value is honored as given."""
-    if interpret is None:
-        interpret = _interpret_default()
-    seed = key_to_seed(key)
-    if block_rows is None:
-        block_rows = pick_block_rows(x.size)
-    z = _rqm_flat(x.reshape(-1), seed, params, block_rows, interpret)
-    return z.reshape(x.shape)
-
-
-@functools.partial(jax.jit, static_argnames=("params", "block_rows", "interpret"))
-def _pbm_flat(x_flat, seed, params: PBMParams, block_rows: int, interpret: bool):
-    x2, n = _tile(x_flat, block_rows)
-    z2 = pbm_kernel.pbm_quantize_2d(
-        x2, seed, params, block_rows=block_rows, interpret=interpret
-    )
-    return z2.reshape(-1)[:n]
-
-
-def pbm(
-    x: jnp.ndarray,
-    key: jax.Array,
-    params: PBMParams,
-    *,
-    block_rows: int | None = None,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    if interpret is None:
-        interpret = _interpret_default()
-    seed = key_to_seed(key)
-    if block_rows is None:
-        block_rows = pick_block_rows(x.size)
-    z = _pbm_flat(x.reshape(-1), seed, params, block_rows, interpret)
-    return z.reshape(x.shape)
-
-
-@functools.partial(jax.jit, static_argnames=("params",))
-def _rqm_flat_jnp(x_flat, seed, params: RQMParams):
-    """The kernel's exact math as one fused jnp expression (no pallas grid).
-
-    Bit-identical to the Pallas kernel for the same seed (the counter-based
-    RNG depends only on the flat element index). This is the hot path on
-    CPU (smoke tests, the federated example) and what the dry-run lowers —
-    pallas interpret mode would unroll its grid into a python loop, which
-    is both slow and unrepresentative in compiled HLO.
+    quantize_2d: the pallas_call entry on a pre-tiled (rows, 128) array.
+    block_fn:    the shared element-wise body (kernel == fused-jnp parity).
     """
-    from repro.kernels.rqm_kernel import _rqm_block
 
-    z = _rqm_block(x_flat.reshape(1, -1), seed, jnp.uint32(0), params)
-    return z.reshape(-1)
+    @functools.partial(jax.jit, static_argnames=("params", "block_rows", "interpret"))
+    def _flat(x_flat, seed, params, block_rows: int, interpret: bool):
+        x2, n = _tile(x_flat, block_rows)
+        z2 = quantize_2d(x2, seed, params, block_rows=block_rows,
+                         interpret=interpret)
+        return z2.reshape(-1)[:n]
+
+    def pallas(x, key, params, *, block_rows=None, interpret=None):
+        """Quantize an arbitrary-shape array via the Pallas kernel.
+
+        block_rows=None auto-sizes the block to the input (pick_block_rows);
+        an explicit value is honored as given."""
+        if interpret is None:
+            interpret = _interpret_default()
+        seed = key_to_seed(key)
+        if block_rows is None:
+            block_rows = pick_block_rows(x.size)
+        z = _flat(x.reshape(-1), seed, params, block_rows, interpret)
+        return z.reshape(x.shape)
+
+    @functools.partial(jax.jit, static_argnames=("params",))
+    def _flat_jnp(x_flat, seed, params):
+        z = block_fn(x_flat.reshape(1, -1), seed, jnp.uint32(0), params)
+        return z.reshape(-1)
+
+    def fast(x, key, params):
+        """Pallas kernel on TPU, the fused jnp path elsewhere (bit-identical)."""
+        if jax.default_backend() == "tpu":
+            return pallas(x, key, params)
+        seed = key_to_seed(key)
+        return _flat_jnp(x.reshape(-1), seed, params).reshape(x.shape)
+
+    def batch(x, key, params):
+        """Kernel-backed encode for a stacked ``(clients, dim)`` batch."""
+        if x.ndim != 2:
+            raise ValueError(f"{name}_batch expects (clients, dim), got {x.shape}")
+        return fast(x, key, params)
+
+    pallas.__name__, fast.__name__, batch.__name__ = (
+        name, f"{name}_fast", f"{name}_batch")
+    return pallas, fast, batch
 
 
-def rqm_fast(x: jnp.ndarray, key: jax.Array, params: RQMParams) -> jnp.ndarray:
-    """RQM via the Pallas kernel on TPU, via the fused jnp path elsewhere."""
-    if jax.default_backend() == "tpu":
-        return rqm(x, key, params)
-    seed = key_to_seed(key)
-    return _rqm_flat_jnp(x.reshape(-1), seed, params).reshape(x.shape)
-
-
-@functools.partial(jax.jit, static_argnames=("params",))
-def _pbm_flat_jnp(x_flat, seed, params: PBMParams):
-    from repro.kernels.pbm_kernel import _pbm_block
-
-    z = _pbm_block(x_flat.reshape(1, -1), seed, jnp.uint32(0), params)
-    return z.reshape(-1)
-
-
-def pbm_fast(x: jnp.ndarray, key: jax.Array, params: PBMParams) -> jnp.ndarray:
-    if jax.default_backend() == "tpu":
-        return pbm(x, key, params)
-    seed = key_to_seed(key)
-    return _pbm_flat_jnp(x.reshape(-1), seed, params).reshape(x.shape)
-
-
-def rqm_batch(x: jnp.ndarray, key: jax.Array, params: RQMParams) -> jnp.ndarray:
-    """Kernel-backed RQM encode for a stacked ``(clients, dim)`` batch.
-
-    ONE fused invocation over the whole batch (Pallas on TPU, fused jnp
-    elsewhere): the counter-based RNG indexes the flattened batch, so each
-    client row draws independent randomness from the single seed, and the
-    output is bit-identical to ``ref.rqm_ref`` on ``x.reshape(-1)`` — the
-    batched shape inherits the kernel<->Algorithm-2 parity contract.
-    """
-    if x.ndim != 2:
-        raise ValueError(f"rqm_batch expects (clients, dim), got {x.shape}")
-    return rqm_fast(x, key, params)
-
-
-def pbm_batch(x: jnp.ndarray, key: jax.Array, params: PBMParams) -> jnp.ndarray:
-    """Kernel-backed PBM encode for a stacked ``(clients, dim)`` batch."""
-    if x.ndim != 2:
-        raise ValueError(f"pbm_batch expects (clients, dim), got {x.shape}")
-    return pbm_fast(x, key, params)
+rqm, rqm_fast, rqm_batch = _make_fast_ops(
+    rqm_kernel.rqm_quantize_2d, rqm_kernel._rqm_block, "rqm")
+pbm, pbm_fast, pbm_batch = _make_fast_ops(
+    pbm_kernel.pbm_quantize_2d, pbm_kernel._pbm_block, "pbm")
+qmgeo, qmgeo_fast, qmgeo_batch = _make_fast_ops(
+    qmgeo_kernel.qmgeo_quantize_2d, qmgeo_kernel._qmgeo_block, "qmgeo")
 
 
 def rqm_tree(tree, key: jax.Array, params: RQMParams, **kw):

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
+from repro.core.qmgeo import QMGeoParams
+from repro.core.qmgeo import quantize_with_uniforms as qmgeo_with_uniforms
 from repro.core.rqm import quantize_with_uniforms
 from repro.kernels.prng import random_uniform
 
@@ -59,6 +61,20 @@ def rqm_ref(x_flat: jnp.ndarray, seed: jnp.ndarray, params: RQMParams) -> jnp.nd
         raise ValueError(f"rqm_ref expects flat input, got {x_flat.shape}")
     u_levels, u_round = rqm_uniforms(x_flat.shape[0], seed, params)
     return quantize_with_uniforms(x_flat, u_levels, u_round, params)
+
+
+def qmgeo_ref(
+    x_flat: jnp.ndarray, seed: jnp.ndarray, params: QMGeoParams
+) -> jnp.ndarray:
+    """Oracle for the truncated-geometric kernel: the kernel's two uniform
+    streams (0 = rounding, 1 = noise inverse-CDF) routed through the
+    mechanism-level deterministic core."""
+    if x_flat.ndim != 1:
+        raise ValueError(f"qmgeo_ref expects flat input, got {x_flat.shape}")
+    cnt = _counters(x_flat.shape[0])
+    u_round = random_uniform(seed, cnt, stream=0)
+    u_noise = random_uniform(seed, cnt, stream=1)
+    return qmgeo_with_uniforms(x_flat, u_round, u_noise, params)
 
 
 def pbm_ref(x_flat: jnp.ndarray, seed: jnp.ndarray, params: PBMParams) -> jnp.ndarray:

@@ -37,7 +37,12 @@ from repro.distributed.step import (
     make_train_step,
 )
 from repro.launch import hlo_analysis
-from repro.launch.mesh import V5E, client_axes_of, make_production_mesh
+from repro.launch.mesh import (
+    V5E,
+    client_axes_of,
+    compat_set_mesh,
+    make_production_mesh,
+)
 from repro.models import meta as meta_lib
 from repro.optim import make_optimizer
 from repro.optim.schedules import constant
@@ -138,7 +143,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, mechanism="rqm",
     n_dev = mesh.devices.size
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             fn, args = build_step(
                 cfg, plan, shape, mechanism=mechanism, packed=packed,
                 q_chunk=q_chunk, remat=remat, seq_parallel=seq_parallel,
@@ -207,7 +212,10 @@ def main():
     ap.add_argument("--arch", default=None, help="architecture id (default: all)")
     ap.add_argument("--shape", default=None, help="input shape (default: all)")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--mechanism", default="rqm", choices=["rqm", "pbm", "none"])
+    ap.add_argument("--mechanism", default="rqm",
+                    help="mechanism spec: registered name or 'name:k=v,...' "
+                         "string (e.g. 'qmgeo:c=0.05,m=16,r=0.6'); any "
+                         "registered mechanism lowers through the mesh step")
     ap.add_argument("--packed", action="store_true", help="lane-packed aggregation")
     ap.add_argument("--q-chunk", type=int, default=None)
     ap.add_argument("--no-remat", action="store_true")

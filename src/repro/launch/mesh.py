@@ -6,6 +6,8 @@ importing jax; smoke tests and benches see the real single CPU device.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
 
 V5E = {
@@ -16,20 +18,36 @@ V5E = {
 }
 
 
+def compat_set_mesh(mesh):
+    """Context manager entering ``mesh``: jax.set_mesh on newer jax, the
+    mesh's own (legacy) context-manager protocol on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: newer jax wants explicit Auto
+    axis_types (the repo's shard_map code assumes Auto), older jax (e.g.
+    0.4.x) has neither the kwarg nor jax.sharding.AxisType — where Auto is
+    already the only behavior."""
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale sharded tests (requires >=prod(shape) devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def client_axes_of(mesh) -> tuple[str, ...]:

@@ -23,9 +23,15 @@ import numpy as np
 from repro.checkpoint import save
 from repro.configs.base import INPUT_SHAPES, InputShape
 from repro.configs.registry import get_config
-from repro.core.mechanisms import make_mechanism
+from repro.core.mechanisms import make_mechanism, mechanism_names
 from repro.data.lm import TokenPipeline
-from repro.distributed.step import MeshPlan, build_train_step_fn, make_train_step
+from repro.distributed.step import (
+    MeshPlan,
+    build_train_step_fn,
+    make_train_step,
+    round_privacy,
+)
+from repro.launch.mesh import compat_make_mesh, compat_set_mesh
 from repro.models import meta as meta_lib
 from repro.models import model as model_lib
 from repro.models.common import ParallelCtx
@@ -40,7 +46,12 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--mechanism", default="rqm", choices=["rqm", "pbm", "none"])
+    ap.add_argument("--mechanism", default="rqm",
+                    help="mechanism spec: a registered name or a "
+                         "'name:k=v,...' string, e.g. 'rqm', "
+                         "'qmgeo:c=0.05,m=16,r=0.6' "
+                         f"(registered: {', '.join(mechanism_names())}); "
+                         "--clip/--m/--q/--delta-ratio act as defaults")
     ap.add_argument("--clip", type=float, default=0.02)
     ap.add_argument("--m", type=int, default=16)
     ap.add_argument("--q", type=float, default=0.42)
@@ -58,27 +69,36 @@ def main():
 
     cfg = get_config(args.arch, reduced=args.reduced)
     shape = InputShape("cli", args.seq, args.batch, "train")
+    # CLI flags are defaults; options inline in the spec override them.
     mech = make_mechanism(
         args.mechanism, c=args.clip, m=args.m, q=args.q,
         delta_ratio=args.delta_ratio,
     )
+    n_clients = 1
+    if args.mesh_shape:
+        dims = tuple(int(x) for x in args.mesh_shape.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        n_clients = int(np.prod([d for d, n in zip(dims, names) if n != "model"]))
+    # Self-accounting (Mechanism API v2): the step's privacy comes from the
+    # very mechanism object that encodes. RDP composes additively over steps.
+    eps = round_privacy(mech, n_clients, alphas=(8.0,))[8.0]
+    print(f"[privacy] {mech.describe()}: per-step aggregate eps(alpha=8) = "
+          f"{eps:.4f} with n_clients={n_clients}; "
+          f"total over {args.steps} steps = {eps * args.steps:.4f}")
     opt = make_optimizer(args.optimizer)
     lr_fn = warmup_cosine(args.lr, warmup=args.steps // 10 + 1, total_steps=args.steps)
     pipe = TokenPipeline(cfg, args.seq, args.batch, seed=args.seed)
     key = jax.random.key(args.seed)
 
     if args.mesh_shape:
-        dims = tuple(int(x) for x in args.mesh_shape.split("x"))
-        names = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(dims, names,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        mesh = compat_make_mesh(dims, names)
         plan = MeshPlan(mesh=mesh, client_axes=tuple(n for n in names if n != "model"))
         step_fn, specs = make_train_step(
             cfg, plan, mech, opt, lr_fn, shape, packed=args.packed,
             compute_dtype=jnp.float32,
         )
         tp = plan.tp
-        with jax.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             params = model_lib.init_params(jax.random.key(args.seed + 1), cfg, tp=tp)
             params = jax.device_put(params, meta_lib.shardings(specs["param_meta"], mesh))
             opt_state = opt.init(params)

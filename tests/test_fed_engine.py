@@ -29,7 +29,7 @@ def _trainer(engine, name="rqm", **overrides):
 
 
 class TestEngineParity:
-    @pytest.mark.parametrize("name", ["rqm", "pbm", "none"])
+    @pytest.mark.parametrize("name", ["rqm", "pbm", "qmgeo", "none"])
     def test_scan_matches_perround_bit_for_bit(self, name):
         """The acceptance contract: 5 fixed-seed rounds, identical params."""
         a = _trainer("perround", name)
@@ -51,8 +51,9 @@ class TestEngineParity:
         b.train(rounds=5, eval_every=5, log=lambda *_: None)
         np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
 
-    def test_host_engine_still_trains(self):
-        tr = _trainer("host", rounds=3)
+    @pytest.mark.parametrize("name", ["rqm", "qmgeo"])
+    def test_host_engine_still_trains(self, name):
+        tr = _trainer("host", name, rounds=3)
         hist = tr.train(rounds=3, eval_every=3, log=lambda *_: None)
         assert np.isfinite(hist[-1]["loss"])
 
@@ -63,11 +64,33 @@ class TestEngineParity:
 
 class TestEngineAccounting:
     def test_accountant_steps_per_round_under_scan(self):
+        """Self-accounting: no params hand-off, the mechanism is queried."""
         tr = _trainer("scan", rounds=4)
-        tr.attach_params(RQMParams(c=0.05, delta=0.05, m=16, q=0.42))
         tr.train(rounds=4, eval_every=2, log=lambda *_: None)
         assert tr.accountant.rounds == 4
         assert tr.accountant.rdp_epsilon(8.0) > 0
+
+    @pytest.mark.parametrize("name", ["qmgeo", "pbm"])
+    def test_self_accounting_composes_for_all_mechanisms(self, name):
+        tr = _trainer("scan", name, rounds=3)
+        tr.train(rounds=3, eval_every=3, log=lambda *_: None)
+        per_round = tr.mech.per_round_epsilon(SMALL["clients_per_round"], 8.0)
+        assert per_round > 0
+        np.testing.assert_allclose(
+            tr.accountant.rdp_epsilon(8.0), 3 * per_round, rtol=1e-12
+        )
+
+    def test_attach_params_is_deprecated_noop(self):
+        """v1 shim: warns, changes nothing (accounting already exact)."""
+        tr = _trainer("scan", rounds=2)
+        before = tr._per_round_eps.copy()
+        with pytest.warns(DeprecationWarning, match="self-accounting"):
+            tr.attach_params(RQMParams(c=0.05, delta=0.05, m=16, q=0.42))
+        np.testing.assert_array_equal(tr._per_round_eps, before)
+        # a MISMATCHED params object (the v1 footgun) is called out
+        with pytest.warns(DeprecationWarning, match="differ"):
+            tr.attach_params(RQMParams(c=0.9, delta=0.9, m=8, q=0.3))
+        np.testing.assert_array_equal(tr._per_round_eps, before)
 
     def test_scan_engine_learns(self):
         tr = _trainer("scan", rounds=10, num_clients=40, clients_per_round=8)

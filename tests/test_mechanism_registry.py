@@ -1,0 +1,247 @@
+"""Mechanism API v2: registry construction, self-accounting parity with the
+v1 attach_params path, and the QMGeo truncated-geometric mechanism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.grid import RQMParams
+from repro.core.mechanisms import (
+    Mechanism,
+    QMGeoMechanism,
+    RQMMechanism,
+    make_mechanism,
+    mechanism_names,
+    parse_mechanism_spec,
+    register_mechanism,
+)
+from repro.core.pbm import PBMParams
+from repro.core.qmgeo import QMGeoParams, decode_sum as qmgeo_decode_sum
+from repro.core.qmgeo import quantize as qmgeo_quantize
+from repro.core.distribution import qmgeo_outcome_distribution
+from repro.core.renyi import (
+    pbm_aggregate_epsilon,
+    qmgeo_aggregate_epsilon,
+    rqm_aggregate_epsilon,
+)
+from repro.kernels import ops, ref
+
+
+class TestRegistry:
+    def test_builtin_names_registered(self):
+        names = mechanism_names()
+        for n in ("rqm", "pbm", "qmgeo", "none"):
+            assert n in names
+
+    def test_spec_string_dict_name_equivalence(self):
+        """The satellite contract: every construction surface agrees."""
+        a = make_mechanism("rqm:c=0.05,m=8,q=0.3")
+        b = make_mechanism({"name": "rqm", "c": 0.05, "m": 8, "q": 0.3})
+        c = make_mechanism("rqm", c=0.05, m=8, q=0.3)
+        assert a == b == c
+        assert a.params == RQMParams(c=0.05, delta=0.05, m=8, q=0.3)
+
+    def test_spec_roundtrip_via_spec_and_describe(self):
+        for spec in ("rqm:c=0.05,m=8,q=0.3", "pbm:c=0.1,theta=0.2",
+                     "qmgeo:c=0.05,m=16,r=0.7", "none:c=0.02"):
+            m = make_mechanism(spec)
+            assert make_mechanism(m.spec()) == m
+            assert make_mechanism(m.describe()) == m
+
+    def test_inline_options_override_defaults(self):
+        m = make_mechanism("rqm:c=0.1", c=0.05, m=8)
+        assert m.params.c == pytest.approx(0.1)
+        assert m.params.m == 8  # default still applies where spec is silent
+
+    def test_unknown_defaults_are_filtered_per_mechanism(self):
+        """One CLI surface serves every mechanism: pbm ignores q/delta_ratio."""
+        m = make_mechanism("pbm", c=0.05, q=0.42, delta_ratio=1.0, theta=0.3, r=0.6)
+        assert m.params == PBMParams(c=0.05, m=16, theta=0.3)
+
+    def test_unknown_inline_option_raises(self):
+        with pytest.raises(ValueError, match="does not accept"):
+            make_mechanism("rqm:c=0.05,theta=0.3")
+
+    def test_unknown_mechanism_lists_registered(self):
+        with pytest.raises(ValueError, match="registered:"):
+            make_mechanism("warp", c=0.05)
+
+    def test_malformed_spec_raises(self):
+        with pytest.raises(ValueError, match="key=value"):
+            make_mechanism("rqm:c")
+        with pytest.raises(ValueError, match="'name'"):
+            make_mechanism({"c": 0.05})
+
+    def test_mechanism_instance_passes_through(self):
+        m = make_mechanism("qmgeo", c=0.05)
+        assert make_mechanism(m) is m
+
+    def test_parse_spec_coercion(self):
+        name, opts = parse_mechanism_spec("rqm:c=0.05,m=16,use_kernel=false")
+        assert name == "rqm"
+        assert opts == {"c": 0.05, "m": 16, "use_kernel": False}
+        assert isinstance(opts["m"], int) and isinstance(opts["c"], float)
+
+    def test_new_registration_is_one_class(self):
+        """Extensibility: a registered class is immediately constructible."""
+
+        @register_mechanism("test-identity")
+        class IdentityMechanism(Mechanism):
+            def __init__(self, c=1.0):
+                self.c = c
+
+            @classmethod
+            def from_options(cls, c=1.0):
+                return cls(c=c)
+
+            def encode(self, x, key):
+                return jnp.clip(x, -self.c, self.c)
+
+            def decode_sum(self, z_sum, n):
+                return z_sum / n
+
+            def sum_bound(self, n):
+                return 0
+
+            def per_round_epsilon(self, n, alpha):
+                return 0.0
+
+            @property
+            def bits(self):
+                return 32.0
+
+            @property
+            def clip(self):
+                return self.c
+
+        try:
+            m = make_mechanism("test-identity:c=0.5")
+            assert m.clip == 0.5 and m.name == "test-identity"
+            with pytest.raises(ValueError, match="already registered"):
+                register_mechanism("test-identity")(RQMMechanism)
+        finally:
+            from repro.core import mechanisms as mechs
+
+            mechs._REGISTRY.pop("test-identity", None)
+
+
+class TestSelfAccountingParity:
+    """mech.per_round_epsilon == the v1 attach_params formulas, exactly."""
+
+    N, ALPHAS = 6, (2.0, 8.0, 32.0)
+
+    def test_rqm_parity(self):
+        p = RQMParams(c=0.05, delta=0.05, m=16, q=0.42)
+        mech = make_mechanism("rqm", c=0.05)
+        assert mech.params == p
+        for a in self.ALPHAS:
+            assert mech.per_round_epsilon(self.N, a) == rqm_aggregate_epsilon(
+                p, self.N, a
+            )
+
+    def test_pbm_parity(self):
+        p = PBMParams(c=0.05, m=16, theta=0.25)
+        mech = make_mechanism("pbm", c=0.05)
+        assert mech.params == p
+        for a in self.ALPHAS:
+            assert mech.per_round_epsilon(self.N, a) == pbm_aggregate_epsilon(
+                p, self.N, a
+            )
+
+    def test_qmgeo_parity_and_finite_at_infinity(self):
+        p = QMGeoParams(c=0.05, delta=0.05, m=16, r=0.6)
+        mech = make_mechanism("qmgeo", c=0.05)
+        assert mech.params == p
+        for a in self.ALPHAS + (float("inf"),):
+            e = mech.per_round_epsilon(self.N, a)
+            assert e == qmgeo_aggregate_epsilon(p, self.N, a)
+            assert 0 < e < np.inf
+
+    def test_noise_free_is_zero(self):
+        mech = make_mechanism("none", c=0.05)
+        assert mech.per_round_epsilon(self.N, 8.0) == 0.0
+
+
+class TestQMGeoMechanism:
+    PARAMS = QMGeoParams(c=1.0, delta=1.0, m=16, r=0.6)
+
+    @pytest.mark.parametrize("x", np.linspace(-1.0, 1.0, 7).tolist())
+    def test_outcome_distribution_normalized_positive(self, x):
+        p = qmgeo_outcome_distribution(x, self.PARAMS)
+        assert p.shape == (16,)
+        assert (p > 0).all()  # full support -> finite eps at every alpha
+        np.testing.assert_allclose(p.sum(), 1.0, atol=1e-12)
+
+    def test_mechanism_matches_closed_form(self):
+        """Empirical histogram of the sampled mechanism == the pmf."""
+        x_val = 0.37
+        n = 120_000
+        z = qmgeo_quantize(jnp.full((n,), x_val), jax.random.key(0), self.PARAMS)
+        hist = np.bincount(np.asarray(z), minlength=16) / n
+        exact = qmgeo_outcome_distribution(x_val, self.PARAMS)
+        assert np.abs(hist - exact).max() < 7e-3
+
+    def test_kernel_matches_reference_bit_for_bit(self):
+        """Fused path == the kernel's uniforms through the mechanism core."""
+        x = jax.random.uniform(jax.random.key(1), (5, 300), jnp.float32, -1, 1)
+        key = jax.random.key(2)
+        z = ops.qmgeo_batch(x, key, self.PARAMS)
+        z_ref = ref.qmgeo_ref(
+            x.reshape(-1), ops.key_to_seed(key), self.PARAMS
+        ).reshape(x.shape)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(z_ref))
+
+    def test_pallas_kernel_matches_fused(self):
+        x = jax.random.uniform(jax.random.key(3), (4, 200), jnp.float32, -1, 1)
+        key = jax.random.key(4)
+        z_pallas = ops.qmgeo(x, key, self.PARAMS, interpret=True, block_rows=8)
+        z_fused = ops.qmgeo_batch(x, key, self.PARAMS)
+        np.testing.assert_array_equal(np.asarray(z_pallas), np.asarray(z_fused))
+
+    def test_levels_in_range(self):
+        z = qmgeo_quantize(
+            jnp.array([-1.0, 1.0] * 500), jax.random.key(5), self.PARAMS
+        )
+        assert int(z.min()) >= 0 and int(z.max()) <= 15
+
+    def test_decode_approximately_unbiased(self):
+        n, dim = 24, 4000
+        x = jax.random.uniform(jax.random.key(6), (n, dim), minval=-1.0, maxval=1.0)
+        keys = jax.random.split(jax.random.key(7), n)
+        z = jnp.stack([qmgeo_quantize(x[i], keys[i], self.PARAMS) for i in range(n)])
+        g = qmgeo_decode_sum(z.sum(axis=0), n, self.PARAMS)
+        # geometric-noise variance averages out over clients; delta keeps
+        # the truncation bias below the noise floor
+        assert float(jnp.abs(g - x.mean(axis=0)).mean()) < 0.15
+
+    def test_more_noise_more_privacy_cost_tradeoff(self):
+        """Larger r (flatter noise) => strictly smaller epsilon."""
+        eps = [
+            qmgeo_aggregate_epsilon(
+                QMGeoParams(c=1.0, delta=1.0, m=16, r=r), n=4, alpha=8.0
+            )
+            for r in (0.3, 0.5, 0.7)
+        ]
+        assert eps[0] > eps[1] > eps[2]
+
+    def test_pure_jax_fallback_is_vmapped_reference(self):
+        mech = QMGeoMechanism(self.PARAMS, use_kernel=False)
+        x = jax.random.uniform(jax.random.key(8), (6, 111), jnp.float32, -1, 1)
+        key = jax.random.key(9)
+        keys = jax.random.split(key, x.shape[0])
+        z_ref = jax.vmap(
+            lambda xi, ki: qmgeo_quantize(xi, ki, self.PARAMS)
+        )(x, keys)
+        np.testing.assert_array_equal(
+            np.asarray(mech.encode_batch(x, key)), np.asarray(z_ref)
+        )
+
+
+class TestMeshStepPrivacyQuery:
+    def test_round_privacy_queries_mechanism(self):
+        from repro.distributed.step import round_privacy
+
+        mech = make_mechanism("rqm:c=0.05,m=16,q=0.42")
+        rp = round_privacy(mech, n_clients=4, alphas=(2.0, 8.0))
+        assert set(rp) == {2.0, 8.0}
+        assert rp[8.0] == mech.per_round_epsilon(4, 8.0) > 0

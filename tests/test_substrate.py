@@ -170,15 +170,13 @@ class TestSchedules:
 
 class TestFedLoop:
     def test_loss_decreases_and_accounting(self):
-        from repro.core.grid import RQMParams
-
         c = 0.02
         mech = make_mechanism("rqm", c=c)
         fcfg = FedConfig(num_clients=60, clients_per_round=8, rounds=20,
                          lr=1.0, eval_size=200,
                          accountant_alphas=(2.0, 8.0))
+        # self-accounting: the trainer queries mech.per_round_epsilon itself
         tr = FedTrainer(mech, fcfg)
-        tr.attach_params(RQMParams(c=c, delta=c, m=16, q=0.42))
         before = tr.evaluate()["loss"]
         hist = tr.train(rounds=20, eval_every=20, log=lambda *_: None)
         after = hist[-1]["loss"]
@@ -189,7 +187,7 @@ class TestFedLoop:
         assert np.isfinite(eps)
 
     def test_mechanisms_run(self):
-        for name in ("none", "pbm"):
+        for name in ("none", "pbm", "qmgeo"):
             mech = make_mechanism(name, c=0.02)
             fcfg = FedConfig(num_clients=30, clients_per_round=5, rounds=3,
                              eval_size=50)
