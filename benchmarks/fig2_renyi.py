@@ -8,8 +8,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
 from repro.core.renyi import pbm_aggregate_epsilon, rqm_aggregate_epsilon

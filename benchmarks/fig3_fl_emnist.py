@@ -17,6 +17,8 @@ tradeoff cannot drift from the parameters that actually ran.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -30,6 +32,11 @@ ROUNDS = 120
 # settings the orderings noise-free > RQM >= PBM emerge within ~120 rounds.
 FED = dict(num_clients=300, clients_per_round=20, lr=1.0, eval_size=800,
            samples_per_client=20, data_noise=1.5, data_deform=1.2)
+# --smoke: the CI bench lane's budget — small enough for a push-to-main job,
+# big enough that the per-engine rounds/sec ordering is stable.
+SMOKE_ROUNDS = 16
+SMOKE_FED = dict(num_clients=80, clients_per_round=8, lr=1.0, eval_size=200,
+                 samples_per_client=20, data_noise=1.5, data_deform=1.2)
 
 # Spec strings: the uniform construction surface (launchers/examples/tests).
 SPECS = {
@@ -42,17 +49,21 @@ SPECS = {
 }
 
 
-def engine_bench(csv=print, rounds=12):
-    """rounds/sec: the legacy host-driven loop vs the scanned device engine.
+def engine_bench(csv=print, rounds=12, fed=None):
+    """rounds/sec across the round engines: the legacy host-driven loop,
+    the scanned device engine, and the sharded multi-device engine (one
+    shard per visible device — 1 on a plain CPU container, where it must
+    track the scan engine to within dispatch overhead).
 
-    Both trainers run the same mechanism and data scale; each path is
-    compiled/warmed before timing, so the numbers compare steady-state
-    round throughput (the host path's per-round numpy stacking and
-    dispatch vs the scan engine's single donated-buffer block call)."""
+    Every path is compiled/warmed before timing, so the numbers compare
+    steady-state round throughput (the host path's per-round numpy
+    stacking and dispatch vs the block engines' single donated-buffer
+    call; the shard engine adds the shard_map + cross-shard secure_sum)."""
+    fed = dict(FED if fed is None else fed)
     spec = SPECS["rqm(d=c,q=.42)"]
 
     host = FedTrainer(make_mechanism(spec),
-                      FedConfig(rounds=rounds, engine="host", **FED))
+                      FedConfig(rounds=rounds, engine="host", **fed))
     host.round(0)  # warm the per-round jits
     jax.block_until_ready(host.flat)
     t0 = time.time()
@@ -61,32 +72,38 @@ def engine_bench(csv=print, rounds=12):
     jax.block_until_ready(host.flat)
     host_rps = rounds / (time.time() - t0)
 
-    scan = FedTrainer(make_mechanism(spec),
-                      FedConfig(rounds=rounds, engine="scan", **FED))
-    scan.run_block(rounds)  # compile + warm the block program
-    jax.block_until_ready(scan.flat)
-    t0 = time.time()
-    scan.run_block(rounds)
-    jax.block_until_ready(scan.flat)
-    elapsed = time.time() - t0
-    scan_rps = rounds / elapsed
+    def block_engine_rps(engine):
+        tr = FedTrainer(make_mechanism(spec),
+                        FedConfig(rounds=rounds, engine=engine, **fed))
+        tr.run_block(rounds)  # compile + warm the block program
+        jax.block_until_ready(tr.flat)
+        t0 = time.time()
+        tr.run_block(rounds)
+        jax.block_until_ready(tr.flat)
+        return rounds / (time.time() - t0), tr
 
-    us = elapsed * 1e6 / rounds
+    scan_rps, _ = block_engine_rps("scan")
+    shard_rps, shard_tr = block_engine_rps("shard")
+
+    us = 1e6 / scan_rps
     csv(f"fig3_engine,{us:.0f},"
         f"host_rounds_per_s={host_rps:.2f};scan_rounds_per_s={scan_rps:.2f};"
+        f"shard_rounds_per_s={shard_rps:.2f};shards={shard_tr.shards};"
         f"speedup={scan_rps / host_rps:.2f}x;"
         f"scan_faster={scan_rps > host_rps}")
-    return {"host_rps": host_rps, "scan_rps": scan_rps}
+    return {"host_rps": host_rps, "scan_rps": scan_rps,
+            "shard_rps": shard_rps, "shards": shard_tr.shards}
 
 
-def run(csv=print, rounds=ROUNDS):
+def run(csv=print, rounds=ROUNDS, fed=None, bench_rounds=12):
+    fed = dict(FED if fed is None else fed)
     results = {}
     t0 = time.time()
-    n = FED["clients_per_round"]
+    n = fed["clients_per_round"]
 
     for name, spec in SPECS.items():
         mech = make_mechanism(spec)
-        cfg = FedConfig(rounds=rounds, **FED)
+        cfg = FedConfig(rounds=rounds, **fed)
         tr = FedTrainer(mech, cfg)
         hist = tr.train(rounds=rounds, eval_every=max(rounds // 2, 1),
                         log=lambda *_: None)
@@ -113,9 +130,42 @@ def run(csv=print, rounds=ROUNDS):
     csv(f"fig3_qmgeo,{us:.0f},"
         f"acc={qm['acc']:.3f};eps8={qm['per_round_eps8']:.3f};"
         f"trains={qm['acc'] > 0.1}")
-    results["engine"] = engine_bench(csv)
+    results["engine"] = engine_bench(csv, rounds=bench_rounds, fed=fed)
     return results
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-lane budget: fewer rounds, smaller "
+                         "population (perf trajectory, not paper claims)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (BENCH_fig3.json)")
+    args = ap.parse_args()
+
+    rounds = args.rounds or (SMOKE_ROUNDS if args.smoke else ROUNDS)
+    fed = SMOKE_FED if args.smoke else FED
+    results = run(rounds=rounds, fed=fed)
+    if args.json:
+        eng = results.pop("engine")
+        payload = {
+            "benchmark": "fig3_fl_emnist",
+            "smoke": args.smoke,
+            "rounds": rounds,
+            "backend": jax.default_backend(),
+            "engines": {
+                "host": {"rounds_per_s": eng["host_rps"]},
+                "scan": {"rounds_per_s": eng["scan_rps"]},
+                "shard": {"rounds_per_s": eng["shard_rps"],
+                          "shards": eng["shards"]},
+            },
+            "mechanisms": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print("wrote", args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

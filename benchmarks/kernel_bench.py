@@ -7,6 +7,8 @@ counter-based RNG (the reference reads ~17x the bytes).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -66,9 +68,37 @@ def run(csv=print):
     us_vmap = _time(jax.jit(vmapped), xb)
     csv(f"rqm_batched_40x25k,{us_batch:.0f},"
         f"fused_batch_vs_vmap={us_vmap/us_batch:.2f}x")
-    return {"rqm_fast_us": us_fast, "ref_us": us_ref,
-            "batch_us": us_batch, "vmap_us": us_vmap}
+    return {"rqm_fast_us": us_fast, "ref_us": us_ref, "pbm_fast_us": us_pbm,
+            "interpret_us": us_interp, "batch_us": us_batch,
+            "vmap_us": us_vmap}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (BENCH_kernels.json)")
+    args = ap.parse_args()
+    results = run()
+    if args.json:
+        payload = {
+            "benchmark": "kernel_bench",
+            "backend": jax.default_backend(),
+            "elements": N,
+            "kernels": {
+                "rqm_fused_jnp": {"us": results["rqm_fast_us"],
+                                  "elts_per_us": N / results["rqm_fast_us"]},
+                "rqm_uniforms_ref": {"us": results["ref_us"]},
+                "rqm_pallas_interpret_128k": {"us": results["interpret_us"]},
+                "pbm_fused_jnp": {"us": results["pbm_fast_us"],
+                                  "elts_per_us": N / results["pbm_fast_us"]},
+                "rqm_batched_40x25k": {"us": results["batch_us"],
+                                       "vmap_us": results["vmap_us"]},
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print("wrote", args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -59,10 +59,19 @@ def main():
                          "'name:k=v,...' spec string; the flags above act "
                          "as defaults for whatever the spec leaves unset")
     ap.add_argument("--engine", default="scan",
-                    choices=["scan", "perround", "host"],
+                    choices=["scan", "perround", "host", "shard"],
                     help="round engine: 'scan' = device-resident jitted "
-                         "blocks (fastest), 'perround' = same step driven "
+                         "blocks (fastest on one device), 'shard' = scan "
+                         "blocks sharded over all visible devices with "
+                         "encoded-domain cross-shard aggregation (see "
+                         "docs/scaling.md), 'perround' = same step driven "
                          "per round, 'host' = legacy host loop")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="engine=shard: cohort shards (default: all devices)")
+    ap.add_argument("--staging", default="full", choices=["full", "stream"],
+                    help="engine=shard: 'stream' stages only each block's "
+                         "active cohort (bounded memory for huge "
+                         "populations)")
     ap.add_argument("--out", default=None, help="write results JSON")
     args = ap.parse_args()
 
@@ -70,7 +79,7 @@ def main():
         num_clients=args.clients, clients_per_round=args.per_round,
         rounds=args.rounds, lr=args.lr, eval_size=1000,
         data_noise=1.5, data_deform=1.2,  # see benchmarks/fig3_fl_emnist.py
-        engine=args.engine,
+        engine=args.engine, shards=args.shards, staging=args.staging,
     )
     specs = (["none", "rqm", "pbm", "qmgeo"] if args.mechanism == "all"
              else [args.mechanism])

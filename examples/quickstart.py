@@ -4,7 +4,6 @@
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import RQMParams, decode_sum
 from repro.core.distribution import rqm_outcome_distribution

@@ -1,5 +1,5 @@
 """Nemotron-4 15B [dense]: GQA (48H/8kv), squared-ReLU MLP. [arXiv:2402.16819]"""
-from repro.configs.base import LayerSpec, ModelConfig, uniform_layers
+from repro.configs.base import ModelConfig, uniform_layers
 
 
 def config() -> ModelConfig:

@@ -98,11 +98,32 @@ class Mechanism:
     def encode(self, x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
         raise NotImplementedError
 
-    def encode_batch(self, x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    def encode_batch(self, x: jnp.ndarray, key: jax.Array, *,
+                     row_offset=None, total_rows: int = None) -> jnp.ndarray:
         """Stacked ``(clients, dim)`` encode; default = vmap of ``encode``
         over per-client subkeys (kernel-backed subclasses override with one
-        fused invocation over the whole batch)."""
-        keys = jax.random.split(key, x.shape[0])
+        fused invocation over the whole batch).
+
+        Shard-local slices (the "shard" round engine): ``x`` holds rows
+        ``[row_offset, row_offset + x.shape[0])`` of a conceptual
+        ``(total_rows, dim)`` cohort batch, and must draw exactly the
+        randomness those rows draw in the unsharded encode. ``row_offset``
+        may be traced (it is ``axis_index * n_per`` inside shard_map);
+        ``total_rows`` is static. Defaults preserve the unsharded
+        semantics."""
+        rows = x.shape[0]
+        if row_offset is not None and total_rows is None:
+            # without the full row count, split(key, rows) would produce the
+            # LOCAL slice's keys and the clamped dynamic_slice would silently
+            # reuse row 0's randomness — make the misuse loud instead.
+            raise ValueError("row_offset requires total_rows (the full "
+                             "cohort row count the offset indexes into)")
+        keys = jax.random.split(key, total_rows if total_rows else rows)
+        if row_offset is not None:
+            kd = jax.lax.dynamic_slice_in_dim(
+                jax.random.key_data(keys), jnp.asarray(row_offset), rows
+            )
+            keys = jax.random.wrap_key_data(kd)
         return jax.vmap(self.encode)(x, keys)
 
     def decode_sum(self, z_sum: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -139,10 +160,14 @@ class Mechanism:
         g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
         return self.encode(g, key)
 
-    def quantize_batch(self, g: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
-        """clip + batched encode for a stacked ``(clients, dim)`` input."""
+    def quantize_batch(self, g: jnp.ndarray, key: jax.Array, *,
+                       row_offset=None, total_rows: int = None) -> jnp.ndarray:
+        """clip + batched encode for a stacked ``(clients, dim)`` input
+        (``row_offset``/``total_rows``: shard-local slice, see
+        ``encode_batch``)."""
         g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
-        return self.encode_batch(g, key)
+        return self.encode_batch(g, key, row_offset=row_offset,
+                                 total_rows=total_rows)
 
     # -- introspection -------------------------------------------------------
     def spec(self) -> dict:
@@ -187,12 +212,13 @@ class RQMMechanism(Mechanism):
             return kops.rqm_fast(x, key, self.params)
         return rqm_lib.quantize(x, key, self.params)
 
-    def encode_batch(self, x, key):
+    def encode_batch(self, x, key, *, row_offset=None, total_rows=None):
         if self.use_kernel:
             from repro.kernels import ops as kops
 
-            return kops.rqm_batch(x, key, self.params)
-        return super().encode_batch(x, key)
+            return kops.rqm_batch(x, key, self.params, row_offset=row_offset)
+        return super().encode_batch(x, key, row_offset=row_offset,
+                                    total_rows=total_rows)
 
     def decode_sum(self, z_sum, n):
         return rqm_lib.decode_sum(z_sum, n, self.params)
@@ -234,12 +260,13 @@ class PBMMechanism(Mechanism):
             return kops.pbm_fast(x, key, self.params)
         return pbm_lib.quantize(x, key, self.params)
 
-    def encode_batch(self, x, key):
+    def encode_batch(self, x, key, *, row_offset=None, total_rows=None):
         if self.use_kernel:
             from repro.kernels import ops as kops
 
-            return kops.pbm_batch(x, key, self.params)
-        return super().encode_batch(x, key)
+            return kops.pbm_batch(x, key, self.params, row_offset=row_offset)
+        return super().encode_batch(x, key, row_offset=row_offset,
+                                    total_rows=total_rows)
 
     def decode_sum(self, z_sum, n):
         return pbm_lib.decode_sum(z_sum, n, self.params)
@@ -287,12 +314,13 @@ class QMGeoMechanism(Mechanism):
             return kops.qmgeo_fast(x, key, self.params)
         return qmgeo_lib.quantize(x, key, self.params)
 
-    def encode_batch(self, x, key):
+    def encode_batch(self, x, key, *, row_offset=None, total_rows=None):
         if self.use_kernel:
             from repro.kernels import ops as kops
 
-            return kops.qmgeo_batch(x, key, self.params)
-        return super().encode_batch(x, key)
+            return kops.qmgeo_batch(x, key, self.params, row_offset=row_offset)
+        return super().encode_batch(x, key, row_offset=row_offset,
+                                    total_rows=total_rows)
 
     def decode_sum(self, z_sum, n):
         return qmgeo_lib.decode_sum(z_sum, n, self.params)
@@ -330,7 +358,7 @@ class NoiseFreeMechanism(Mechanism):
     def encode(self, x, key):
         return jnp.clip(x, -self.c, self.c)
 
-    def encode_batch(self, x, key):
+    def encode_batch(self, x, key, *, row_offset=None, total_rows=None):
         return jnp.clip(x, -self.c, self.c)  # shape-agnostic; no per-client keys
 
     def decode_sum(self, g_sum, n):

@@ -69,6 +69,23 @@ def secure_sum(z: jnp.ndarray, axis_names, *, packed: bool = False) -> jnp.ndarr
     return jax.lax.psum(z, axis_names)
 
 
+def secure_sum_bounded(z: jnp.ndarray, axis_names, bound: int, *,
+                       packed: bool = True) -> jnp.ndarray:
+    """``secure_sum`` of an arbitrary-shape int level array with automatic
+    lane packing: packs two coordinates per int32 lane exactly when the
+    caller-supplied ``bound`` on the aggregated value (``mech.sum_bound(n)``
+    over the FULL cross-shard cohort n) fits the 16-bit lane, else falls
+    back to the plain psum. Packing is exact, never approximate — this
+    helper only decides width, the sum is the same integer either way.
+    ``packed=False`` forces the unpacked psum (the packed==unpacked
+    equality check the shard-engine tests assert)."""
+    if packed and 0 < bound < (1 << LANE_BITS):
+        pk, n = pack_levels(z.reshape(-1))
+        agg = jax.lax.psum(pk, axis_names)
+        return unpack_levels(agg, n).reshape(z.shape)
+    return jax.lax.psum(z, axis_names)
+
+
 def secagg_modular_sum(messages: jnp.ndarray, modulus: int) -> jnp.ndarray:
     """Host/loop-level SecAgg emulation used by the federated example driver:
     sum of per-client integer messages mod `modulus` (the crypto guarantees

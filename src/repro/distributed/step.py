@@ -18,13 +18,12 @@ Beyond-paper option (packed=True): levels are packed two-per-int32 lane
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
@@ -51,14 +50,21 @@ def compat_shard_map(body, *, mesh, in_specs, out_specs, check_vma=False):
 
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
-    """Binding of mesh axes to roles."""
+    """Binding of mesh axes to roles.
+
+    model_axis=None (or an axis the mesh doesn't have) is a pure
+    client-parallel plan — every device is a whole client group, tp == 1.
+    The federated "shard" engine (fed/loop.py) runs on exactly this plan
+    over a 1-D ("shard",) mesh."""
 
     mesh: Mesh
-    client_axes: tuple[str, ...]  # ('pod','data') or ('data',)
-    model_axis: str = "model"
+    client_axes: tuple[str, ...]  # ('pod','data'), ('data',) or ('shard',)
+    model_axis: Optional[str] = "model"
 
     @property
     def tp(self) -> int:
+        if self.model_axis is None or self.model_axis not in self.mesh.shape:
+            return 1
         return self.mesh.shape[self.model_axis]
 
     @property

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.data.emnist import IMAGE_SHAPE, NUM_CLASSES
+from repro.data.emnist import NUM_CLASSES
 
 
 def cnn_init(key, channels=(16, 32), hidden: int = 128):

@@ -8,7 +8,7 @@ SecAgg sums the integer messages (modular-sum emulation); the server
 decodes g_hat and takes the SGD step. The Renyi accountant composes the
 per-round aggregate-level epsilon across rounds.
 
-Three round engines (FedConfig.engine), same Algorithm-1 semantics:
+Four round engines (FedConfig.engine), same Algorithm-1 semantics:
 
   * ``"scan"`` (default) — the device-resident engine. All client datasets
     are staged on device ONCE at construction; client sampling is
@@ -24,6 +24,26 @@ Three round engines (FedConfig.engine), same Algorithm-1 semantics:
     stacking of client data, per-client vmap encode. Kept as the baseline
     the rounds/sec benchmark (benchmarks/fig3_fl_emnist.py) measures the
     scan engine against.
+  * ``"shard"`` — the scan engine distributed over a 1-D ``('shard',)``
+    device mesh (launch/mesh.make_shard_mesh) via shard_map: every round
+    the cohort of ``clients_per_round`` clients is sampled GLOBALLY (the
+    replicated key makes every shard compute the same ids), each shard
+    runs the identical jitted round body over its ``n/S`` cohort slice
+    (the offset-aware batched encode draws exactly the randomness its
+    rows draw in the unsharded batch), and the per-round aggregation is
+    an encoded-domain cross-shard sum — integer level indices, lane-packed
+    when safe (core/secagg.py), cross the shard boundary, never floats,
+    exactly as the mechanism's ``decode_sum``/``sum_bound`` contract
+    expects of a real SecAgg deployment. On a 1-shard mesh the engine is
+    bit-identical to ``"scan"``; on a multi-shard mesh the encoded
+    per-round sums are exactly equal (integer psum is order-free) and
+    parameters match to reduction-order tolerance (bit-equal for integer
+    mechanisms, allclose for the float 'none' baseline). Privacy is
+    accounted for the FULL cross-shard cohort ``clients_per_round``,
+    never the per-shard count. ``staging="stream"`` additionally bounds
+    host memory: only each block's active cohort is materialized and
+    shipped (sharded over the mesh), so simulated populations of 1e5-1e6
+    clients never exist in memory at once (see docs/scaling.md).
 """
 from __future__ import annotations
 
@@ -36,13 +56,19 @@ import jax
 import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from repro.core import secagg
 from repro.core.mechanisms import Mechanism
 from repro.core.renyi import RenyiAccountant
 from repro.data.federated import FederatedPartition, sample_clients
+from repro.distributed.step import MeshPlan, compat_shard_map
 from repro.fed.cnn import cnn_accuracy, cnn_init, cnn_loss
+from repro.launch.mesh import make_shard_mesh
 
-ENGINES = ("scan", "perround", "host")
+ENGINES = ("scan", "perround", "host", "shard")
+STAGINGS = ("full", "stream")
 
 
 @dataclasses.dataclass
@@ -74,6 +100,22 @@ class FedConfig:
     # only bloats compile time and program size).
     scan_block: int = 64
     scan_unroll: Optional[int] = None
+    # shard engine (engine="shard") tuning. shards=None spans every visible
+    # device; clients_per_round must divide evenly across shards. staging:
+    # "full" stages the whole population on device once (replicated, like
+    # scan); "stream" stages only each block's active cohort, sharded over
+    # the mesh — host memory stays O(scan_block * clients_per_round) client
+    # datasets regardless of num_clients. shard_packed: None = lane-pack
+    # the cross-shard level sum exactly when mech.sum_bound(n) fits 16 bits;
+    # True forces packing (raises if unsafe); False forces the plain psum.
+    shards: Optional[int] = None
+    staging: str = "full"
+    shard_packed: Optional[bool] = None
+    # Debug/test instrumentation (scan/perround/host/shard): record each
+    # round's aggregated encoded SecAgg sum on the host (trainer.round_sums)
+    # — the observable the cross-engine "exact encoded-sum equality" tests
+    # assert on.
+    collect_sums: bool = False
 
 
 class FedTrainer:
@@ -82,8 +124,39 @@ class FedTrainer:
             raise ValueError(
                 f"unknown engine {fed_cfg.engine!r}; expected one of {ENGINES}"
             )
+        if fed_cfg.staging not in STAGINGS:
+            raise ValueError(
+                f"unknown staging {fed_cfg.staging!r}; expected one of {STAGINGS}"
+            )
+        if fed_cfg.staging == "stream" and fed_cfg.engine != "shard":
+            raise ValueError("staging='stream' requires engine='shard'")
         self.mech = mech
         self.cfg = fed_cfg
+        self._mesh = None
+        self.shards = 1
+        if fed_cfg.engine == "shard":
+            self.shards = fed_cfg.shards or jax.device_count()
+            if fed_cfg.clients_per_round % self.shards:
+                raise ValueError(
+                    f"clients_per_round={fed_cfg.clients_per_round} must "
+                    f"divide across {self.shards} shards"
+                )
+            bound = mech.sum_bound(fed_cfg.clients_per_round)
+            if fed_cfg.shard_packed and not 0 < bound < (1 << secagg.LANE_BITS):
+                raise ValueError(
+                    f"shard_packed=True unsafe: full-cohort sum bound {bound} "
+                    f">= 2^{secagg.LANE_BITS} (or mechanism is not "
+                    f"integer-coded)"
+                )
+            self._mesh = make_shard_mesh(self.shards)
+            # pure client-parallel plan: every shard a whole client group
+            self._plan = MeshPlan(mesh=self._mesh, client_axes=("shard",),
+                                  model_axis=None)
+            assert self._plan.tp == 1 and self._plan.n_clients == self.shards
+        # collect_sums / streaming bookkeeping (see FedConfig)
+        self.round_sums: list = []
+        self.staged_bytes_total = 0
+        self.staged_bytes_last_block = 0
         self.partition = FederatedPartition(
             num_clients=fed_cfg.num_clients,
             samples_per_client=fed_cfg.samples_per_client,
@@ -106,14 +179,24 @@ class FedTrainer:
         # exact per-round aggregate-level eps vector comes straight from the
         # object that encodes — no second parameter hand-off to drift. All
         # rounds are identical, so it is computed once and composed
-        # additively by the accountant.
+        # additively by the accountant. Under the shard engine this is the
+        # FULL cross-shard cohort clients_per_round — the SecAgg sum spans
+        # every shard, so the mechanism's amplification-by-aggregation sees
+        # all n participants, never the n/S per-shard slice.
         self._per_round_eps = np.asarray([
             mech.per_round_epsilon(fed_cfg.clients_per_round, a)
             for a in fed_cfg.accountant_alphas
         ])
-        if fed_cfg.engine != "host":
+        if fed_cfg.engine != "host" and fed_cfg.staging != "stream":
             self._stage_clients()
         self._build_jits()
+        if self._mesh is not None:
+            # Commit the carried state to the mesh (replicated) up front:
+            # the first donated block call then compiles with the same
+            # input shardings every later call has — one compile, not two.
+            repl = NamedSharding(self._mesh, P())
+            self.flat = jax.device_put(self.flat, repl)
+            self._key = jax.device_put(self._key, repl)
 
     # -- device staging -----------------------------------------------------
     def _stage_clients(self):
@@ -130,6 +213,15 @@ class FedTrainer:
             lbls.append(lb)
         self.client_images = jnp.asarray(np.stack(imgs))
         self.client_labels = jnp.asarray(np.stack(lbls))
+        if self._mesh is not None:
+            # shard engine, full staging: the population is replicated on
+            # every shard (sampling is global, so any shard may need any
+            # client). staging="stream" is the memory-bounded alternative.
+            repl = NamedSharding(self._mesh, P())
+            self.client_images = jax.device_put(self.client_images, repl)
+            self.client_labels = jax.device_put(self.client_labels, repl)
+        self.staged_bytes_total += (self.client_images.nbytes
+                                    + self.client_labels.nbytes)
 
     # -- jitted inner pieces ------------------------------------------------
     def _build_jits(self):
@@ -177,6 +269,10 @@ class FedTrainer:
         if cfg.engine == "host":
             return
 
+        if cfg.engine == "shard":
+            self._build_shard_engine(client_grad)
+            return
+
         # Device-resident round step, shared verbatim by "perround" and
         # "scan". The trailing optimization_barrier pins the round boundary:
         # XLA cannot fuse one round's float math into the next, so the body
@@ -200,9 +296,10 @@ class FedTrainer:
             z = mech.quantize_batch(grads, k_enc)
             z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
             g_hat = mech.decode_sum(z_sum, cfg.clients_per_round)
-            return jax.lax.optimization_barrier(flat - cfg.lr * g_hat), key
+            return jax.lax.optimization_barrier(flat - cfg.lr * g_hat), key, z_sum
 
         self._round_jit = jax.jit(round_step)
+        collect = cfg.collect_sums
 
         def block_fn(flat, key, images, labels, length):
             unroll = cfg.scan_unroll
@@ -214,18 +311,157 @@ class FedTrainer:
 
             def body(carry, _):
                 f, k = carry
-                f, k = round_step(f, k, images, labels)
-                return (f, k), None
+                f, k, z_sum = round_step(f, k, images, labels)
+                return (f, k), (z_sum if collect else None)
 
-            (flat, key), _ = jax.lax.scan(
+            (flat, key), sums = jax.lax.scan(
                 body, (flat, key), None, length=length,
                 unroll=min(unroll, length),
             )
-            return flat, key
+            return flat, key, sums
 
         self._run_block_jit = jax.jit(
             block_fn, static_argnums=(4,), donate_argnums=(0,)
         )
+
+    # -- the shard engine ----------------------------------------------------
+    def _build_shard_engine(self, client_grad):
+        """Blocks of rounds over the ('shard',) mesh (see module docstring).
+
+        Per round, inside shard_map: replicated global cohort sampling ->
+        per-shard gradient+encode over the shard's n/S cohort slice (the
+        row_offset keeps the RNG counters identical to the unsharded batch)
+        -> per-shard partial integer sum -> ONE cross-shard secure_sum of
+        packed level indices -> replicated decode + SGD step. The only
+        tensor that crosses the shard boundary is the encoded partial sum.
+        """
+        cfg, mech = self.cfg, self.mech
+        n = cfg.clients_per_round
+        n_per = n // self.shards
+        bound = mech.sum_bound(n)  # safety of forced packing checked in init
+        prefer_packed = cfg.shard_packed is None or cfg.shard_packed
+        streamed = cfg.staging == "stream"
+        collect = cfg.collect_sums
+
+        # On a 1-shard mesh the shard-local slice IS the whole cohort and
+        # the RNG row offset IS zero: specialize them away statically so
+        # the round body traces to exactly the scan engine's program (the
+        # bit-identity contract for free, and none of the dynamic-slice /
+        # traced-offset overhead on single-device runs — the CI bench lane
+        # measures this case). Multi-shard meshes take the generic path.
+        multi = self.shards > 1
+
+        def round_step(flat, key, images, labels):
+            # Identical key evolution to the scan engine's round_step: the
+            # key is replicated, so every shard derives the same k_sample /
+            # k_enc and (in staged mode) the same global cohort ids.
+            key, k_sample, k_enc = jax.random.split(key, 3)
+            j = jax.lax.axis_index("shard") if multi else 0
+            if streamed:
+                # the block staging already gathered this round's cohort in
+                # sampled order and sharded it over the mesh; k_sample was
+                # consumed on the host to pick it (bit-identical replay).
+                local_im, local_lb = images, labels
+            else:
+                ids = jax.random.choice(
+                    k_sample, cfg.num_clients, (n,), replace=False,
+                )
+                if multi:
+                    ids = jax.lax.dynamic_slice_in_dim(ids, j * n_per, n_per)
+                local_im, local_lb = images[ids], labels[ids]
+            grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
+                flat, local_im, local_lb
+            )
+            z = mech.quantize_batch(
+                grads, k_enc,
+                row_offset=j * n_per if multi else None,
+                total_rows=n if multi else None,
+            )
+            z_part = jnp.sum(z, axis=0, dtype=z.dtype)  # shard-local partial
+            # The SecAgg boundary: integer level indices cross shards,
+            # lane-packed two-per-int32 word when the full-cohort sum bound
+            # allows (exact either way). The float 'none' baseline has
+            # bound 0 and takes the plain psum.
+            z_sum = secagg.secure_sum_bounded(
+                z_part, ("shard",), bound, packed=prefer_packed
+            )
+            g_hat = mech.decode_sum(z_sum, n)
+            return jax.lax.optimization_barrier(flat - cfg.lr * g_hat), key, z_sum
+
+        def make_block(length):
+            unroll = cfg.scan_unroll
+            if unroll is None:
+                unroll = length if jax.default_backend() == "cpu" else 1
+
+            def block(flat, key, images, labels):
+                def body(carry, xs):
+                    f, k = carry
+                    im, lb = xs if streamed else (images, labels)
+                    f, k, z_sum = round_step(f, k, im, lb)
+                    return (f, k), (z_sum if collect else None)
+
+                xs = (images, labels) if streamed else None
+                (flat, key), sums = jax.lax.scan(
+                    body, (flat, key), xs, length=length,
+                    unroll=min(unroll, length),
+                )
+                if collect:
+                    return flat, key, sums
+                return flat, key
+
+            data_spec = P(None, "shard") if streamed else P()
+            out_specs = (P(), P(), P()) if collect else (P(), P())
+            mapped = compat_shard_map(
+                block,
+                mesh=self._mesh,
+                in_specs=(P(), P(), data_spec, data_spec),
+                out_specs=out_specs,
+            )
+            return jax.jit(mapped, donate_argnums=(0,))
+
+        self._shard_blocks: dict = {}
+        self._make_shard_block = make_block
+
+    def _shard_block_jit(self, length: int):
+        if length not in self._shard_blocks:
+            self._shard_blocks[length] = self._make_shard_block(length)
+        return self._shard_blocks[length]
+
+    def _stage_stream_block(self, length: int):
+        """Streaming-cohort staging: materialize ONLY the next ``length``
+        rounds' sampled cohorts (replaying the device key stream on the
+        host — jax.random is deterministic in or out of jit) and ship them
+        sharded over the mesh. Host + device footprint per block is
+        O(length * clients_per_round) client datasets, independent of
+        num_clients — 1e5-1e6 simulated clients never exist at once."""
+        cfg = self.cfg
+        n = cfg.clients_per_round
+        key = self._key
+        ids_rounds = np.empty((length, n), np.int64)
+        for t in range(length):
+            key, k_sample, _ = jax.random.split(key, 3)
+            ids_rounds[t] = np.asarray(jax.random.choice(
+                k_sample, cfg.num_clients, (n,), replace=False,
+            ))
+        imgs = lbls = None
+        cache: dict = {}  # client data is deterministic — dedup within block
+        for t in range(length):
+            for u, cid in enumerate(ids_rounds[t]):
+                cid = int(cid)
+                if cid not in cache:
+                    cache[cid] = self.partition.client_data(cid)
+                im, lb = cache[cid]
+                if imgs is None:
+                    # geometry/dtype come from the data pipeline itself, so
+                    # streamed staging can never drift from _stage_clients
+                    imgs = np.empty((length, n) + im.shape, im.dtype)
+                    lbls = np.empty((length, n) + lb.shape, lb.dtype)
+                imgs[t, u], lbls[t, u] = im, lb
+        self.staged_bytes_last_block = imgs.nbytes + lbls.nbytes
+        self.staged_bytes_total += self.staged_bytes_last_block
+        shard = NamedSharding(self._mesh, P(None, "shard"))
+        return (jax.device_put(jnp.asarray(imgs), shard),
+                jax.device_put(jnp.asarray(lbls), shard))
 
     # -- privacy accounting -------------------------------------------------
     def attach_params(self, mech_params=None):
@@ -258,8 +494,12 @@ class FedTrainer:
 
     # -- the loop -----------------------------------------------------------
     def round(self, t: int):
-        """Advance one round (perround/host engines; scan uses run_block)."""
+        """Advance one round (perround/host engines; scan/shard use
+        run_block — calling round() there advances a 1-round block)."""
         cfg = self.cfg
+        if cfg.engine in ("scan", "shard"):
+            self.run_block(1)
+            return
         if cfg.engine == "host":
             ids = sample_clients(self._rng, cfg.num_clients, cfg.clients_per_round)
             images = np.stack([self.partition.client_data(i)[0] for i in ids])
@@ -271,35 +511,62 @@ class FedTrainer:
             z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
             g_hat = self._decode(z_sum, cfg.clients_per_round)
             self.flat = self.flat - cfg.lr * g_hat
+            if cfg.collect_sums:
+                self.round_sums.append(np.asarray(z_sum))
         else:
-            self.flat, self._key = self._round_jit(
+            self.flat, self._key, z_sum = self._round_jit(
                 self.flat, self._key, self.client_images, self.client_labels
             )
+            if cfg.collect_sums:
+                self.round_sums.append(np.asarray(z_sum))
         self._account(1)
 
     def run_block(self, rounds: int):
-        """Advance ``rounds`` rounds inside jitted scan blocks (scan engine).
+        """Advance ``rounds`` rounds inside jitted blocks (scan and shard
+        engines).
 
         The flat parameter buffer is donated to each call, so blocks update
         parameters in place with no per-round dispatch. Blocks longer than
         cfg.scan_block are split into chunks (compile-time bound; each
-        distinct chunk length compiles once and is then reused)."""
-        if self.cfg.engine != "scan":
-            raise ValueError(f"run_block requires engine='scan', "
+        distinct chunk length compiles once and is then reused). Under the
+        shard engine each chunk is one shard_map call over the mesh; with
+        staging="stream" the chunk's cohort is staged just-in-time."""
+        if self.cfg.engine not in ("scan", "shard"):
+            raise ValueError(f"run_block requires engine='scan' or 'shard', "
                              f"got {self.cfg.engine!r}")
         done = 0
         while done < rounds:
             step = min(self.cfg.scan_block, rounds - done)
-            self.flat, self._key = self._run_block_jit(
-                self.flat, self._key, self.client_images, self.client_labels,
-                step,
-            )
+            if self.cfg.engine == "shard":
+                if self.cfg.staging == "stream":
+                    images, labels = self._stage_stream_block(step)
+                else:
+                    images, labels = self.client_images, self.client_labels
+                out = self._shard_block_jit(step)(
+                    self.flat, self._key, images, labels
+                )
+            else:
+                out = self._run_block_jit(
+                    self.flat, self._key, self.client_images,
+                    self.client_labels, step,
+                )
+            if self.cfg.collect_sums:
+                self.flat, self._key, sums = out
+                self.round_sums.extend(np.asarray(sums))
+            else:
+                self.flat, self._key = out[0], out[1]
             done += step
         self._account(rounds)
 
     def evaluate(self):
-        acc = float(self._eval(self.flat, self.eval_images, self.eval_labels))
-        loss = float(self._eval_loss(self.flat, self.eval_images, self.eval_labels))
+        flat = self.flat
+        if self._mesh is not None:
+            # the shard engine leaves flat committed (replicated) on the
+            # mesh; evaluate on an uncommitted host copy so the eval jit
+            # never mixes device sets with the single-device eval arrays.
+            flat = jnp.asarray(np.asarray(flat))
+        acc = float(self._eval(flat, self.eval_images, self.eval_labels))
+        loss = float(self._eval_loss(flat, self.eval_images, self.eval_labels))
         return {"accuracy": acc, "loss": loss}
 
     def train(self, rounds: Optional[int] = None, eval_every: int = 25, log=print):
@@ -314,7 +581,7 @@ class FedTrainer:
             log(f"[{self.mech.name}] round {done:4d} "
                 f"loss={m['loss']:.4f} acc={m['accuracy']:.4f}")
 
-        if self.cfg.engine == "scan":
+        if self.cfg.engine in ("scan", "shard"):
             done = 0
             while done < rounds:
                 block = min(eval_every, rounds - done)

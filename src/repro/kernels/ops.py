@@ -16,12 +16,22 @@ Every mechanism kernel gets the same three entry points, built once by
     this is the hot path on CPU and what the dry-run lowers — pallas
     interpret mode would unroll its grid into a python loop, which is both
     slow and unrepresentative in compiled HLO.
-  * ``<name>_batch(x, key, params)`` — ``_fast`` restricted to a stacked
-    ``(clients, dim)`` batch, the shape the federated round engine
-    produces: one fused invocation whose RNG spans the flattened batch, so
-    every client row draws independent randomness from one per-round seed
-    and the output inherits the kernel<->mechanism parity contract on the
-    flattened input (see kernels/ref.py).
+  * ``<name>_batch(x, key, params, row_offset=...)`` — ``_fast`` restricted
+    to a stacked ``(clients, dim)`` batch, the shape the federated round
+    engine produces: one fused invocation whose RNG spans the flattened
+    batch, so every client row draws independent randomness from one
+    per-round seed and the output inherits the kernel<->mechanism parity
+    contract on the flattened input (see kernels/ref.py).
+
+Shard-local batches (the "shard" round engine): when a cohort of n clients
+is split across a device mesh, each shard encodes only its (n/S, dim) slice
+but must draw the SAME randomness those rows would draw in the full (n, dim)
+batch. ``row_offset`` (a traced scalar — it is ``axis_index * n_per`` inside
+shard_map) shifts the counter-based RNG by ``row_offset * dim`` elements, so
+shard-local encodes are bit-identical to the corresponding rows of the
+unsharded batch encode. Offset encodes always take the fused-jnp path (the
+Pallas grid derives its counters from the program id alone); on this
+container that is the production path anyway.
 """
 from __future__ import annotations
 
@@ -31,8 +41,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grid import RQMParams
-from repro.core.pbm import PBMParams
-from repro.core.qmgeo import QMGeoParams
 from repro.kernels import pbm_kernel, qmgeo_kernel, rqm_kernel
 from repro.kernels.rqm_kernel import LANE, pick_block_rows
 
@@ -83,22 +91,38 @@ def _make_fast_ops(quantize_2d, block_fn, name: str):
         return z.reshape(x.shape)
 
     @functools.partial(jax.jit, static_argnames=("params",))
-    def _flat_jnp(x_flat, seed, params):
-        z = block_fn(x_flat.reshape(1, -1), seed, jnp.uint32(0), params)
+    def _flat_jnp(x_flat, seed, offset, params):
+        z = block_fn(x_flat.reshape(1, -1), seed, offset, params)
         return z.reshape(-1)
 
-    def fast(x, key, params):
-        """Pallas kernel on TPU, the fused jnp path elsewhere (bit-identical)."""
-        if jax.default_backend() == "tpu":
-            return pallas(x, key, params)
-        seed = key_to_seed(key)
-        return _flat_jnp(x.reshape(-1), seed, params).reshape(x.shape)
+    def fast(x, key, params, *, offset=None):
+        """Pallas kernel on TPU, the fused jnp path elsewhere (bit-identical).
 
-    def batch(x, key, params):
-        """Kernel-backed encode for a stacked ``(clients, dim)`` batch."""
+        offset: optional (traced) element offset into the counter-based RNG
+        stream — element i of ``x`` draws the randomness element ``offset+i``
+        of a larger flat input would draw. Offset encodes always use the
+        fused path (see module docstring)."""
+        if offset is None:
+            if jax.default_backend() == "tpu":
+                return pallas(x, key, params)
+            offset = jnp.uint32(0)
+        seed = key_to_seed(key)
+        offset = jnp.asarray(offset).astype(jnp.uint32)
+        return _flat_jnp(x.reshape(-1), seed, offset, params).reshape(x.shape)
+
+    def batch(x, key, params, *, row_offset=None):
+        """Kernel-backed encode for a stacked ``(clients, dim)`` batch.
+
+        row_offset: optional (traced) row offset — this batch plays rows
+        ``[row_offset, row_offset + clients)`` of a larger stacked batch
+        encoded with the same key (the shard engine's per-shard slice)."""
         if x.ndim != 2:
             raise ValueError(f"{name}_batch expects (clients, dim), got {x.shape}")
-        return fast(x, key, params)
+        offset = None
+        if row_offset is not None:
+            offset = (jnp.asarray(row_offset).astype(jnp.uint32)
+                      * jnp.uint32(x.shape[1]))
+        return fast(x, key, params, offset=offset)
 
     pallas.__name__, fast.__name__, batch.__name__ = (
         name, f"{name}_fast", f"{name}_batch")

@@ -141,7 +141,6 @@ def model_flops(cfg, shape, tp: int = 1) -> float:
     n_total = sum(n / dup for n, dup in leaves)
 
     if cfg.moe is not None:
-        moe_meta = None
         # expert leaves: (tp, e_l, D, F) ... identified by utilization factor
         expert_n = 0
         for m in jax.tree_util.tree_leaves(meta_tree, is_leaf=meta_lib.is_meta):

@@ -50,5 +50,21 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     return compat_make_mesh(shape, axes)
 
 
+def make_shard_mesh(shards: int = None):
+    """1-D ('shard',) mesh for the federated "shard" round engine: each
+    device (or fake host device) is one cohort shard, no model axis.
+    shards=None uses every visible device. A 1-shard mesh is always
+    buildable and is the engine's scan-equivalent degenerate case."""
+    if shards is None:
+        shards = jax.device_count()
+    if shards > jax.device_count():
+        raise ValueError(
+            f"shard mesh wants {shards} devices, have {jax.device_count()} "
+            f"(on CPU export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{shards} before importing jax)"
+        )
+    return compat_make_mesh((shards,), ("shard",))
+
+
 def client_axes_of(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -13,15 +13,13 @@ Two modes:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save
-from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.configs.base import InputShape
 from repro.configs.registry import get_config
 from repro.core.mechanisms import make_mechanism, mechanism_names
 from repro.data.lm import TokenPipeline
@@ -60,7 +58,9 @@ def main():
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--mesh-shape", default=None,
-                    help="e.g. 2x2 => (data,model); 2x2x2 => (pod,data,model)")
+                    help="e.g. 2x2 => (data,model); 2x2x2 => (pod,data,model); "
+                         "a single number N is sugar for Nx1: pure client "
+                         "parallelism over (data,) with a trivial model axis")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -74,11 +74,20 @@ def main():
         args.mechanism, c=args.clip, m=args.m, q=args.q,
         delta_ratio=args.delta_ratio,
     )
-    n_clients = 1
+    plan = None
     if args.mesh_shape:
         dims = tuple(int(x) for x in args.mesh_shape.split("x"))
+        if len(dims) == 1:
+            # pure client parallelism: a trivial size-1 model axis keeps
+            # the param pspecs (which name 'model') valid on this mesh
+            dims = (dims[0], 1)
         names = ("pod", "data", "model")[-len(dims):]
-        n_clients = int(np.prod([d for d, n in zip(dims, names) if n != "model"]))
+        mesh = compat_make_mesh(dims, names)
+        plan = MeshPlan(
+            mesh=mesh,
+            client_axes=tuple(a for a in names if a != "model"),
+        )
+    n_clients = plan.n_clients if plan else 1
     # Self-accounting (Mechanism API v2): the step's privacy comes from the
     # very mechanism object that encodes. RDP composes additively over steps.
     eps = round_privacy(mech, n_clients, alphas=(8.0,))[8.0]
@@ -90,9 +99,8 @@ def main():
     pipe = TokenPipeline(cfg, args.seq, args.batch, seed=args.seed)
     key = jax.random.key(args.seed)
 
-    if args.mesh_shape:
-        mesh = compat_make_mesh(dims, names)
-        plan = MeshPlan(mesh=mesh, client_axes=tuple(n for n in names if n != "model"))
+    if plan is not None:
+        mesh = plan.mesh
         step_fn, specs = make_train_step(
             cfg, plan, mech, opt, lr_fn, shape, packed=args.packed,
             compute_dtype=jnp.float32,

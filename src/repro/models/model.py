@@ -12,7 +12,6 @@ Parameter pytree (mirrored by param_meta/init_params):
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.attention import squeeze_tp
-from repro.models.common import ParallelCtx, dense_init, rms_norm
+from repro.models.common import ParallelCtx, dense_init
 
 
 @dataclasses.dataclass(frozen=True)

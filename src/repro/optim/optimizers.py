@@ -7,7 +7,7 @@ of the optimizer state is derived from the model's Meta tree).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

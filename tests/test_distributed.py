@@ -60,7 +60,7 @@ def test_mesh_plan_geometry():
 
 def test_attn_sharding_plans():
     """Geometry table for every assigned arch at tp=16."""
-    from repro.configs.registry import ARCH_IDS, get_config
+    from repro.configs.registry import get_config
     from repro.models.common import plan_attn_sharding
 
     expect = {

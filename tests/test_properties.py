@@ -11,7 +11,7 @@ from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import rqm
 from repro.core.distribution import rqm_outcome_distribution
-from repro.core.grid import RQMParams, decode_sum, encode_value
+from repro.core.grid import RQMParams, decode_sum
 from repro.core.renyi import renyi_divergence
 from repro.core.secagg import max_clients_for_packing, pack_levels, unpack_levels
 

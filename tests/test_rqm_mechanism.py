@@ -12,11 +12,10 @@ from repro.core.distribution import (
     pbm_outcome_distribution,
     rqm_outcome_distribution,
 )
-from repro.core.grid import RQMParams, decode_sum, encode_value
+from repro.core.grid import RQMParams, decode_sum
 from repro.core.pbm import PBMParams
 from repro.core.renyi import (
     pbm_aggregate_epsilon,
-    renyi_divergence,
     rqm_aggregate_epsilon,
     rqm_pairwise_divergence,
 )

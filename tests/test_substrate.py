@@ -1,7 +1,5 @@
 """Substrate tests: data pipelines, checkpointing, optimizers, schedules,
 federated loop integration."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,8 +12,8 @@ from repro.data.emnist import NUM_CLASSES, SyntheticEMNIST
 from repro.data.federated import FederatedPartition, sample_clients
 from repro.data.lm import TokenPipeline
 from repro.fed.loop import FedConfig, FedTrainer
-from repro.optim import adam, make_optimizer, momentum, sgd
-from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+from repro.optim import adam, make_optimizer
+from repro.optim.schedules import cosine_decay, warmup_cosine
 
 
 class TestEMNIST:
