@@ -1,0 +1,157 @@
+"""Budget-driven tradeoff sweep: target epsilon -> calibrated mechanism ->
+accuracy, for all three private families AT EQUAL PRIVACY.
+
+This is the figure the paper cannot draw but a production service lives
+by: instead of sweeping mechanism knobs and reading off (eps, acc) pairs
+at incomparable privacy levels, each point here fixes the total
+(eps, delta)-DP budget, solves every family's knob for it with the exact
+inverse accountant (repro.privacy.calibrate), trains under that budget
+(the trainer halts at exhaustion), and reports accuracy — so the curves
+are directly comparable: same budget, best accuracy wins.
+
+Also the calibration-path perf trajectory for the CI bench lane
+(--smoke --json BENCH_budget.json): per-target calibration seconds,
+accountant evaluations, and privacy-cache hit rates — the numbers the
+memo/disk cache (repro.privacy.cache) is supposed to move.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.fed.loop import FedConfig, FedTrainer
+from repro.privacy.cache import global_cache
+from repro.privacy.calibrate import DEFAULT_ALPHAS, CalibrationError, calibrate
+
+C = 0.02
+FAMILIES = ("rqm", "pbm", "qmgeo")
+TARGETS = (15.0, 30.0, 60.0)
+FED = dict(num_clients=300, clients_per_round=20, lr=1.0, eval_size=800,
+           samples_per_client=20, data_noise=1.5, data_deform=1.2)
+ROUNDS = 120
+# --smoke: the CI bench lane's budget (perf trajectory, not paper claims)
+SMOKE_TARGETS = (30.0, 60.0)
+SMOKE_FED = dict(num_clients=80, clients_per_round=8, lr=1.0, eval_size=200,
+                 samples_per_client=20, data_noise=1.5, data_deform=1.2)
+SMOKE_ROUNDS = 16
+
+
+def run(csv=print, targets=TARGETS, rounds=ROUNDS, fed=None, delta=1e-5,
+        raise_on_violation=True):
+    fed = dict(FED if fed is None else fed)
+    n = fed["clients_per_round"]
+    cache = global_cache()
+    results = {}
+    violations = []
+    for target in targets:
+        row = {}
+        for fam in FAMILIES:
+            h0, c0 = cache.hits, cache.computes
+            t0 = time.time()
+            try:
+                cal = calibrate(fam, target_eps=target, target_delta=delta,
+                                rounds=rounds, cohort=n, c=C)
+            except CalibrationError as e:
+                csv(f"fig_budget[{fam};eps={target:g}],0,"
+                    f"unreachable;achievable={e.achievable[0]:.3g}.."
+                    f"{e.achievable[1]:.3g}")
+                continue
+            cal_s = time.time() - t0
+            # the trainer accounts on the SAME alpha grid the calibration
+            # optimized over, so the run spends exactly the calibrated eps
+            tr = FedTrainer(cal.mechanism, FedConfig(
+                rounds=rounds, budget_eps=target, budget_delta=delta,
+                accountant_alphas=tuple(DEFAULT_ALPHAS), **fed,
+            ))
+            hist = tr.train(rounds=rounds, eval_every=max(rounds // 2, 1),
+                            log=lambda *_: None)
+            spent, remaining = tr.budget_spent()
+            row[fam] = {
+                "acc": hist[-1]["accuracy"],
+                "loss": hist[-1]["loss"],
+                "knob": cal.knob,
+                "value": cal.value,
+                "calibrated_eps": cal.epsilon,
+                "eps_spent": spent,
+                "rounds_run": tr.accountant.rounds,
+                "calibration_seconds": cal_s,
+                "accountant_evals": cal.iterations,
+                "cache_hits": cache.hits - h0,
+                "cache_computes": cache.computes - c0,
+            }
+            r = row[fam]
+            csv(f"fig_budget[{fam};eps={target:g}],{cal_s*1e6:.0f},"
+                f"acc={r['acc']:.4f};{cal.knob}={cal.value:.4g};"
+                f"spent={spent:.2f};rounds={r['rounds_run']};"
+                f"cache={r['cache_hits']}h/{r['cache_computes']}c")
+            # Budget contract: never exceed the target, land within 1% of
+            # it, and (matched alpha grids) afford every calibrated round.
+            # Violations are RECORDED and raised after the full sweep, so
+            # one bad family never truncates the CSV/JSON trajectory (and
+            # `python -O` cannot silence the check).
+            if spent > target + 1e-9:
+                violations.append(f"{fam}@eps={target:g}: spent {spent} "
+                                  f"EXCEEDS the target")
+            if cal.epsilon < 0.99 * target:
+                violations.append(f"{fam}@eps={target:g}: calibrated eps "
+                                  f"{cal.epsilon} below the 1%-under window")
+            if tr.accountant.rounds != rounds:
+                violations.append(f"{fam}@eps={target:g}: only "
+                                  f"{tr.accountant.rounds}/{rounds} rounds "
+                                  f"afforded despite matched alpha grids")
+        results[target] = row
+    if violations:
+        for v in violations:
+            csv(f"fig_budget_VIOLATION,0,{v}")
+        if raise_on_violation:
+            raise RuntimeError("budget contract violated:\n"
+                               + "\n".join(violations))
+    results["_violations"] = violations
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-lane budget: fewer targets/rounds, "
+                         "smaller population")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--delta", type=float, default=1e-5)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (BENCH_budget.json)")
+    args = ap.parse_args()
+
+    targets = SMOKE_TARGETS if args.smoke else TARGETS
+    rounds = args.rounds or (SMOKE_ROUNDS if args.smoke else ROUNDS)
+    fed = SMOKE_FED if args.smoke else FED
+    t0 = time.time()
+    # write the JSON artifact even on contract violations (recorded in it),
+    # then exit nonzero so the bench lane still fails loudly
+    results = run(targets=targets, rounds=rounds, fed=fed, delta=args.delta,
+                  raise_on_violation=False)
+    violations = results.pop("_violations")
+    if args.json:
+        payload = {
+            "benchmark": "fig_budget",
+            "smoke": args.smoke,
+            "rounds": rounds,
+            "delta": args.delta,
+            "backend": jax.default_backend(),
+            "seconds_total": round(time.time() - t0, 2),
+            "cache": global_cache().stats(),
+            "violations": violations,
+            "targets": {str(t): r for t, r in results.items()},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print("wrote", args.json)
+    if violations:
+        raise SystemExit(f"budget contract violated ({len(violations)}): "
+                         + "; ".join(violations))
+
+
+if __name__ == "__main__":
+    main()

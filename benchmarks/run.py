@@ -14,7 +14,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig45,fig3,kernels,qopt,roofline")
+                    help="comma list: fig2,fig45,fig3,budget,kernels,qopt,"
+                         "roofline")
     ap.add_argument("--fl-rounds", type=int, default=120)
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
@@ -40,6 +41,12 @@ def main() -> None:
         from benchmarks import fig3_fl_emnist
 
         fig3_fl_emnist.run(rounds=args.fl_rounds)
+    if want("budget"):
+        from benchmarks import fig_budget
+
+        fig_budget.run(targets=fig_budget.SMOKE_TARGETS,
+                       rounds=fig_budget.SMOKE_ROUNDS,
+                       fed=fig_budget.SMOKE_FED)
     if want("qopt"):
         from benchmarks import beyond_qopt
 

@@ -14,21 +14,65 @@ A few hundred rounds on CPU:
 Privacy is SELF-ACCOUNTED: the mechanism object that encodes also answers
 ``per_round_epsilon(n, alpha)``, so the reported accuracy-vs-epsilon
 tradeoff is computed from the exact parameters that produced the updates.
+
+Backwards mode (--target-eps): instead of specifying privacy knobs, give a
+budget and let repro.privacy.calibrate solve each family's knob so the
+whole run composes to the target (eps, --target-delta)-DP; the trainer
+then logs the remaining budget and halts at exhaustion. Realistic cohorts:
+--subsampling poisson samples each client i.i.d. per round, --dropout
+drops selected clients i.i.d. — accounting composes at the realized size.
+
+  PYTHONPATH=src python examples/fl_emnist.py --rounds 300 \\
+      --target-eps 30 --subsampling poisson --dropout 0.1
 """
 import argparse
 import json
 
-from repro.core.mechanisms import make_mechanism, mechanism_names
+from repro.core.mechanisms import (
+    accepted_options,
+    make_mechanism,
+    mechanism_names,
+    parse_mechanism_spec,
+)
 from repro.fed.loop import FedConfig, FedTrainer
+from repro.privacy.calibrate import DEFAULT_ALPHAS, calibrate, calibration_knobs
 
 
-def run_one(spec, fcfg, **defaults):
-    """One mechanism end-to-end: build from the spec, train with the
-    configured round engine, report the mechanism's own accounting."""
-    mech = make_mechanism(spec, **defaults)
+def run_one(spec, fcfg, target_eps=None, **defaults):
+    """One mechanism end-to-end: build from the spec (or calibrate the
+    family to --target-eps), train with the configured round engine,
+    report the mechanism's own accounting."""
+    calibrated = None
+    name, explicit = parse_mechanism_spec(spec)
+    if target_eps is not None and name in calibration_knobs():
+        # spec strings participate too: inline options become fixed
+        # calibration options — fixing the knob itself inside the spec
+        # conflicts with solving for it, and calibrate() raises on it
+        knob = calibration_knobs()[name]
+        opts = {k: v for k, v in defaults.items()
+                if k in accepted_options(name) and k != knob.option}
+        opts.update(explicit)
+        calibrated = calibrate(
+            name, target_eps=target_eps, target_delta=fcfg.budget_delta,
+            rounds=fcfg.rounds, cohort=fcfg.clients_per_round, **opts,
+        )
+        mech = calibrated.mechanism
+        print(f"[{name}] calibrated: {calibrated.describe()}")
+    else:
+        mech = make_mechanism(spec, **defaults)
     tr = FedTrainer(mech, fcfg)
     hist = tr.train(eval_every=25)
     out = {"mechanism": mech.name, "spec": mech.describe(), "history": hist}
+    if calibrated is not None:
+        out["calibration"] = {
+            "target_eps": calibrated.target_eps, "knob": calibrated.knob,
+            "value": calibrated.value, "epsilon": calibrated.epsilon,
+        }
+    if tr.realized_n and min(tr.realized_n) != max(tr.realized_n):
+        out["realized_cohorts"] = {
+            "min": min(tr.realized_n), "max": max(tr.realized_n),
+            "mean": sum(tr.realized_n) / len(tr.realized_n),
+        }
     per_round = mech.per_round_epsilon(fcfg.clients_per_round, 8.0)
     if per_round > 0:
         out["per_round_eps_alpha8"] = per_round
@@ -72,6 +116,22 @@ def main():
                     help="engine=shard: 'stream' stages only each block's "
                          "active cohort (bounded memory for huge "
                          "populations)")
+    ap.add_argument("--subsampling", default="fixed",
+                    choices=["fixed", "poisson"],
+                    help="cohort realization: 'poisson' includes each "
+                         "client i.i.d. at rate per_round/clients; the "
+                         "accountant composes each round at its REALIZED "
+                         "cohort size (docs/privacy.md)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="i.i.d. per-selected-client dropout probability; "
+                         "survivors are what the round is accounted at")
+    ap.add_argument("--target-eps", type=float, default=None,
+                    help="calibrate each private mechanism family to this "
+                         "total (eps, --target-delta)-DP budget over "
+                         "--rounds rounds (privacy knobs --q/--theta/--r "
+                         "are then solved for, and the trainer halts at "
+                         "budget exhaustion)")
+    ap.add_argument("--target-delta", type=float, default=1e-5)
     ap.add_argument("--out", default=None, help="write results JSON")
     args = ap.parse_args()
 
@@ -80,12 +140,19 @@ def main():
         rounds=args.rounds, lr=args.lr, eval_size=1000,
         data_noise=1.5, data_deform=1.2,  # see benchmarks/fig3_fl_emnist.py
         engine=args.engine, shards=args.shards, staging=args.staging,
+        subsampling=args.subsampling, dropout=args.dropout,
+        budget_eps=args.target_eps, budget_delta=args.target_delta,
+        # budget mode: account on the same alpha grid calibration optimizes
+        # over, so the run can afford exactly the calibrated round count
+        accountant_alphas=(tuple(DEFAULT_ALPHAS) if args.target_eps is not None
+                           else FedConfig.accountant_alphas),
     )
     specs = (["none", "rqm", "pbm", "qmgeo"] if args.mechanism == "all"
              else [args.mechanism])
     defaults = dict(c=args.clip, m=args.m, q=args.q,
                     delta_ratio=args.delta_ratio, theta=args.theta, r=args.r)
-    results = [run_one(s, fcfg, **defaults) for s in specs]
+    results = [run_one(s, fcfg, target_eps=args.target_eps, **defaults)
+               for s in specs]
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2)

@@ -81,6 +81,18 @@ def mechanism_names() -> tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
+def accepted_options(name: str) -> frozenset:
+    """The option names ``make_mechanism`` accepts for a registered
+    mechanism (its ``from_options`` keywords) — lets CLI surfaces filter a
+    shared flag pool down to one family (launch/train.py, calibration)."""
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown mechanism {name!r}; registered: {', '.join(_REGISTRY)}"
+        )
+    return frozenset(inspect.signature(cls.from_options).parameters)
+
+
 class Mechanism:
     """Base interface + shared clip->encode dispatch.
 

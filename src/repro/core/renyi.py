@@ -22,6 +22,7 @@ from repro.core.distribution import (
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
 from repro.core.qmgeo import QMGeoParams
+from repro.privacy.cache import cached_epsilon
 
 _EPS = 1e-300
 
@@ -93,44 +94,69 @@ def aggregate_renyi_divergence(
 def rqm_aggregate_epsilon(
     params: RQMParams, n: int, alpha: float, seed: int = 0
 ) -> float:
-    """Worst-case aggregate Renyi-DP epsilon of RQM with n devices."""
-    x, xp = worst_case_inputs(params.c, n, seed)
-    return aggregate_renyi_divergence(
-        lambda v: rqm_outcome_distribution(v, params), x, xp, alpha
-    )
+    """Worst-case aggregate Renyi-DP epsilon of RQM with n devices.
+
+    Memoized through the privacy cache (repro.privacy.cache): calibration
+    bisections and the fig2/fig45/fig_budget sweeps revisit identical
+    (params, n, alpha) points, and the n-fold convolution runs once.
+    """
+
+    def compute():
+        x, xp = worst_case_inputs(params.c, n, seed)
+        return aggregate_renyi_divergence(
+            lambda v: rqm_outcome_distribution(v, params), x, xp, alpha
+        )
+
+    return cached_epsilon("rqm", params, n, alpha, seed, compute)
 
 
 def pbm_aggregate_epsilon(
     params: PBMParams, n: int, alpha: float, seed: int = 0
 ) -> float:
-    """Worst-case aggregate Renyi-DP epsilon of PBM with n devices."""
-    x, xp = worst_case_inputs(params.c, n, seed)
-    return aggregate_renyi_divergence(
-        lambda v: pbm_outcome_distribution(v, params.c, params.m, params.theta),
-        x,
-        xp,
-        alpha,
-    )
+    """Worst-case aggregate Renyi-DP epsilon of PBM with n devices
+    (memoized, see ``rqm_aggregate_epsilon``)."""
+
+    def compute():
+        x, xp = worst_case_inputs(params.c, n, seed)
+        return aggregate_renyi_divergence(
+            lambda v: pbm_outcome_distribution(v, params.c, params.m, params.theta),
+            x,
+            xp,
+            alpha,
+        )
+
+    return cached_epsilon("pbm", params, n, alpha, seed, compute)
 
 
 def qmgeo_aggregate_epsilon(
     params: QMGeoParams, n: int, alpha: float, seed: int = 0
 ) -> float:
     """Worst-case aggregate Renyi-DP epsilon of the truncated-geometric
-    quantizer with n devices (same worst-case-input construction)."""
-    x, xp = worst_case_inputs(params.c, n, seed)
-    return aggregate_renyi_divergence(
-        lambda v: qmgeo_outcome_distribution(v, params), x, xp, alpha
-    )
+    quantizer with n devices (same worst-case-input construction;
+    memoized, see ``rqm_aggregate_epsilon``)."""
+
+    def compute():
+        x, xp = worst_case_inputs(params.c, n, seed)
+        return aggregate_renyi_divergence(
+            lambda v: qmgeo_outcome_distribution(v, params), x, xp, alpha
+        )
+
+    return cached_epsilon("qmgeo", params, n, alpha, seed, compute)
 
 
 @dataclasses.dataclass
 class RenyiAccountant:
     """Tracks cumulative (alpha, eps) Renyi-DP over composed training rounds.
 
-    RDP composes additively: after T rounds of a mechanism with per-round
-    eps(alpha), the total is T * eps(alpha). Conversion to (eps, delta)-DP:
-    eps_DP = eps_RDP + log(1/delta) / (alpha - 1)   (Mironov 2017, Prop. 3).
+    RDP composes additively — and HETEROGENEOUSLY: each ``step`` may carry a
+    different per-round eps vector (subsampled cohorts and client dropout
+    change the realized cohort size, hence the per-round epsilon; see
+    docs/privacy.md). After T identical rounds the total is T * eps(alpha);
+    in general it is the per-alpha sum over the realized sequence, recorded
+    in ``history``. Conversion to (eps, delta)-DP:
+    eps_DP = eps_RDP + log(1/delta) / (alpha - 1)   (Mironov 2017, Prop. 3),
+    with ``dp_epsilon`` picking the best alpha AFTER composition (the
+    optimal alpha can shift as rounds accumulate).
     """
 
     alphas: tuple[float, ...] = (1.5, 2.0, 3.0, 4.0, 8.0, 16.0, 32.0, 64.0)
@@ -138,6 +164,7 @@ class RenyiAccountant:
     def __post_init__(self):
         self._eps = np.zeros(len(self.alphas), dtype=np.float64)
         self.rounds = 0
+        self.history: list[np.ndarray] = []
 
     def step(self, per_round_eps: Sequence[float]) -> None:
         per_round_eps = np.asarray(per_round_eps, dtype=np.float64)
@@ -145,6 +172,7 @@ class RenyiAccountant:
             raise ValueError("per_round_eps must align with self.alphas")
         self._eps += per_round_eps
         self.rounds += 1
+        self.history.append(per_round_eps.copy())
 
     def rdp_epsilon(self, alpha: float) -> float:
         i = self.alphas.index(alpha)
@@ -152,11 +180,47 @@ class RenyiAccountant:
 
     def dp_epsilon(self, delta: float) -> tuple[float, float]:
         """Best (eps, alpha) conversion to (eps, delta)-DP over tracked alphas."""
+        return self.projected_dp_epsilon(delta)
+
+    def projected_dp_epsilon(
+        self, delta: float, extra_eps: Sequence[float] = None, rounds: int = 0
+    ) -> tuple[float, float]:
+        """(eps, alpha)-DP after the spent budget PLUS ``rounds`` further
+        rounds of the per-round vector ``extra_eps`` (the budget-halting
+        lookahead in fed/loop.py). ``rounds=0`` is the spent budget itself."""
+        total = self._eps
+        if rounds:
+            total = total + rounds * np.asarray(extra_eps, dtype=np.float64)
         best_eps, best_alpha = math.inf, None
-        for a, e in zip(self.alphas, self._eps):
+        for a, e in zip(self.alphas, total):
             if a <= 1.0:
                 continue
             eps = e + math.log(1.0 / delta) / (a - 1.0)
             if eps < best_eps:
                 best_eps, best_alpha = eps, a
         return best_eps, best_alpha
+
+    def rounds_within_budget(
+        self, budget_eps: float, delta: float, per_round_eps: Sequence[float]
+    ) -> float:
+        """Largest k such that k MORE rounds of ``per_round_eps`` keep
+        ``dp_epsilon(delta) <= budget_eps``. ``math.inf`` when the vector is
+        non-private at some feasible alpha; 0 when even one round exceeds.
+
+        Exact per alpha: the composed eps is linear in k, and the DP eps is
+        the min over alphas — so the answer is the max over alphas of the
+        per-alpha room floor((budget - conv_a - spent_a) / v_a).
+        """
+        v = np.asarray(per_round_eps, dtype=np.float64)
+        best = 0
+        for a, spent, va in zip(self.alphas, self._eps, v):
+            if a <= 1.0:
+                continue
+            room = budget_eps - spent - math.log(1.0 / delta) / (a - 1.0)
+            if room < 0:
+                continue
+            if va <= 0:
+                return math.inf
+            # guard float jitter at the boundary (room/va == k - 1e-16)
+            best = max(best, int(math.floor(room / va + 1e-12)))
+        return best

@@ -44,6 +44,18 @@ Four round engines (FedConfig.engine), same Algorithm-1 semantics:
     host memory: only each block's active cohort is materialized and
     shipped (sharded over the mesh), so simulated populations of 1e5-1e6
     clients never exist in memory at once (see docs/scaling.md).
+
+Cohort realization + privacy budgets (docs/privacy.md): FedConfig's
+``subsampling``/``dropout`` knobs make the realized cohort size a
+per-round random variable, identically on every engine (the jitted
+engines compute a static cohort SLATE and mask non-participants out of
+the SecAgg sum); the accountant composes each round at its REALIZED size
+(``trainer.realized_n``, ``accountant.history``) — dropout-aware: fewer
+participants mean less amplification-by-aggregation and a strictly
+larger per-round epsilon. ``budget_eps``/``budget_delta`` turn train()
+into a budgeted run: remaining budget is logged and training halts at
+exhaustion. Mechanisms for a target budget come from
+``repro.privacy.calibrate``.
 """
 from __future__ import annotations
 
@@ -69,6 +81,7 @@ from repro.launch.mesh import make_shard_mesh
 
 ENGINES = ("scan", "perround", "host", "shard")
 STAGINGS = ("full", "stream")
+SUBSAMPLINGS = ("fixed", "poisson")
 
 
 @dataclasses.dataclass
@@ -111,6 +124,33 @@ class FedConfig:
     shards: Optional[int] = None
     staging: str = "full"
     shard_packed: Optional[bool] = None
+    # Cohort realization (all four engines; see docs/privacy.md).
+    # subsampling="fixed" (default) samples exactly clients_per_round
+    # clients without replacement — every round has the same cohort size.
+    # subsampling="poisson" includes EACH of the num_clients clients
+    # i.i.d. with rate clients_per_round/num_clients (clients_per_round is
+    # then the EXPECTED cohort); the realized cohort size varies round to
+    # round and the accountant composes the per-round epsilon at the
+    # REALIZED size. dropout additionally drops each selected client
+    # i.i.d. with this probability (network loss, stragglers) — dropped
+    # clients contribute nothing to the SecAgg sum and the round is
+    # accounted at the surviving count (fewer participants = LESS
+    # amplification-by-aggregation = a strictly larger per-round epsilon;
+    # naive nominal-n accounting under-reports). max_cohort bounds the
+    # static slate the jitted engines allocate for Poisson cohorts
+    # (default: mean + 6 sigma; overflow beyond the slate is truncated —
+    # those clients simply do not participate that round, which keeps the
+    # accounting exact).
+    subsampling: str = "fixed"
+    dropout: float = 0.0
+    max_cohort: Optional[int] = None
+    # Privacy budget (docs/privacy.md): when budget_eps is set, train()
+    # logs the remaining (eps, budget_delta)-DP budget and halts at
+    # exhaustion — exactly at the last affordable round for fixed cohorts,
+    # at the first round whose realized spend crosses the budget under
+    # subsampling/dropout.
+    budget_eps: Optional[float] = None
+    budget_delta: float = 1e-5
     # Debug/test instrumentation (scan/perround/host/shard): record each
     # round's aggregated encoded SecAgg sum on the host (trainer.round_sums)
     # — the observable the cross-engine "exact encoded-sum equality" tests
@@ -130,18 +170,64 @@ class FedTrainer:
             )
         if fed_cfg.staging == "stream" and fed_cfg.engine != "shard":
             raise ValueError("staging='stream' requires engine='shard'")
+        if fed_cfg.subsampling not in SUBSAMPLINGS:
+            raise ValueError(
+                f"unknown subsampling {fed_cfg.subsampling!r}; expected one "
+                f"of {SUBSAMPLINGS}"
+            )
+        if not 0.0 <= fed_cfg.dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {fed_cfg.dropout}")
+        if fed_cfg.max_cohort is not None and fed_cfg.subsampling != "poisson":
+            raise ValueError("max_cohort only applies to subsampling='poisson'")
+        if fed_cfg.clients_per_round > fed_cfg.num_clients:
+            raise ValueError(
+                f"clients_per_round={fed_cfg.clients_per_round} exceeds the "
+                f"population num_clients={fed_cfg.num_clients}"
+            )
         self.mech = mech
         self.cfg = fed_cfg
         self._mesh = None
         self.shards = 1
+        # Heterogeneous cohorts (docs/privacy.md): Poisson subsampling and/or
+        # dropout make the realized cohort size a per-round random variable.
+        # The jitted engines keep static shapes by gradient-computing a
+        # fixed-size cohort SLATE and masking non-participants out of the
+        # SecAgg sum; the accountant then composes each round at its
+        # realized size (trainer.realized_n).
+        self._hetero = fed_cfg.subsampling != "fixed" or fed_cfg.dropout > 0
+        if fed_cfg.subsampling == "poisson":
+            rate = fed_cfg.clients_per_round / fed_cfg.num_clients
+            self._poisson_rate = rate
+            if fed_cfg.max_cohort is not None:
+                slate = min(fed_cfg.max_cohort, fed_cfg.num_clients)
+                if slate < 1:
+                    raise ValueError(f"max_cohort must be >= 1, got {slate}")
+            else:
+                # mean + 6 sigma: truncation probability ~ 1e-9 per round
+                sigma = np.sqrt(fed_cfg.num_clients * rate * (1.0 - rate))
+                slate = min(fed_cfg.num_clients,
+                            fed_cfg.clients_per_round + int(np.ceil(6 * sigma)) + 4)
+        else:
+            slate = fed_cfg.clients_per_round
         if fed_cfg.engine == "shard":
             self.shards = fed_cfg.shards or jax.device_count()
-            if fed_cfg.clients_per_round % self.shards:
+            if fed_cfg.subsampling == "poisson":
+                # round the slate up so it splits evenly across shards
+                slate = -(-slate // self.shards) * self.shards
+                if slate > fed_cfg.num_clients:
+                    raise ValueError(
+                        f"poisson cohort slate {slate} (rounded to "
+                        f"{self.shards} shards) exceeds the population "
+                        f"{fed_cfg.num_clients}; lower max_cohort or shards"
+                    )
+            elif fed_cfg.clients_per_round % self.shards:
                 raise ValueError(
                     f"clients_per_round={fed_cfg.clients_per_round} must "
                     f"divide across {self.shards} shards"
                 )
-            bound = mech.sum_bound(fed_cfg.clients_per_round)
+            # the packing-safety bound covers the WORST-case participant
+            # count — the full slate (== clients_per_round when fixed)
+            bound = mech.sum_bound(slate)
             if fed_cfg.shard_packed and not 0 < bound < (1 << secagg.LANE_BITS):
                 raise ValueError(
                     f"shard_packed=True unsafe: full-cohort sum bound {bound} "
@@ -153,10 +239,14 @@ class FedTrainer:
             self._plan = MeshPlan(mesh=self._mesh, client_axes=("shard",),
                                   model_axis=None)
             assert self._plan.tp == 1 and self._plan.n_clients == self.shards
+        self.slate = int(slate)
         # collect_sums / streaming bookkeeping (see FedConfig)
         self.round_sums: list = []
         self.staged_bytes_total = 0
         self.staged_bytes_last_block = 0
+        # realized cohort size per round (every engine appends here; for
+        # fixed cohorts without dropout it is constantly clients_per_round)
+        self.realized_n: list = []
         self.partition = FederatedPartition(
             num_clients=fed_cfg.num_clients,
             samples_per_client=fed_cfg.samples_per_client,
@@ -177,16 +267,20 @@ class FedTrainer:
         self.accountant = RenyiAccountant(alphas=fed_cfg.accountant_alphas)
         # Self-accounting: the mechanism carries its own parameters, so the
         # exact per-round aggregate-level eps vector comes straight from the
-        # object that encodes — no second parameter hand-off to drift. All
-        # rounds are identical, so it is computed once and composed
-        # additively by the accountant. Under the shard engine this is the
-        # FULL cross-shard cohort clients_per_round — the SecAgg sum spans
-        # every shard, so the mechanism's amplification-by-aggregation sees
-        # all n participants, never the n/S per-shard slice.
+        # object that encodes — no second parameter hand-off to drift. With
+        # fixed cohorts all rounds are identical, so the nominal vector is
+        # computed once and composed additively; under subsampling/dropout
+        # each round is composed at its REALIZED cohort size via
+        # _eps_vector (memoized per size, backed by the privacy cache).
+        # Under the shard engine the size is always the FULL cross-shard
+        # cohort — the SecAgg sum spans every shard, so the mechanism's
+        # amplification-by-aggregation sees all participants, never the
+        # per-shard slice.
         self._per_round_eps = np.asarray([
             mech.per_round_epsilon(fed_cfg.clients_per_round, a)
             for a in fed_cfg.accountant_alphas
         ])
+        self._eps_by_n = {fed_cfg.clients_per_round: self._per_round_eps}
         if fed_cfg.engine != "host" and fed_cfg.staging != "stream":
             self._stage_clients()
         self._build_jits()
@@ -223,6 +317,41 @@ class FedTrainer:
         self.staged_bytes_total += (self.client_images.nbytes
                                     + self.client_labels.nbytes)
 
+    # -- cohort realization (shared by every engine; see docs/privacy.md) ----
+    def _sample_slate(self, k_sample):
+        """One round's static-size cohort slate: ``(ids, valid)`` with
+        ``ids.shape == valid.shape == (self.slate,)``.
+
+        Fixed-size sampling fills the whole slate (valid everywhere);
+        Poisson subsampling selects each of the N population clients i.i.d.
+        at rate clients_per_round/N, packs the selected ids (ascending)
+        into the slate front and marks padding/overflow slots invalid.
+        Identical jnp ops run traced (device engines) and eagerly (host
+        engine, streaming staging) — jax.random is deterministic in or out
+        of jit, so every engine realizes the SAME cohort sequence."""
+        cfg = self.cfg
+        if cfg.subsampling == "poisson":
+            sel = jax.random.bernoulli(
+                k_sample, self._poisson_rate, (cfg.num_clients,)
+            )
+            # distinct priorities make the order deterministic under ANY
+            # sort algorithm: selected ids (ascending) first, then the rest
+            prio = jnp.where(sel, 0, cfg.num_clients) + jnp.arange(cfg.num_clients)
+            ids = jnp.argsort(prio)[: self.slate]
+            return ids, sel[ids]
+        ids = jax.random.choice(
+            k_sample, cfg.num_clients, (self.slate,), replace=False
+        )
+        return ids, jnp.ones((self.slate,), bool)
+
+    def _participation(self, valid, k_drop):
+        """Slate-shaped participation mask: selected AND not dropped out
+        (i.i.d. Bernoulli(cfg.dropout) per selected client)."""
+        if self.cfg.dropout > 0:
+            drop = jax.random.bernoulli(k_drop, self.cfg.dropout, valid.shape)
+            return valid & ~drop
+        return valid
+
     # -- jitted inner pieces ------------------------------------------------
     def _build_jits(self):
         mech = self.mech
@@ -258,6 +387,7 @@ class FedTrainer:
         # host engine pieces (legacy loop) + shared eval
         self._client_grads = jax.jit(jax.vmap(client_grad, in_axes=(None, 0, 0)))
         self._encode = jax.jit(jax.vmap(encode, in_axes=(0, 0)))
+        self._quantize_batch = jax.jit(lambda g, k: mech.quantize_batch(g, k))
         self._decode = jax.jit(lambda zsum, n: mech.decode_sum(zsum, n))
         self._eval = jax.jit(
             lambda flat, im, lb: cnn_accuracy(unravel(flat), im, lb)
@@ -281,12 +411,19 @@ class FedTrainer:
         # parity the engine test asserts on CPU. (Without it, cross-round
         # fusion and while-loop single-threading on XLA:CPU shift gradients
         # by ~1 ULP, which RQM's randomized rounding then amplifies.)
+        # Heterogeneous cohorts (cfg.subsampling/cfg.dropout) keep the
+        # shapes static: the whole SLATE is gradient-computed and encoded,
+        # non-participants are masked out of the SecAgg sum, and the decode
+        # runs at the realized (traced) cohort size — which the step
+        # returns so the host can account each round exactly.
+        hetero = self._hetero
+
         def round_step(flat, key, images, labels):
-            key, k_sample, k_enc = jax.random.split(key, 3)
-            ids = jax.random.choice(
-                k_sample, cfg.num_clients, (cfg.clients_per_round,),
-                replace=False,
-            )
+            if hetero:
+                key, k_sample, k_enc, k_drop = jax.random.split(key, 4)
+            else:
+                key, k_sample, k_enc = jax.random.split(key, 3)
+            ids, valid = self._sample_slate(k_sample)
             grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
                 flat, images[ids], labels[ids]
             )
@@ -294,9 +431,20 @@ class FedTrainer:
             # already-clipped grads): one fused kernel call over the whole
             # (clients, dim) stack when the mechanism is kernel-backed.
             z = mech.quantize_batch(grads, k_enc)
+            if not hetero:
+                z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum
+                g_hat = mech.decode_sum(z_sum, cfg.clients_per_round)
+                new = flat - cfg.lr * g_hat
+                n_real = jnp.int32(cfg.clients_per_round)
+                return jax.lax.optimization_barrier(new), key, z_sum, n_real
+            part = self._participation(valid, k_drop)
+            z = z * part.astype(z.dtype)[:, None]  # non-participants: 0
             z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
-            g_hat = mech.decode_sum(z_sum, cfg.clients_per_round)
-            return jax.lax.optimization_barrier(flat - cfg.lr * g_hat), key, z_sum
+            n_real = jnp.sum(part, dtype=jnp.int32)
+            g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
+            # an empty round releases nothing and moves nothing
+            new = jnp.where(n_real > 0, flat - cfg.lr * g_hat, flat)
+            return jax.lax.optimization_barrier(new), key, z_sum, n_real
 
         self._round_jit = jax.jit(round_step)
         collect = cfg.collect_sums
@@ -311,14 +459,15 @@ class FedTrainer:
 
             def body(carry, _):
                 f, k = carry
-                f, k, z_sum = round_step(f, k, images, labels)
-                return (f, k), (z_sum if collect else None)
+                f, k, z_sum, n_real = round_step(f, k, images, labels)
+                return (f, k), (z_sum if collect else None,
+                                n_real if hetero else None)
 
-            (flat, key), sums = jax.lax.scan(
+            (flat, key), (sums, ns) = jax.lax.scan(
                 body, (flat, key), None, length=length,
                 unroll=min(unroll, length),
             )
-            return flat, key, sums
+            return flat, key, sums, ns
 
         self._run_block_jit = jax.jit(
             block_fn, static_argnums=(4,), donate_argnums=(0,)
@@ -337,11 +486,13 @@ class FedTrainer:
         """
         cfg, mech = self.cfg, self.mech
         n = cfg.clients_per_round
-        n_per = n // self.shards
-        bound = mech.sum_bound(n)  # safety of forced packing checked in init
+        S = self.slate  # == n for fixed cohorts; rounded to shards for poisson
+        n_per = S // self.shards
+        bound = mech.sum_bound(S)  # safety of forced packing checked in init
         prefer_packed = cfg.shard_packed is None or cfg.shard_packed
         streamed = cfg.staging == "stream"
         collect = cfg.collect_sums
+        hetero = self._hetero
 
         # On a 1-shard mesh the shard-local slice IS the whole cohort and
         # the RNG row offset IS zero: specialize them away statically so
@@ -354,18 +505,23 @@ class FedTrainer:
         def round_step(flat, key, images, labels):
             # Identical key evolution to the scan engine's round_step: the
             # key is replicated, so every shard derives the same k_sample /
-            # k_enc and (in staged mode) the same global cohort ids.
-            key, k_sample, k_enc = jax.random.split(key, 3)
-            j = jax.lax.axis_index("shard") if multi else 0
-            if streamed:
-                # the block staging already gathered this round's cohort in
-                # sampled order and sharded it over the mesh; k_sample was
-                # consumed on the host to pick it (bit-identical replay).
-                local_im, local_lb = images, labels
+            # k_enc / k_drop and the same global cohort slate + masks.
+            if hetero:
+                key, k_sample, k_enc, k_drop = jax.random.split(key, 4)
             else:
-                ids = jax.random.choice(
-                    k_sample, cfg.num_clients, (n,), replace=False,
-                )
+                key, k_sample, k_enc = jax.random.split(key, 3)
+            j = jax.lax.axis_index("shard") if multi else 0
+            valid = None
+            if streamed:
+                # the block staging already gathered this round's slate in
+                # sampled order and sharded it over the mesh; the device
+                # re-derives only the (replicated) validity mask from the
+                # same k_sample the host replayed.
+                local_im, local_lb = images, labels
+                if hetero:
+                    _, valid = self._sample_slate(k_sample)
+            else:
+                ids, valid = self._sample_slate(k_sample)
                 if multi:
                     ids = jax.lax.dynamic_slice_in_dim(ids, j * n_per, n_per)
                 local_im, local_lb = images[ids], labels[ids]
@@ -375,8 +531,18 @@ class FedTrainer:
             z = mech.quantize_batch(
                 grads, k_enc,
                 row_offset=j * n_per if multi else None,
-                total_rows=n if multi else None,
+                total_rows=S if multi else None,
             )
+            if hetero:
+                # replicated full-slate participation; each shard masks its
+                # own row slice out of the partial sum
+                part = self._participation(valid, k_drop)
+                local = (jax.lax.dynamic_slice_in_dim(part, j * n_per, n_per)
+                         if multi else part)
+                z = z * local.astype(z.dtype)[:, None]
+                n_real = jnp.sum(part, dtype=jnp.int32)
+            else:
+                n_real = jnp.int32(n)
             z_part = jnp.sum(z, axis=0, dtype=z.dtype)  # shard-local partial
             # The SecAgg boundary: integer level indices cross shards,
             # lane-packed two-per-int32 word when the full-cohort sum bound
@@ -385,8 +551,13 @@ class FedTrainer:
             z_sum = secagg.secure_sum_bounded(
                 z_part, ("shard",), bound, packed=prefer_packed
             )
-            g_hat = mech.decode_sum(z_sum, n)
-            return jax.lax.optimization_barrier(flat - cfg.lr * g_hat), key, z_sum
+            if hetero:
+                g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
+                new = jnp.where(n_real > 0, flat - cfg.lr * g_hat, flat)
+            else:
+                g_hat = mech.decode_sum(z_sum, n)
+                new = flat - cfg.lr * g_hat
+            return jax.lax.optimization_barrier(new), key, z_sum, n_real
 
         def make_block(length):
             unroll = cfg.scan_unroll
@@ -397,20 +568,21 @@ class FedTrainer:
                 def body(carry, xs):
                     f, k = carry
                     im, lb = xs if streamed else (images, labels)
-                    f, k, z_sum = round_step(f, k, im, lb)
-                    return (f, k), (z_sum if collect else None)
+                    f, k, z_sum, n_real = round_step(f, k, im, lb)
+                    return (f, k), (z_sum if collect else None,
+                                    n_real if hetero else None)
 
                 xs = (images, labels) if streamed else None
-                (flat, key), sums = jax.lax.scan(
+                (flat, key), (sums, ns) = jax.lax.scan(
                     body, (flat, key), xs, length=length,
                     unroll=min(unroll, length),
                 )
-                if collect:
-                    return flat, key, sums
-                return flat, key
+                return flat, key, sums, ns
 
             data_spec = P(None, "shard") if streamed else P()
-            out_specs = (P(), P(), P()) if collect else (P(), P())
+            # P() entries covering the None (not collected) outputs map no
+            # leaves — harmless placeholders keeping the spec tree aligned
+            out_specs = (P(), P(), P(), P())
             mapped = compat_shard_map(
                 block,
                 mesh=self._mesh,
@@ -435,14 +607,17 @@ class FedTrainer:
         O(length * clients_per_round) client datasets, independent of
         num_clients — 1e5-1e6 simulated clients never exist at once."""
         cfg = self.cfg
-        n = cfg.clients_per_round
+        n = self.slate
         key = self._key
         ids_rounds = np.empty((length, n), np.int64)
         for t in range(length):
-            key, k_sample, _ = jax.random.split(key, 3)
-            ids_rounds[t] = np.asarray(jax.random.choice(
-                k_sample, cfg.num_clients, (n,), replace=False,
-            ))
+            # replay exactly the device key evolution (3 splits, 4 when
+            # heterogeneous cohorts draw a dropout key)
+            if self._hetero:
+                key, k_sample, _, _ = jax.random.split(key, 4)
+            else:
+                key, k_sample, _ = jax.random.split(key, 3)
+            ids_rounds[t] = np.asarray(self._sample_slate(k_sample)[0])
         imgs = lbls = None
         cache: dict = {}  # client data is deterministic — dedup within block
         for t in range(length):
@@ -488,9 +663,45 @@ class FedTrainer:
             stacklevel=2,
         )
 
+    def _eps_vector(self, n: int) -> np.ndarray:
+        """Exact per-round eps vector (over cfg.accountant_alphas) for a
+        realized cohort of n clients. Memoized per size; each distinct size
+        costs one exact accountant evaluation per alpha (served by the
+        privacy cache across trainers/processes). n = 0 releases nothing
+        (the all-zero SecAgg sum is data-independent) — eps 0."""
+        n = int(n)
+        if n not in self._eps_by_n:
+            if n <= 0:
+                v = np.zeros(len(self.cfg.accountant_alphas))
+            else:
+                v = np.asarray([
+                    self.mech.per_round_epsilon(n, a)
+                    for a in self.cfg.accountant_alphas
+                ])
+            self._eps_by_n[n] = v
+        return self._eps_by_n[n]
+
     def _account(self, rounds: int):
+        """Fixed-cohort composition: every round at clients_per_round."""
         for _ in range(rounds):
+            self.realized_n.append(self.cfg.clients_per_round)
             self.accountant.step(self._per_round_eps)
+
+    def _account_realized(self, ns) -> None:
+        """Heterogeneous composition: each round at its REALIZED size."""
+        for n in np.asarray(ns).reshape(-1):
+            n = int(n)
+            self.realized_n.append(n)
+            self.accountant.step(self._eps_vector(n))
+
+    def budget_spent(self) -> tuple:
+        """(eps spent at cfg.budget_delta, remaining eps) — requires
+        cfg.budget_eps to be set."""
+        cfg = self.cfg
+        if cfg.budget_eps is None:
+            raise ValueError("no privacy budget configured (cfg.budget_eps)")
+        spent, _ = self.accountant.dp_epsilon(cfg.budget_delta)
+        return spent, max(0.0, cfg.budget_eps - spent)
 
     # -- the loop -----------------------------------------------------------
     def round(self, t: int):
@@ -501,6 +712,9 @@ class FedTrainer:
             self.run_block(1)
             return
         if cfg.engine == "host":
+            if self._hetero:
+                self._host_hetero_round()
+                return
             ids = sample_clients(self._rng, cfg.num_clients, cfg.clients_per_round)
             images = np.stack([self.partition.client_data(i)[0] for i in ids])
             labels = np.stack([self.partition.client_data(i)[1] for i in ids])
@@ -514,12 +728,42 @@ class FedTrainer:
             if cfg.collect_sums:
                 self.round_sums.append(np.asarray(z_sum))
         else:
-            self.flat, self._key, z_sum = self._round_jit(
+            self.flat, self._key, z_sum, n_real = self._round_jit(
                 self.flat, self._key, self.client_images, self.client_labels
             )
             if cfg.collect_sums:
                 self.round_sums.append(np.asarray(z_sum))
+            if self._hetero:
+                self._account_realized([n_real])
+                return
         self._account(1)
+
+    def _host_hetero_round(self):
+        """Host-engine round under subsampling/dropout: the legacy per-round
+        host data staging, but cohort/participation come from the SAME
+        device key stream the jitted engines evolve (4 splits per round),
+        so the realized cohort sequence — and hence the accounted eps
+        sequence — is identical on every engine."""
+        cfg = self.cfg
+        self._key, k_sample, k_enc, k_drop = jax.random.split(self._key, 4)
+        ids, valid = self._sample_slate(k_sample)
+        ids = np.asarray(ids)
+        images = np.stack([self.partition.client_data(int(i))[0] for i in ids])
+        labels = np.stack([self.partition.client_data(int(i))[1] for i in ids])
+        grads = self._client_grads(
+            self.flat, jnp.asarray(images), jnp.asarray(labels)
+        )
+        z = self._quantize_batch(grads, k_enc)  # full slate, like the engines
+        part = self._participation(valid, k_drop)
+        z = z * part.astype(z.dtype)[:, None]
+        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)
+        n_real = int(np.asarray(jnp.sum(part, dtype=jnp.int32)))
+        if n_real > 0:
+            g_hat = self._decode(z_sum, n_real)
+            self.flat = self.flat - cfg.lr * g_hat
+        if cfg.collect_sums:
+            self.round_sums.append(np.asarray(z_sum))
+        self._account_realized([n_real])
 
     def run_block(self, rounds: int):
         """Advance ``rounds`` rounds inside jitted blocks (scan and shard
@@ -550,13 +794,14 @@ class FedTrainer:
                     self.flat, self._key, self.client_images,
                     self.client_labels, step,
                 )
+            self.flat, self._key, sums, ns = out
             if self.cfg.collect_sums:
-                self.flat, self._key, sums = out
                 self.round_sums.extend(np.asarray(sums))
-            else:
-                self.flat, self._key = out[0], out[1]
+            if self._hetero:
+                self._account_realized(np.asarray(ns))
             done += step
-        self._account(rounds)
+        if not self._hetero:
+            self._account(rounds)
 
     def evaluate(self):
         flat = self.flat
@@ -570,27 +815,90 @@ class FedTrainer:
         return {"accuracy": acc, "loss": loss}
 
     def train(self, rounds: Optional[int] = None, eval_every: int = 25, log=print):
+        """Run up to ``rounds`` rounds; with cfg.budget_eps set, log the
+        remaining (eps, budget_delta)-DP budget at every eval point and
+        halt at budget exhaustion — exactly at the last affordable round
+        for fixed cohorts (the per-round spend is constant and the
+        lookahead is exact), at the first eval/block boundary whose
+        realized spend crosses the budget under subsampling/dropout (the
+        realized spend is only known after the round; see docs/privacy.md).
+        """
         rounds = rounds or self.cfg.rounds
+        cfg = self.cfg
+        budget = cfg.budget_eps
         history = []
         t0 = time.time()
 
         def record(done):
             m = self.evaluate()
             m.update(round=done, seconds=round(time.time() - t0, 1))
+            msg = (f"[{self.mech.name}] round {done:4d} "
+                   f"loss={m['loss']:.4f} acc={m['accuracy']:.4f}")
+            if budget is not None:
+                spent, remaining = self.budget_spent()
+                m.update(eps_spent=spent, eps_remaining=remaining)
+                msg += (f" eps_spent={spent:.3f}/{budget:g} "
+                        f"(delta={cfg.budget_delta:g})")
             history.append(m)
-            log(f"[{self.mech.name}] round {done:4d} "
-                f"loss={m['loss']:.4f} acc={m['accuracy']:.4f}")
+            log(msg)
 
-        if self.cfg.engine in ("scan", "shard"):
+        def affordable(want: int) -> int:
+            """How many of the next ``want`` rounds the budget still buys:
+            an exact projection with the constant per-round vector for
+            fixed cohorts, a nominal-cohort lookahead (realized spend
+            re-checked next call) under subsampling/dropout."""
+            if budget is None:
+                return want
+            if self.budget_spent()[1] <= 0:
+                return 0
+            k = self.accountant.rounds_within_budget(
+                budget, cfg.budget_delta, self._per_round_eps
+            )
+            return want if k > want else int(k)
+
+        halted = False
+        if cfg.engine in ("scan", "shard"):
             done = 0
             while done < rounds:
-                block = min(eval_every, rounds - done)
-                self.run_block(block)
-                done += block
-                record(done)
+                block = affordable(min(eval_every, rounds - done))
+                if block == 0:
+                    halted = True
+                    break
+                if budget is not None and self._hetero:
+                    # the realized spend is only known AFTER a round: advance
+                    # one round at a time and stop at the first crossing
+                    # (overshoot <= one round; the nominal lookahead above
+                    # only caps the attempt)
+                    ran = 0
+                    while ran < block:
+                        self.run_block(1)
+                        ran += 1
+                        if self.budget_spent()[1] <= 0:
+                            halted = True
+                            break
+                    done += ran
+                    record(done)
+                    if halted:
+                        break
+                else:
+                    self.run_block(block)
+                    done += block
+                    record(done)
         else:
             for t in range(rounds):
+                # for hetero budget runs affordable() returns 0 at the first
+                # call after the realized spend crosses — overshoot <= 1 round
+                if affordable(1) == 0:
+                    halted = True
+                    break
                 self.round(t)
                 if (t + 1) % eval_every == 0 or t == rounds - 1:
                     record(t + 1)
+        if halted:
+            spent, _ = self.budget_spent()
+            log(f"[{self.mech.name}] privacy budget exhausted after "
+                f"{self.accountant.rounds} rounds: eps_spent={spent:.4f} of "
+                f"{budget:g} at delta={cfg.budget_delta:g}; halting")
+            if not history or history[-1]["round"] != self.accountant.rounds:
+                record(self.accountant.rounds)
         return history

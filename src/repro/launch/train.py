@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.checkpoint import save
 from repro.configs.base import InputShape
 from repro.configs.registry import get_config
-from repro.core.mechanisms import make_mechanism, mechanism_names
+from repro.core.mechanisms import accepted_options, make_mechanism, mechanism_names
 from repro.data.lm import TokenPipeline
 from repro.distributed.step import (
     MeshPlan,
@@ -54,6 +54,15 @@ def main():
     ap.add_argument("--m", type=int, default=16)
     ap.add_argument("--q", type=float, default=0.42)
     ap.add_argument("--delta-ratio", type=float, default=1.0)
+    ap.add_argument("--target-eps", type=float, default=None,
+                    help="drive the run BACKWARDS from a privacy budget: "
+                         "calibrate the --mechanism family's privacy knob "
+                         "(rqm q / pbm theta / qmgeo r) so the composed "
+                         "(eps, --target-delta)-DP epsilon of --steps steps "
+                         "hits this target (repro.privacy.calibrate); the "
+                         "knob flag (e.g. --q) is then ignored")
+    ap.add_argument("--target-delta", type=float, default=1e-5,
+                    help="delta for --target-eps calibration")
     ap.add_argument("--lr", type=float, default=0.2)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--packed", action="store_true")
@@ -69,11 +78,6 @@ def main():
 
     cfg = get_config(args.arch, reduced=args.reduced)
     shape = InputShape("cli", args.seq, args.batch, "train")
-    # CLI flags are defaults; options inline in the spec override them.
-    mech = make_mechanism(
-        args.mechanism, c=args.clip, m=args.m, q=args.q,
-        delta_ratio=args.delta_ratio,
-    )
     plan = None
     if args.mesh_shape:
         dims = tuple(int(x) for x in args.mesh_shape.split("x"))
@@ -88,6 +92,36 @@ def main():
             client_axes=tuple(a for a in names if a != "model"),
         )
     n_clients = plan.n_clients if plan else 1
+    if args.target_eps is not None:
+        # Backwards mode: solve for the mechanism from the privacy budget
+        # (repro.privacy.calibrate) instead of specifying the knob by hand.
+        from repro.core.mechanisms import parse_mechanism_spec
+        from repro.privacy.calibrate import calibrate, calibration_knobs
+
+        name, explicit = parse_mechanism_spec(args.mechanism)
+        knob = calibration_knobs().get(name)
+        if knob is None:
+            ap.error(f"--target-eps requires a calibratable mechanism "
+                     f"({', '.join(calibration_knobs())}), got {name!r}")
+        if knob.option in explicit:
+            ap.error(f"--mechanism fixes {knob.option}="
+                     f"{explicit[knob.option]} but --target-eps solves for "
+                     f"{knob.option}; drop one of the two")
+        pool = dict(c=args.clip, m=args.m, delta_ratio=args.delta_ratio)
+        opts = {k: v for k, v in pool.items() if k in accepted_options(name)}
+        opts.update(explicit)
+        res = calibrate(
+            name, target_eps=args.target_eps, target_delta=args.target_delta,
+            rounds=args.steps, cohort=n_clients, **opts,
+        )
+        mech = res.mechanism
+        print(f"[privacy] calibrated {res.describe()}")
+    else:
+        # CLI flags are defaults; options inline in the spec override them.
+        mech = make_mechanism(
+            args.mechanism, c=args.clip, m=args.m, q=args.q,
+            delta_ratio=args.delta_ratio,
+        )
     # Self-accounting (Mechanism API v2): the step's privacy comes from the
     # very mechanism object that encodes. RDP composes additively over steps.
     eps = round_privacy(mech, n_clients, alphas=(8.0,))[8.0]

@@ -1,0 +1,42 @@
+"""Privacy-budget subsystem: exact Renyi accounting as an invertible,
+composable, cached service.
+
+  * ``repro.privacy.cache``     — params-keyed memo/disk cache every exact
+    aggregate-epsilon computation routes through (core/renyi.py).
+  * ``repro.privacy.calibrate`` — the inverse accountant: given a target
+    (eps, delta), a round count T and a cohort size n, bisect on the
+    mechanism family's privacy knob (RQM ``q`` / PBM ``theta`` / QMGeo
+    ``r``) against the exact accountant and return a registered Mechanism
+    that hits the budget within tolerance.
+
+Exports are lazy so that ``core.renyi`` can import ``repro.privacy.cache``
+at module scope while ``calibrate`` imports ``core.renyi`` — the package
+body touches neither submodule.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "EpsilonCache": "repro.privacy.cache",
+    "configure": "repro.privacy.cache",
+    "global_cache": "repro.privacy.cache",
+    "reset": "repro.privacy.cache",
+    "CalibrationResult": "repro.privacy.calibrate",
+    "calibrate": "repro.privacy.calibrate",
+    "composed_dp_epsilon": "repro.privacy.calibrate",
+    "calibration_knobs": "repro.privacy.calibrate",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.privacy' has no attribute {name!r}")
+    import importlib
+
+    obj = getattr(importlib.import_module(mod), name)
+    # rebind over the submodule attribute the import machinery just set
+    # (the ``calibrate`` function shares its submodule's name)
+    globals()[name] = obj
+    return obj

@@ -1,0 +1,192 @@
+"""Params-keyed memo/disk cache for exact aggregate-epsilon computations.
+
+Every exact aggregate-level Renyi epsilon is an n-fold pmf convolution
+(``core.distribution.aggregate_distribution``) followed by a divergence —
+cheap once, but the SAME (params, n, alpha) values are recomputed all over
+the place: calibration bisects ~40 times over the identical alpha grid,
+``fig2``/``fig45``/``fig_budget`` sweep overlapping points, and every
+FedTrainer construction re-derives its per-round vector. This module makes
+the computation a first-class, memoized service:
+
+  * an always-on in-process memo (``EpsilonCache``), keyed by
+    ``(family, params..., n, alpha, seed)`` — the exact inputs that
+    determine the value, canonicalized with full float precision
+    (``repr(float)`` round-trips);
+  * an optional JSON disk layer so sweeps/benchmarks across processes reuse
+    each other's convolutions: set ``REPRO_PRIVACY_CACHE=/path/to/eps.json``
+    or call ``configure(path=...)``. Writes are atomic (tmp + rename);
+  * observable stats (``hits`` / ``misses`` / ``disk_hits``) — tests assert
+    that a repeated calibration performs ZERO new convolutions.
+
+Cache entries are versioned by ``ACCOUNTING_VERSION``: bump it whenever
+``core/distribution.py`` or ``core/renyi.py`` change semantics, and every
+stale disk entry is ignored. The golden-value suite
+(tests/test_golden_privacy.py) is the backstop that the cached numbers are
+the right numbers in the first place — it always computes fresh.
+
+This module depends only on the stdlib: ``core.renyi`` imports it, and
+``privacy.calibrate`` imports ``core.renyi`` — no cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Callable, Optional
+
+# Bump when the numeric semantics of distribution.py / renyi.py change:
+# disk entries written under another version are ignored, never served.
+ACCOUNTING_VERSION = 1
+
+_ENV_VAR = "REPRO_PRIVACY_CACHE"
+
+
+def params_key(params) -> tuple:
+    """Canonical hashable key for a frozen params dataclass (or mapping):
+    sorted (field, value) pairs, floats kept at full precision."""
+    if dataclasses.is_dataclass(params):
+        items = sorted(dataclasses.asdict(params).items())
+    elif isinstance(params, dict):
+        items = sorted(params.items())
+    else:  # already canonical (tuple/scalar)
+        return (params,)
+    return tuple((k, v) for k, v in items)
+
+
+def epsilon_key(family: str, params, n: int, alpha: float, seed: int = 0) -> str:
+    """Flat string key (stable across processes — used for the disk JSON)."""
+    parts = [f"v{ACCOUNTING_VERSION}", family]
+    for k, v in params_key(params):
+        parts.append(f"{k}={v!r}")
+    parts += [f"n={int(n)}", f"alpha={float(alpha)!r}", f"seed={int(seed)}"]
+    return "|".join(parts)
+
+
+class EpsilonCache:
+    """Memo + optional JSON disk layer for exact epsilon values.
+
+    ``get_or_compute(key, fn)`` is the whole interface the accounting uses;
+    ``hits``/``misses``/``disk_hits``/``computes`` are the observables the
+    tests (and ``fig_budget --json``) report.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._mem: dict = {}
+        self._disk_loaded = False
+        self.hits = 0
+        self.misses = 0
+        self.disk_hits = 0
+        self.computes = 0  # actual pmf-convolution runs (== misses)
+
+    # -- disk layer ---------------------------------------------------------
+    def _load_disk(self) -> None:
+        if self._disk_loaded or not self.path:
+            return
+        self._disk_loaded = True
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return
+        prefix = f"v{ACCOUNTING_VERSION}|"
+        for k, v in data.items():
+            if k.startswith(prefix) and k not in self._mem:
+                self._mem[k] = float(v)
+                self.disk_hits += 1  # entries revived from disk
+
+    def _save_disk(self) -> None:
+        """Merge-then-replace: re-read the current file and union this
+        process's entries over it before the atomic rename, so concurrent
+        sweeps sharing one cache file accumulate each other's values
+        instead of last-writer-wins clobbering (epsilon values for a given
+        key are deterministic, so merge order is irrelevant). Entries are
+        small (~100 bytes) and counts modest, so the per-miss re-read +
+        rewrite is noise next to one pmf convolution."""
+        if not self.path:
+            return
+        merged: dict = {}
+        try:
+            with open(self.path) as f:
+                merged = {k: float(v) for k, v in json.load(f).items()}
+        except (OSError, ValueError):
+            pass
+        merged.update(self._mem)
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(os.path.abspath(self.path)), suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(merged, f, indent=0, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    # -- the service --------------------------------------------------------
+    def get_or_compute(self, key: str, fn: Callable[[], float]) -> float:
+        self._load_disk()
+        if key in self._mem:
+            self.hits += 1
+            return self._mem[key]
+        self.misses += 1
+        self.computes += 1
+        val = float(fn())
+        self._mem[key] = val
+        self._save_disk()
+        return val
+
+    def __len__(self) -> int:
+        self._load_disk()
+        return len(self._mem)
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._mem),
+            "hits": self.hits,
+            "misses": self.misses,
+            "disk_hits": self.disk_hits,
+            "computes": self.computes,
+            "path": self.path,
+        }
+
+
+_CACHE: Optional[EpsilonCache] = None
+
+
+def global_cache() -> EpsilonCache:
+    """The process-wide cache. Disk layer comes from $REPRO_PRIVACY_CACHE
+    (a JSON path; empty/'0'/'off' keeps the cache memory-only)."""
+    global _CACHE
+    if _CACHE is None:
+        path = os.environ.get(_ENV_VAR, "").strip()
+        if path.lower() in ("", "0", "off", "none"):
+            path = None
+        _CACHE = EpsilonCache(path=path)
+    return _CACHE
+
+
+def configure(path: Optional[str]) -> EpsilonCache:
+    """Replace the global cache (tests; long sweeps that want a disk file)."""
+    global _CACHE
+    _CACHE = EpsilonCache(path=path)
+    return _CACHE
+
+
+def reset() -> EpsilonCache:
+    """Drop all memoized values (fresh memory-only cache)."""
+    return configure(None)
+
+
+def cached_epsilon(
+    family: str, params, n: int, alpha: float, seed: int,
+    fn: Callable[[], float],
+) -> float:
+    """Route one exact-epsilon computation through the global cache."""
+    return global_cache().get_or_compute(
+        epsilon_key(family, params, n, alpha, seed), fn
+    )

@@ -1,0 +1,232 @@
+"""Calibrate a mechanism to a target privacy budget — the INVERSE accountant.
+
+The repo's accounting so far runs "forwards": pick mechanism params, read
+off the exact aggregate-level eps. A production FL service is driven
+"backwards": given a target (eps, delta), a round count T, and a cohort
+size n, solve for the mechanism parameters. This module closes the loop:
+
+    res = calibrate("rqm", target_eps=8.0, target_delta=1e-5,
+                    rounds=200, cohort=40, c=0.02)
+    res.mechanism          # a registered RQMMechanism hitting the budget
+    res.epsilon            # composed (eps, delta)-DP eps, <= target,
+                           # within `tol` below it
+
+Each family exposes ONE monotone privacy knob (the rest of the options are
+fixed by the caller): RQM's keep-probability ``q`` and PBM's bias ``theta``
+shift epsilon UP as they grow; QMGeo's noise ratio ``r`` shifts it DOWN.
+Monotonicity (asserted by the property suite, tests/test_privacy_properties
+.py) makes bisection against the exact accountant correct; every exact
+epsilon evaluated along the way lands in the privacy cache, so sweeps and
+repeated calibrations are served without re-running pmf convolutions.
+
+A knob only spans a bounded epsilon range at fixed remaining options (e.g.
+RQM with only the endpoints kept still leaks a positive floor): targets
+outside [eps(knob_lo), eps(knob_hi)] raise ``CalibrationError`` carrying
+the achievable range, so callers can adjust c/delta_ratio/m, T, or n.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.mechanisms import Mechanism, make_mechanism
+from repro.core.renyi import RenyiAccountant
+
+# alpha grid for conversion to (eps, delta)-DP. Matches the accountant's
+# span but denser in the low orders where the optimum usually sits for
+# small T; calibration and the FedTrainer default alphas need not agree —
+# both are exact, each picks ITS best alpha after composition.
+DEFAULT_ALPHAS = (1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0, 64.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """A mechanism family's scalar privacy knob for bisection."""
+
+    option: str      # from_options keyword the knob sets
+    lo: float
+    hi: float
+    increasing: bool  # is eps increasing in the knob value?
+
+
+# the calibration surface: one knob per private family (see module doc)
+_KNOBS = {
+    "rqm": Knob("q", 1e-3, 0.995, increasing=True),
+    "pbm": Knob("theta", 1e-3, 0.5, increasing=True),
+    "qmgeo": Knob("r", 5e-3, 0.995, increasing=False),
+}
+
+
+def calibration_knobs() -> dict:
+    """family name -> Knob (read-only view for docs/CLIs)."""
+    return dict(_KNOBS)
+
+
+class CalibrationError(ValueError):
+    """Target epsilon unreachable by the family's knob at the fixed options.
+
+    Carries ``achievable = (eps_min, eps_max)`` so callers can report the
+    feasible range and suggest changing c / delta_ratio / m, T, or n.
+    """
+
+    def __init__(self, msg: str, achievable: tuple):
+        super().__init__(msg)
+        self.achievable = achievable
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    mechanism: Mechanism
+    epsilon: float          # composed (eps, delta)-DP eps of the T rounds
+    alpha: float            # the alpha achieving it
+    target_eps: float
+    target_delta: float
+    rounds: int
+    cohort: int
+    knob: str               # option name that was bisected
+    value: float            # its calibrated value
+    iterations: int         # exact-accountant evaluations spent
+
+    def describe(self) -> str:
+        return (f"{self.mechanism.describe()} -> eps={self.epsilon:.4f} "
+                f"(target {self.target_eps:g}, delta={self.target_delta:g}, "
+                f"T={self.rounds}, n={self.cohort}, alpha={self.alpha:g}, "
+                f"{self.iterations} accountant evals)")
+
+
+def composed_dp_epsilon(
+    mech: Mechanism, *, cohort: int, rounds: int, delta: float,
+    alphas=DEFAULT_ALPHAS,
+) -> tuple:
+    """(eps, alpha)-DP of ``rounds`` identical rounds of ``mech`` with
+    ``cohort`` participating clients, via exact RDP composition."""
+    acc = RenyiAccountant(alphas=tuple(alphas))
+    per_round = [mech.per_round_epsilon(cohort, a) for a in alphas]
+    return acc.projected_dp_epsilon(delta, per_round, rounds)
+
+
+def calibrate(
+    family: str,
+    *,
+    target_eps: float,
+    target_delta: float = 1e-5,
+    rounds: int,
+    cohort: int,
+    tol: float = 0.01,
+    alphas=DEFAULT_ALPHAS,
+    max_iter: int = 60,
+    knob_bounds: Optional[tuple] = None,
+    **options,
+) -> CalibrationResult:
+    """Bisect the family's privacy knob until the composed (eps, delta)-DP
+    epsilon of ``rounds`` rounds with ``cohort`` clients lands within
+    ``[(1 - tol) * target_eps, target_eps]`` — i.e. at most ``tol`` BELOW
+    the target and never above it.
+
+    ``options`` are the family's remaining ``from_options`` keywords (e.g.
+    ``c=0.02, m=16``); the knob option must not be passed there.
+    ``knob_bounds`` optionally narrows the bisection bracket.
+    """
+    knob = _KNOBS.get(family)
+    if knob is None:
+        raise ValueError(
+            f"no calibration knob for mechanism family {family!r}; "
+            f"calibratable: {', '.join(_KNOBS)}"
+        )
+    if knob.option in options:
+        raise ValueError(
+            f"{knob.option!r} is the calibration knob for {family!r}; "
+            f"pass a target, not a value"
+        )
+    if not (target_eps > 0 and 0 < target_delta < 1):
+        raise ValueError(
+            f"need target_eps > 0 and target_delta in (0, 1), got "
+            f"{target_eps}, {target_delta}"
+        )
+    if rounds < 1 or cohort < 1:
+        raise ValueError(f"need rounds >= 1 and cohort >= 1, got "
+                         f"{rounds}, {cohort}")
+
+    evals = 0
+
+    def eps_at(v: float):
+        nonlocal evals
+        evals += 1
+        mech = make_mechanism({"name": family, knob.option: float(v), **options})
+        eps, alpha = composed_dp_epsilon(
+            mech, cohort=cohort, rounds=rounds, delta=target_delta,
+            alphas=alphas,
+        )
+        return eps, alpha, mech
+
+    lo, hi = knob_bounds if knob_bounds else (knob.lo, knob.hi)
+    e_lo, a_lo, m_lo = eps_at(lo)
+    e_hi, a_hi, m_hi = eps_at(hi)
+    # orient: (v_min_eps, v_max_eps) by the knob's monotone direction
+    if knob.increasing:
+        e_min, e_max = e_lo, e_hi
+    else:
+        e_min, e_max = e_hi, e_lo
+    if not (e_min <= target_eps):
+        raise CalibrationError(
+            f"target eps={target_eps:g} below the achievable minimum "
+            f"{e_min:.4g} for {family!r} at {options} with T={rounds}, "
+            f"n={cohort} (achievable [{e_min:.4g}, {e_max:.4g}]); lower T, "
+            f"raise n, or change the fixed options (c/delta_ratio/m)",
+            achievable=(e_min, e_max),
+        )
+    if e_max < (1 - tol) * target_eps:
+        raise CalibrationError(
+            f"target eps={target_eps:g} above the achievable maximum "
+            f"{e_max:.4g} for {family!r} at {options} with T={rounds}, "
+            f"n={cohort} (achievable [{e_min:.4g}, {e_max:.4g}])",
+            achievable=(e_min, e_max),
+        )
+
+    def result(eps, alpha, mech, value):
+        return CalibrationResult(
+            mechanism=mech, epsilon=eps, alpha=alpha, target_eps=target_eps,
+            target_delta=target_delta, rounds=rounds, cohort=cohort,
+            knob=knob.option, value=float(value), iterations=evals,
+        )
+
+    # endpoints may already land in the window (e.g. a just-reachable target)
+    for e, a, m, v in ((e_lo, a_lo, m_lo, lo), (e_hi, a_hi, m_hi, hi)):
+        if (1 - tol) * target_eps <= e <= target_eps:
+            return result(e, a, m, v)
+
+    # invariant: eps(under) <= target < eps(over)
+    if knob.increasing:
+        under, over = lo, hi
+    else:
+        under, over = hi, lo
+    best = None  # tightest point found AT OR BELOW the target
+    if e_min <= target_eps:
+        best = (e_min,) + ((a_lo, m_lo, lo) if knob.increasing
+                           else (a_hi, m_hi, hi))
+    for _ in range(max_iter):
+        mid = 0.5 * (under + over)
+        e, a, m = eps_at(mid)
+        if e <= target_eps:
+            under = mid
+            if best is None or e > best[0]:
+                best = (e, a, m, mid)
+            if e >= (1 - tol) * target_eps:
+                return result(e, a, m, mid)
+        else:
+            over = mid
+    if best is not None:
+        e, a, m, v = best
+        if e >= (1 - tol) * target_eps:
+            return result(e, a, m, v)
+        raise CalibrationError(
+            f"bisection stalled at eps={e:.4g} (< (1-tol) * target "
+            f"{(1 - tol) * target_eps:.4g}) after {max_iter} iterations — "
+            f"the knob's resolution cannot express the target this tightly; "
+            f"loosen tol or adjust the fixed options",
+            achievable=(e_min, e_max),
+        )
+    raise CalibrationError(  # pragma: no cover — bracket check above
+        f"no feasible knob value found for target eps={target_eps:g}",
+        achievable=(e_min, e_max),
+    )

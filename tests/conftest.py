@@ -1,0 +1,79 @@
+"""Shared test fixtures: tiny mechanisms, tiny FedTrainers, and a clean
+privacy cache.
+
+Before this existed every engine/privacy test module hand-rolled its own
+small FedConfig dict and trainer factory; they now share ONE definition,
+so "the small test problem" means the same thing suite-wide. The plain
+helpers (``tiny_mechanism`` / ``small_trainer``) are importable for
+module-level use (``from conftest import ...``); the fixtures wrap them
+for per-test injection.
+"""
+import numpy as np
+import pytest
+
+from repro.core.mechanisms import make_mechanism
+from repro.fed.loop import FedConfig, FedTrainer
+from repro.privacy import cache as cache_lib
+
+# the suite-wide tiny federated problem: small enough that a 5-round run
+# compiles + trains in seconds on CPU, big enough that cohorts (6 of 24)
+# and privacy accounting are non-degenerate
+SMALL_FED = dict(num_clients=24, clients_per_round=6, rounds=5, lr=1.0,
+                 eval_size=64, samples_per_client=8)
+TINY_CLIP = 0.05
+
+# the canonical heterogeneous-cohort knob combinations the engine x
+# subsampling parity suites sweep (fed + shard; keep them in lockstep)
+HETERO_MODES = {
+    "dropout": dict(dropout=0.4),
+    "poisson": dict(subsampling="poisson"),
+    "poisson+dropout": dict(subsampling="poisson", dropout=0.3),
+}
+
+
+def tiny_mechanism(name="rqm", **options):
+    """A registered mechanism at the suite's tiny clip (options override)."""
+    return make_mechanism(name, c=TINY_CLIP, **options)
+
+
+def small_trainer(engine, name="rqm", mech_options=None, **overrides):
+    """A FedTrainer on the tiny problem; ``overrides`` patch SMALL_FED /
+    FedConfig fields (engine-specific knobs included)."""
+    mech = tiny_mechanism(name, **(mech_options or {}))
+    return FedTrainer(mech, FedConfig(engine=engine, **{**SMALL_FED, **overrides}))
+
+
+@pytest.fixture
+def small_fed():
+    """A fresh copy of the tiny FedConfig dict (mutate freely)."""
+    return dict(SMALL_FED)
+
+
+@pytest.fixture
+def tiny_mech():
+    """Factory fixture: ``tiny_mech('qmgeo', r=0.5)`` -> Mechanism."""
+    return tiny_mechanism
+
+
+@pytest.fixture
+def make_trainer():
+    """Factory fixture: ``make_trainer('scan', 'pbm', rounds=3)``."""
+    return small_trainer
+
+
+@pytest.fixture
+def fresh_privacy_cache():
+    """An EMPTY memory-only privacy cache installed as the global one for
+    the test (restored afterwards): epsilon computations are guaranteed to
+    run fresh, and hit/miss counters start at zero."""
+    old = cache_lib.global_cache()
+    fresh = cache_lib.configure(None)
+    try:
+        yield fresh
+    finally:
+        cache_lib._CACHE = old
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -12,7 +12,10 @@ Checks (the ISSUE-3 acceptance contract on a 4-device mesh):
   3. streaming-cohort staging == full staging, bit-for-bit;
   4. the float 'none' baseline (whose partial sums ARE floats) matches scan
      to reduction-order tolerance (allclose);
-  5. per-round epsilon accounts the FULL cross-shard cohort, not n/shards.
+  5. per-round epsilon accounts the FULL cross-shard cohort, not n/shards;
+  6. under Poisson subsampling + dropout (ISSUE 4) the 4-shard engine
+     realizes EXACTLY the scan engine's cohorts — same per-round realized
+     sizes, encoded sums, parameters, and accounted eps sequence.
 """
 import os
 
@@ -70,6 +73,31 @@ def check_none_mechanism_allclose():
     print("  float 'none' baseline allclose across reduction orders")
 
 
+def check_subsampled_cohort_parity():
+    # max_cohort pins the poisson slate to a multiple of 4 so scan and the
+    # 4-shard engine allocate the SAME static slate (see docs/privacy.md)
+    kw = dict(subsampling="poisson", max_cohort=20, dropout=0.25,
+              collect_sums=True)
+    scan = _train("scan", **kw)
+    shard = _train("shard", shards=4, **kw)
+    assert scan.slate == shard.slate
+    assert scan.realized_n == shard.realized_n, (scan.realized_n,
+                                                 shard.realized_n)
+    assert len(set(scan.realized_n)) > 1, "degenerate: constant cohorts"
+    for t, (a, b) in enumerate(zip(scan.round_sums, shard.round_sums)):
+        np.testing.assert_array_equal(a, b, err_msg=f"round {t}")
+    np.testing.assert_array_equal(np.asarray(scan.flat),
+                                  np.asarray(shard.flat))
+    for a, b in zip(scan.accountant.history, shard.accountant.history):
+        np.testing.assert_array_equal(a, b)
+    streamed = _train("shard", shards=4, staging="stream",
+                      subsampling="poisson", max_cohort=20, dropout=0.25)
+    np.testing.assert_array_equal(np.asarray(scan.flat),
+                                  np.asarray(streamed.flat))
+    print("  4-shard poisson+dropout == scan: realized cohorts, sums, "
+          "params, eps sequence (streamed staging included)")
+
+
 def check_full_cohort_epsilon(shard):
     mech = shard.mech
     n = SMALL["clients_per_round"]
@@ -95,4 +123,5 @@ if __name__ == "__main__":
     check_streaming_matches_staged(shard)
     check_none_mechanism_allclose()
     check_full_cohort_epsilon(shard)
+    check_subsampled_cohort_parity()
     print("ALL SHARD ENGINE CHECKS PASS")

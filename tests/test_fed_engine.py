@@ -3,29 +3,27 @@
 Correctness contract:
   * scan engine == perround engine BIT-FOR-BIT after K rounds at a fixed
     seed (both execute the same barrier-bounded round step, one inside an
-    unrolled scan block, one as a standalone jit);
+    unrolled scan block, one as a standalone jit) — including under
+    Poisson-subsampled cohorts and client dropout;
   * the batched (clients, dim) kernel encode == the Algorithm-2 reference
     via the shared quantize_with_uniforms contract (kernels/ref.py);
-  * the legacy host loop still runs, and accounting composes per round
-    under every engine.
+  * the legacy host loop still runs, and accounting composes per round —
+    at the REALIZED cohort size — under every engine.
+
+The tiny problem + trainer factory live in tests/conftest.py (SMALL_FED /
+small_trainer), shared with the shard-engine and privacy suites.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import HETERO_MODES
+from conftest import SMALL_FED as SMALL
+from conftest import small_trainer as _trainer
 
 from repro.core.grid import RQMParams
-from repro.core.mechanisms import make_mechanism, make_rqm_mechanism
-from repro.fed.loop import FedConfig, FedTrainer
+from repro.core.mechanisms import make_rqm_mechanism
 from repro.kernels import ops, ref
-
-SMALL = dict(num_clients=24, clients_per_round=6, rounds=5, lr=1.0,
-             eval_size=64, samples_per_client=8)
-
-
-def _trainer(engine, name="rqm", **overrides):
-    mech = make_mechanism(name, c=0.05)
-    return FedTrainer(mech, FedConfig(engine=engine, **{**SMALL, **overrides}))
 
 
 class TestEngineParity:
@@ -97,6 +95,151 @@ class TestEngineAccounting:
         before = tr.evaluate()["loss"]
         hist = tr.train(rounds=10, eval_every=10, log=lambda *_: None)
         assert hist[-1]["loss"] < before
+
+
+class TestSubsampledCohorts:
+    """Engine x subsampling parity: realized cohorts, encoded sums, and the
+    accounted eps sequence agree across engines under the new knobs."""
+
+    MODES = HETERO_MODES
+
+    @pytest.mark.parametrize("mode", list(MODES))
+    def test_scan_matches_perround_bit_for_bit(self, mode):
+        kw = dict(self.MODES[mode], collect_sums=True)
+        a = _trainer("scan", **kw)
+        b = _trainer("perround", **kw)
+        a.train(rounds=4, eval_every=4, log=lambda *_: None)
+        b.train(rounds=4, eval_every=4, log=lambda *_: None)
+        assert a.realized_n == b.realized_n
+        for t, (x, y) in enumerate(zip(a.round_sums, b.round_sums)):
+            np.testing.assert_array_equal(x, y, err_msg=f"round {t}")
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+
+    @pytest.mark.parametrize("mode", list(MODES))
+    def test_host_realizes_the_same_cohort_sequence(self, mode):
+        """The host engine replays the device key stream under the new
+        knobs: identical realized sizes, hence an identical accounted
+        per-round eps sequence (params only to float tolerance — the host
+        stacks data per round outside the jitted block)."""
+        a = _trainer("scan", **self.MODES[mode])
+        h = _trainer("host", **self.MODES[mode])
+        a.train(rounds=4, eval_every=4, log=lambda *_: None)
+        h.train(rounds=4, eval_every=4, log=lambda *_: None)
+        assert a.realized_n == h.realized_n
+        assert len(a.accountant.history) == len(h.accountant.history) == 4
+        for t, (x, y) in enumerate(zip(a.accountant.history,
+                                       h.accountant.history)):
+            np.testing.assert_array_equal(x, y, err_msg=f"round {t}")
+        np.testing.assert_allclose(np.asarray(a.flat), np.asarray(h.flat),
+                                   atol=1e-5)
+
+    def test_realized_accounting_composes_realized_sizes(self):
+        """The accountant's history IS the per-realized-size eps vectors —
+        dropout-aware: a smaller surviving cohort costs MORE epsilon."""
+        tr = _trainer("scan", dropout=0.4)
+        tr.train(rounds=4, eval_every=4, log=lambda *_: None)
+        alphas = tr.cfg.accountant_alphas
+        assert min(tr.realized_n) < SMALL["clients_per_round"]
+        for n, vec in zip(tr.realized_n, tr.accountant.history):
+            expect = ([tr.mech.per_round_epsilon(n, a) for a in alphas]
+                      if n > 0 else np.zeros(len(alphas)))
+            np.testing.assert_array_equal(vec, expect)
+        # fewer participants -> strictly larger per-round eps (alpha=8)
+        full = tr.mech.per_round_epsilon(SMALL["clients_per_round"], 8.0)
+        small = tr.mech.per_round_epsilon(2, 8.0)
+        assert small > full
+
+    def test_poisson_realized_varies_and_uses_expected_rate(self):
+        tr = _trainer("scan", subsampling="poisson", rounds=8)
+        tr.train(rounds=8, eval_every=8, log=lambda *_: None)
+        assert len(set(tr.realized_n)) > 1  # the cohort size is random
+        mean = sum(tr.realized_n) / len(tr.realized_n)
+        assert 0 < mean < 2.5 * SMALL["clients_per_round"]
+
+    def test_zero_participant_round_is_free_and_harmless(self):
+        """dropout can empty a round: params must not move and the round
+        must cost zero epsilon (the all-zero sum is data-independent)."""
+        tr = _trainer("scan", dropout=0.999, rounds=2)
+        before = np.asarray(tr.flat).copy()
+        tr.train(rounds=2, eval_every=2, log=lambda *_: None)
+        assert tr.realized_n == [0, 0]
+        np.testing.assert_array_equal(np.asarray(tr.flat), before)
+        assert tr.accountant.rdp_epsilon(8.0) == 0.0
+
+    def test_fixed_mode_records_constant_realized(self):
+        tr = _trainer("scan", rounds=3)
+        tr.train(rounds=3, eval_every=3, log=lambda *_: None)
+        assert tr.realized_n == [SMALL["clients_per_round"]] * 3
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown subsampling"):
+            _trainer("scan", subsampling="importance")
+        with pytest.raises(ValueError, match="dropout"):
+            _trainer("scan", dropout=1.0)
+        with pytest.raises(ValueError, match="max_cohort"):
+            _trainer("scan", max_cohort=8)  # only meaningful for poisson
+        with pytest.raises(ValueError, match="exceeds the population"):
+            _trainer("scan", clients_per_round=25)
+
+
+class TestBudgetedTraining:
+    """FedConfig.budget_eps: remaining-budget logging + halt at exhaustion."""
+
+    def test_halts_exactly_at_last_affordable_round(self):
+        tr = _trainer("scan", budget_eps=20.0, budget_delta=1e-5, rounds=100)
+        logs = []
+        hist = tr.train(rounds=100, eval_every=10, log=logs.append)
+        spent, remaining = tr.budget_spent()
+        assert 0 < tr.accountant.rounds < 100
+        assert spent <= 20.0 + 1e-9
+        # one more round would have crossed the budget (exact halting)
+        proj, _ = tr.accountant.projected_dp_epsilon(
+            1e-5, tr._per_round_eps, 1)
+        assert proj > 20.0
+        assert any("exhausted" in s for s in logs)
+        assert hist[-1]["round"] == tr.accountant.rounds
+        assert "eps_spent" in hist[-1] and "eps_remaining" in hist[-1]
+
+    def test_same_halt_round_on_perround_engine(self):
+        a = _trainer("scan", budget_eps=20.0, rounds=100)
+        b = _trainer("perround", budget_eps=20.0, rounds=100)
+        a.train(rounds=100, eval_every=10, log=lambda *_: None)
+        b.train(rounds=100, eval_every=10, log=lambda *_: None)
+        assert a.accountant.rounds == b.accountant.rounds
+
+    def test_budget_with_dropout_overshoots_at_most_one_round(self):
+        tr = _trainer("scan", budget_eps=25.0, dropout=0.5, rounds=60,
+                      scan_block=4)
+        tr.train(rounds=60, eval_every=4, log=lambda *_: None)
+        spent, _ = tr.budget_spent()
+        assert 0 < tr.accountant.rounds < 60
+        # the realized spend crossed the budget on the FINAL round only:
+        # dropping it lands back inside (overshoot <= one realized round)
+        minus_last = np.sum(tr.accountant.history[:-1], axis=0)
+        before = min(
+            e + np.log(1.0 / 1e-5) / (a - 1.0)
+            for a, e in zip(tr.cfg.accountant_alphas, minus_last) if a > 1.0
+        )
+        if spent > 25.0:
+            # the realized spend crossed: only on the final round
+            assert before <= 25.0 + 1e-9
+        else:
+            # halted under budget: not even a NOMINAL round fits, and a
+            # realized round (dropout => smaller cohort) costs at least
+            # as much as a nominal one
+            proj, _ = tr.accountant.projected_dp_epsilon(
+                1e-5, tr._per_round_eps, 1)
+            assert proj > 25.0
+
+    def test_ample_budget_never_halts(self):
+        tr = _trainer("scan", budget_eps=1e6, rounds=5)
+        hist = tr.train(rounds=5, eval_every=5, log=lambda *_: None)
+        assert tr.accountant.rounds == 5
+        assert hist[-1]["eps_remaining"] > 0
+
+    def test_budget_spent_requires_budget(self):
+        with pytest.raises(ValueError, match="budget"):
+            _trainer("scan").budget_spent()
 
 
 class TestBatchedKernelEncode:

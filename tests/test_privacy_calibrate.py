@@ -1,0 +1,212 @@
+"""The inverse accountant (repro.privacy.calibrate) + the epsilon cache
+(repro.privacy.cache).
+
+Acceptance contract (ISSUE 4): calibrate(target_eps, delta, T, n) returns
+a registered mechanism whose composed dp_epsilon(delta) is within 1% BELOW
+the target for all three private families, and a repeated calibration is
+served from the cache without re-running a single pmf convolution.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.mechanisms import Mechanism
+from repro.core.renyi import RenyiAccountant
+from repro.privacy import cache as cache_lib
+from repro.privacy.calibrate import (
+    DEFAULT_ALPHAS,
+    CalibrationError,
+    calibrate,
+    calibration_knobs,
+    composed_dp_epsilon,
+)
+
+# small-but-nondegenerate budget problem: reachable by all three families
+# (see test_target_window) and fast (n=8 keeps the convolutions tiny)
+TARGET = dict(target_eps=30.0, target_delta=1e-5, rounds=50, cohort=8)
+FAMILIES = ("rqm", "pbm", "qmgeo")
+
+
+class TestCalibrate:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_hits_target_within_tolerance(self, family, fresh_privacy_cache):
+        """The acceptance criterion: eps in [0.99 * target, target]."""
+        res = calibrate(family, c=0.02, **TARGET)
+        assert isinstance(res.mechanism, Mechanism)
+        assert res.mechanism.name == family
+        assert 0.99 * TARGET["target_eps"] <= res.epsilon <= TARGET["target_eps"]
+
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_composed_epsilon_is_the_accountants(self, family,
+                                                 fresh_privacy_cache):
+        """The reported epsilon IS what the exact accountant composes for
+        the returned mechanism — re-derived independently here."""
+        res = calibrate(family, c=0.02, **TARGET)
+        acc = RenyiAccountant(alphas=tuple(DEFAULT_ALPHAS))
+        for _ in range(TARGET["rounds"]):
+            acc.step([res.mechanism.per_round_epsilon(TARGET["cohort"], a)
+                      for a in DEFAULT_ALPHAS])
+        eps, alpha = acc.dp_epsilon(TARGET["target_delta"])
+        assert eps == pytest.approx(res.epsilon, rel=1e-12)
+        assert alpha == res.alpha
+
+    def test_knob_value_builds_equal_mechanism(self, fresh_privacy_cache):
+        """CalibrationResult.(knob, value) reconstructs the mechanism."""
+        res = calibrate("rqm", c=0.02, **TARGET)
+        from repro.core.mechanisms import make_mechanism
+
+        rebuilt = make_mechanism({"name": "rqm", "c": 0.02,
+                                  res.knob: res.value})
+        assert rebuilt == res.mechanism
+
+    def test_unreachably_low_target_raises_with_range(self,
+                                                      fresh_privacy_cache):
+        with pytest.raises(CalibrationError) as ei:
+            calibrate("rqm", target_eps=1e-3, target_delta=1e-5,
+                      rounds=50, cohort=8, c=0.02)
+        lo, hi = ei.value.achievable
+        assert 1e-3 < lo < hi
+
+    def test_unreachably_high_target_raises(self, fresh_privacy_cache):
+        with pytest.raises(CalibrationError):
+            calibrate("qmgeo", target_eps=1e9, target_delta=1e-5,
+                      rounds=2, cohort=8, c=0.02)
+
+    def test_knob_cannot_be_fixed(self):
+        with pytest.raises(ValueError, match="calibration knob"):
+            calibrate("rqm", q=0.4, c=0.02, **TARGET)
+
+    def test_unknown_family_rejected(self):
+        with pytest.raises(ValueError, match="no calibration knob"):
+            calibrate("none", c=0.02, **TARGET)
+
+    def test_invalid_budget_rejected(self):
+        with pytest.raises(ValueError, match="target_eps"):
+            calibrate("rqm", target_eps=-1.0, target_delta=1e-5,
+                      rounds=10, cohort=4, c=0.02)
+
+    def test_knob_registry_covers_private_families(self):
+        knobs = calibration_knobs()
+        assert set(knobs) == set(FAMILIES)
+        assert knobs["rqm"].option == "q" and knobs["rqm"].increasing
+        assert knobs["pbm"].option == "theta" and knobs["pbm"].increasing
+        assert knobs["qmgeo"].option == "r" and not knobs["qmgeo"].increasing
+
+
+class TestCalibrationCaching:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_repeat_served_from_cache_zero_convolutions(
+            self, family, fresh_privacy_cache):
+        """The acceptance criterion: a repeated calibration re-runs NO pmf
+        convolution — every exact epsilon is a cache hit."""
+        cache = fresh_privacy_cache
+        res1 = calibrate(family, c=0.02, **TARGET)
+        computes_after_first = cache.computes
+        assert computes_after_first > 0  # the first run did real work
+        res2 = calibrate(family, c=0.02, **TARGET)
+        assert cache.computes == computes_after_first
+        assert res2.mechanism == res1.mechanism
+        assert res2.epsilon == res1.epsilon
+
+    def test_composed_epsilon_cached_across_callers(self,
+                                                    fresh_privacy_cache):
+        """Different entry points hitting the same (params, n, alpha) share
+        one computation (mechanism accounting == calibration internals)."""
+        cache = fresh_privacy_cache
+        res = calibrate("rqm", c=0.02, **TARGET)
+        before = cache.computes
+        eps, _ = composed_dp_epsilon(
+            res.mechanism, cohort=TARGET["cohort"], rounds=TARGET["rounds"],
+            delta=TARGET["target_delta"],
+        )
+        assert cache.computes == before
+        assert eps == pytest.approx(res.epsilon, rel=1e-12)
+
+
+class TestEpsilonCacheDisk:
+    def test_disk_roundtrip_serves_without_compute(self, tmp_path):
+        path = str(tmp_path / "eps.json")
+        calls = []
+
+        def compute():
+            calls.append(1)
+            return 1.234567890123456789
+
+        c1 = cache_lib.EpsilonCache(path=path)
+        key = cache_lib.epsilon_key("rqm", {"c": 0.02, "q": 0.3}, 8, 2.0)
+        v1 = c1.get_or_compute(key, compute)
+        assert calls == [1]
+        # a NEW cache (fresh process emulation) loads the value from disk
+        c2 = cache_lib.EpsilonCache(path=path)
+        v2 = c2.get_or_compute(key, compute)
+        assert calls == [1]  # not recomputed
+        assert v2 == v1  # full float precision survives the JSON roundtrip
+        assert c2.hits == 1 and c2.computes == 0
+
+    def test_version_bump_invalidates_disk_entries(self, tmp_path,
+                                                   monkeypatch):
+        path = str(tmp_path / "eps.json")
+        c1 = cache_lib.EpsilonCache(path=path)
+        key = cache_lib.epsilon_key("rqm", {"c": 0.02}, 4, 2.0)
+        c1.get_or_compute(key, lambda: 7.0)
+        monkeypatch.setattr(cache_lib, "ACCOUNTING_VERSION",
+                            cache_lib.ACCOUNTING_VERSION + 1)
+        c2 = cache_lib.EpsilonCache(path=path)
+        new_key = cache_lib.epsilon_key("rqm", {"c": 0.02}, 4, 2.0)
+        assert new_key != key
+        recomputed = []
+        c2.get_or_compute(new_key, lambda: recomputed.append(1) or 8.0)
+        assert recomputed == [1]  # stale entry ignored, value recomputed
+
+    def test_env_var_configures_global_cache(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "eps.json")
+        monkeypatch.setenv("REPRO_PRIVACY_CACHE", path)
+        old = cache_lib._CACHE
+        try:
+            cache_lib._CACHE = None
+            cache = cache_lib.global_cache()
+            assert cache.path == path
+        finally:
+            cache_lib._CACHE = old
+
+    def test_params_key_full_float_precision(self):
+        k1 = cache_lib.epsilon_key("rqm", {"c": 0.1}, 4, 2.0)
+        k2 = cache_lib.epsilon_key("rqm", {"c": 0.1 + 1e-18}, 4, 2.0)
+        k3 = cache_lib.epsilon_key("rqm", {"c": 0.1 + 1e-16}, 4, 2.0)
+        assert 0.1 + 1e-18 == 0.1 and 0.1 + 1e-16 != 0.1  # double geometry
+        assert k1 == k2  # same double, same key
+        assert k1 != k3  # distinguishable doubles never collide
+
+
+@pytest.mark.slow
+class TestCalibrateFullScale:
+    """Paper-scale calibration (n=40 cohorts): exact but heavier — the
+    n-fold pmf convolutions grow with n, so these run in the push lane."""
+
+    def test_paper_cohort_calibration(self, fresh_privacy_cache):
+        res = calibrate("rqm", target_eps=20.0, target_delta=1e-5,
+                        rounds=200, cohort=40, c=0.02)
+        assert 0.99 * 20.0 <= res.epsilon <= 20.0
+        # amplification-by-aggregation: the same budget at n=8 is
+        # unreachable (the floor sits higher with less amplification)
+        with pytest.raises(CalibrationError):
+            calibrate("rqm", target_eps=20.0, target_delta=1e-5,
+                      rounds=200, cohort=8, c=0.02)
+
+
+def test_rounds_within_budget_math():
+    acc = RenyiAccountant(alphas=(2.0, 8.0))
+    v = np.array([0.05, 0.2])
+    # alpha=2: (10 - log(1e5)/1) / 0.05 -> negative room; alpha=8:
+    # (10 - log(1e5)/7) / 0.2 = (10 - 1.6447) / 0.2 = 41.8 -> 41
+    k = acc.rounds_within_budget(10.0, 1e-5, v)
+    assert k == int((10.0 - math.log(1e5) / 7.0) / 0.2)
+    for _ in range(k):
+        acc.step(v)
+    assert acc.dp_epsilon(1e-5)[0] <= 10.0
+    acc.step(v)
+    assert acc.dp_epsilon(1e-5)[0] > 10.0
+    # a non-private vector affords infinitely many rounds
+    assert RenyiAccountant(alphas=(2.0,)).rounds_within_budget(
+        5.0, 1e-2, [0.0]) == math.inf

@@ -1,0 +1,150 @@
+"""Hypothesis property tests on the privacy subsystem's invariants —
+the ones calibration and budget-halting RELY on (skip-clean without
+hypothesis; scripts/ci.sh installs it).
+
+  * RenyiAccountant: composition is additive (stepping a+b == stepping a
+    then b) and dp_epsilon is monotone nonincreasing in delta;
+  * the calibration bisection invariant: the exact composed epsilon is
+    monotone in each family's privacy knob (RQM q up, PBM theta up,
+    QMGeo r DOWN);
+  * make_mechanism spec()/describe() round-trips for arbitrary valid
+    option dicts (spec exactly, describe idempotently — %g formatting is
+    lossy once, stable ever after).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; "
+                    "run scripts/ci.sh to install test deps")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.grid import RQMParams  # noqa: E402
+from repro.core.mechanisms import make_mechanism  # noqa: E402
+from repro.core.pbm import PBMParams  # noqa: E402
+from repro.core.qmgeo import QMGeoParams  # noqa: E402
+from repro.core.renyi import (  # noqa: E402
+    RenyiAccountant,
+    pbm_aggregate_epsilon,
+    qmgeo_aggregate_epsilon,
+    rqm_aggregate_epsilon,
+)
+
+# small grids/cohorts keep the exact convolutions fast under hypothesis
+ALPHAS = (2.0, 8.0)
+eps_vec = st.lists(st.floats(0.0, 10.0), min_size=len(ALPHAS),
+                   max_size=len(ALPHAS))
+
+
+class TestAccountantProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(a=eps_vec, b=eps_vec, delta=st.floats(1e-10, 0.5))
+    def test_composition_additivity(self, a, b, delta):
+        """step(a); step(b) == step(a + b) at every alpha AND after the
+        dp conversion (the additivity the whole budget model rests on)."""
+        acc1 = RenyiAccountant(alphas=ALPHAS)
+        acc1.step(a)
+        acc1.step(b)
+        acc2 = RenyiAccountant(alphas=ALPHAS)
+        acc2.step(np.asarray(a) + np.asarray(b))
+        for alpha in ALPHAS:
+            assert acc1.rdp_epsilon(alpha) == pytest.approx(
+                acc2.rdp_epsilon(alpha), rel=1e-12, abs=1e-12)
+        assert acc1.dp_epsilon(delta)[0] == pytest.approx(
+            acc2.dp_epsilon(delta)[0], rel=1e-12)
+
+    @settings(max_examples=50, deadline=None)
+    @given(steps=st.lists(eps_vec, min_size=0, max_size=6),
+           d1=st.floats(1e-12, 0.5), d2=st.floats(1e-12, 0.5))
+    def test_dp_epsilon_monotone_in_delta(self, steps, d1, d2):
+        """A weaker delta (larger) never costs more epsilon."""
+        acc = RenyiAccountant(alphas=ALPHAS)
+        for v in steps:
+            acc.step(v)
+        lo, hi = min(d1, d2), max(d1, d2)
+        assert acc.dp_epsilon(hi)[0] <= acc.dp_epsilon(lo)[0] + 1e-12
+
+    @settings(max_examples=30, deadline=None)
+    @given(steps=st.lists(eps_vec, min_size=1, max_size=5))
+    def test_history_records_every_step(self, steps):
+        acc = RenyiAccountant(alphas=ALPHAS)
+        for v in steps:
+            acc.step(v)
+        assert len(acc.history) == acc.rounds == len(steps)
+        np.testing.assert_allclose(np.sum(acc.history, axis=0),
+                                   [acc.rdp_epsilon(a) for a in ALPHAS])
+
+
+class TestKnobMonotonicity:
+    """The invariant the calibration bisection relies on: the exact
+    composed epsilon moves one way along each family's knob."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(c=st.floats(0.01, 5.0), m=st.integers(4, 16),
+           n=st.integers(1, 3), alpha=st.sampled_from(ALPHAS),
+           q1=st.floats(0.02, 0.98), q2=st.floats(0.02, 0.98))
+    def test_rqm_eps_monotone_in_q(self, c, m, n, alpha, q1, q2):
+        lo, hi = sorted((q1, q2))
+        e_lo = rqm_aggregate_epsilon(RQMParams(c=c, delta=c, m=m, q=lo), n, alpha)
+        e_hi = rqm_aggregate_epsilon(RQMParams(c=c, delta=c, m=m, q=hi), n, alpha)
+        assert e_lo <= e_hi + 1e-9
+
+    @settings(max_examples=12, deadline=None)
+    @given(c=st.floats(0.01, 5.0), m=st.integers(2, 16),
+           n=st.integers(1, 3), alpha=st.sampled_from(ALPHAS),
+           t1=st.floats(0.01, 0.5), t2=st.floats(0.01, 0.5))
+    def test_pbm_eps_monotone_in_theta(self, c, m, n, alpha, t1, t2):
+        lo, hi = sorted((t1, t2))
+        e_lo = pbm_aggregate_epsilon(PBMParams(c=c, m=m, theta=lo), n, alpha)
+        e_hi = pbm_aggregate_epsilon(PBMParams(c=c, m=m, theta=hi), n, alpha)
+        assert e_lo <= e_hi + 1e-9
+
+    @settings(max_examples=12, deadline=None)
+    @given(c=st.floats(0.01, 5.0), m=st.integers(4, 16),
+           n=st.integers(1, 3), alpha=st.sampled_from(ALPHAS),
+           r1=st.floats(0.02, 0.98), r2=st.floats(0.02, 0.98))
+    def test_qmgeo_eps_antitone_in_r(self, c, m, n, alpha, r1, r2):
+        lo, hi = sorted((r1, r2))
+        e_lo = qmgeo_aggregate_epsilon(QMGeoParams(c=c, delta=c, m=m, r=lo), n, alpha)
+        e_hi = qmgeo_aggregate_epsilon(QMGeoParams(c=c, delta=c, m=m, r=hi), n, alpha)
+        assert e_lo >= e_hi - 1e-9  # more noise, less epsilon
+
+
+def _mech_options(draw):
+    name = draw(st.sampled_from(["rqm", "pbm", "qmgeo", "none"]))
+    opts = {"c": draw(st.floats(1e-3, 10.0))}
+    if name != "none":
+        opts["m"] = draw(st.integers(1 if name == "pbm" else 2, 40))
+        if name == "rqm":
+            opts["q"] = draw(st.floats(0.01, 0.99))
+        elif name == "pbm":
+            opts["theta"] = draw(st.floats(0.01, 0.5))
+        else:
+            opts["r"] = draw(st.floats(0.01, 0.99))
+        if name in ("rqm", "qmgeo"):
+            opts["delta"] = draw(st.floats(1e-3, 10.0))
+    return {"name": name, **opts}
+
+
+mech_spec = st.composite(_mech_options)()
+
+
+class TestSpecRoundTrip:
+    @settings(max_examples=60, deadline=None)
+    @given(spec=mech_spec)
+    def test_spec_round_trip_exact(self, spec):
+        """make_mechanism(mech.spec()) rebuilds an EQUAL mechanism — the
+        dict spec carries full float precision."""
+        mech = make_mechanism(spec)
+        assert make_mechanism(mech.spec()) == mech
+
+    @settings(max_examples=60, deadline=None)
+    @given(spec=mech_spec)
+    def test_describe_round_trip_idempotent(self, spec):
+        """describe() (the CLI one-liner) is %g-lossy ONCE: parsing it
+        back yields a mechanism whose describe() is the same string."""
+        mech = make_mechanism(spec)
+        d = mech.describe()
+        rebuilt = make_mechanism(d)
+        assert rebuilt.name == mech.name
+        assert rebuilt.describe() == d

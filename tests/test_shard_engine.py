@@ -18,19 +18,13 @@ import sys
 import jax
 import numpy as np
 import pytest
+from conftest import HETERO_MODES
+from conftest import SMALL_FED as SMALL
+from conftest import small_trainer as _trainer
 
-from repro.core.mechanisms import make_mechanism
-from repro.fed.loop import FedConfig, FedTrainer
+from repro.fed.loop import FedConfig
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-SMALL = dict(num_clients=24, clients_per_round=6, rounds=5, lr=1.0,
-             eval_size=64, samples_per_client=8)
-
-
-def _trainer(engine, name="rqm", **overrides):
-    mech = make_mechanism(name, c=0.05)
-    return FedTrainer(mech, FedConfig(engine=engine, **{**SMALL, **overrides}))
 
 
 class TestSingleShardParity:
@@ -116,6 +110,41 @@ class TestStreamingCohort:
     def test_unknown_staging_rejected(self):
         with pytest.raises(ValueError, match="unknown staging"):
             _trainer("shard", staging="lazy")
+
+
+class TestShardSubsampledCohorts:
+    """1-shard hetero parity (the multi-shard versions run in the
+    subprocess checks): subsampling/dropout on the shard engine realize
+    exactly the scan engine's cohorts, sums, params, and eps sequence."""
+
+    MODES = HETERO_MODES
+
+    @pytest.mark.parametrize("mode", list(MODES))
+    def test_shard_matches_scan_bit_for_bit(self, mode):
+        kw = dict(self.MODES[mode], collect_sums=True)
+        a = _trainer("scan", **kw)
+        b = _trainer("shard", shards=1, **kw)
+        assert a.slate == b.slate  # same static cohort slate on 1 shard
+        a.train(rounds=4, eval_every=4, log=lambda *_: None)
+        b.train(rounds=4, eval_every=4, log=lambda *_: None)
+        assert a.realized_n == b.realized_n
+        for t, (x, y) in enumerate(zip(a.round_sums, b.round_sums)):
+            np.testing.assert_array_equal(x, y, err_msg=f"round {t}")
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        for t, (x, y) in enumerate(zip(a.accountant.history,
+                                       b.accountant.history)):
+            np.testing.assert_array_equal(x, y, err_msg=f"round {t}")
+
+    def test_streamed_hetero_matches_scan(self):
+        """Streaming staging replays the 4-way key split: identical slate
+        ids AND identical realized cohorts."""
+        a = _trainer("scan", subsampling="poisson", dropout=0.2)
+        b = _trainer("shard", shards=1, staging="stream", scan_block=2,
+                     subsampling="poisson", dropout=0.2)
+        a.train(rounds=4, eval_every=4, log=lambda *_: None)
+        b.train(rounds=4, eval_every=4, log=lambda *_: None)
+        assert a.realized_n == b.realized_n
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
 
 
 class TestShardAccounting:
