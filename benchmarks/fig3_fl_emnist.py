@@ -134,6 +134,32 @@ def run(csv=print, rounds=ROUNDS, fed=None, bench_rounds=12):
     return results
 
 
+def bench_json(path, smoke=False, rounds=None):
+    """Run the benchmark and write the machine-readable BENCH_fig3.json
+    payload (shared by the CLI below and benchmarks/run.py)."""
+    rounds = rounds or (SMOKE_ROUNDS if smoke else ROUNDS)
+    fed = SMOKE_FED if smoke else FED
+    results = run(rounds=rounds, fed=fed)
+    eng = results.pop("engine")
+    payload = {
+        "benchmark": "fig3_fl_emnist",
+        "smoke": smoke,
+        "rounds": rounds,
+        "backend": jax.default_backend(),
+        "engines": {
+            "host": {"rounds_per_s": eng["host_rps"]},
+            "scan": {"rounds_per_s": eng["scan_rps"]},
+            "shard": {"rounds_per_s": eng["shard_rps"],
+                      "shards": eng["shards"]},
+        },
+        "mechanisms": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -144,27 +170,11 @@ def main():
                     help="write machine-readable results (BENCH_fig3.json)")
     args = ap.parse_args()
 
-    rounds = args.rounds or (SMOKE_ROUNDS if args.smoke else ROUNDS)
-    fed = SMOKE_FED if args.smoke else FED
-    results = run(rounds=rounds, fed=fed)
     if args.json:
-        eng = results.pop("engine")
-        payload = {
-            "benchmark": "fig3_fl_emnist",
-            "smoke": args.smoke,
-            "rounds": rounds,
-            "backend": jax.default_backend(),
-            "engines": {
-                "host": {"rounds_per_s": eng["host_rps"]},
-                "scan": {"rounds_per_s": eng["scan_rps"]},
-                "shard": {"rounds_per_s": eng["shard_rps"],
-                          "shards": eng["shards"]},
-            },
-            "mechanisms": results,
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print("wrote", args.json)
+        bench_json(args.json, smoke=args.smoke, rounds=args.rounds)
+    else:
+        rounds = args.rounds or (SMOKE_ROUNDS if args.smoke else ROUNDS)
+        run(rounds=rounds, fed=SMOKE_FED if args.smoke else FED)
 
 
 if __name__ == "__main__":

@@ -113,6 +113,35 @@ def run(csv=print, targets=TARGETS, rounds=ROUNDS, fed=None, delta=1e-5,
     return results
 
 
+def bench_json(path, smoke=False, rounds=None, delta=1e-5):
+    """Run the sweep and write the machine-readable BENCH_budget.json
+    payload (shared by the CLI below and benchmarks/run.py). The artifact
+    is written even on contract violations (recorded in it); violations
+    are returned so callers can still fail loudly."""
+    targets = SMOKE_TARGETS if smoke else TARGETS
+    rounds = rounds or (SMOKE_ROUNDS if smoke else ROUNDS)
+    fed = SMOKE_FED if smoke else FED
+    t0 = time.time()
+    results = run(targets=targets, rounds=rounds, fed=fed, delta=delta,
+                  raise_on_violation=False)
+    violations = results.pop("_violations")
+    payload = {
+        "benchmark": "fig_budget",
+        "smoke": smoke,
+        "rounds": rounds,
+        "delta": delta,
+        "backend": jax.default_backend(),
+        "seconds_total": round(time.time() - t0, 2),
+        "cache": global_cache().stats(),
+        "violations": violations,
+        "targets": {str(t): r for t, r in results.items()},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return violations
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -124,30 +153,16 @@ def main():
                     help="write machine-readable results (BENCH_budget.json)")
     args = ap.parse_args()
 
-    targets = SMOKE_TARGETS if args.smoke else TARGETS
-    rounds = args.rounds or (SMOKE_ROUNDS if args.smoke else ROUNDS)
-    fed = SMOKE_FED if args.smoke else FED
-    t0 = time.time()
-    # write the JSON artifact even on contract violations (recorded in it),
-    # then exit nonzero so the bench lane still fails loudly
-    results = run(targets=targets, rounds=rounds, fed=fed, delta=args.delta,
-                  raise_on_violation=False)
-    violations = results.pop("_violations")
     if args.json:
-        payload = {
-            "benchmark": "fig_budget",
-            "smoke": args.smoke,
-            "rounds": rounds,
-            "delta": args.delta,
-            "backend": jax.default_backend(),
-            "seconds_total": round(time.time() - t0, 2),
-            "cache": global_cache().stats(),
-            "violations": violations,
-            "targets": {str(t): r for t, r in results.items()},
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print("wrote", args.json)
+        violations = bench_json(args.json, smoke=args.smoke,
+                                rounds=args.rounds, delta=args.delta)
+    else:
+        targets = SMOKE_TARGETS if args.smoke else TARGETS
+        rounds = args.rounds or (SMOKE_ROUNDS if args.smoke else ROUNDS)
+        results = run(targets=targets, rounds=rounds,
+                      fed=SMOKE_FED if args.smoke else FED, delta=args.delta,
+                      raise_on_violation=False)
+        violations = results.pop("_violations")
     if violations:
         raise SystemExit(f"budget contract violated ({len(violations)}): "
                          + "; ".join(violations))

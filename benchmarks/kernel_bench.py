@@ -73,31 +73,40 @@ def run(csv=print):
             "vmap_us": us_vmap}
 
 
+def bench_json(path):
+    """Run the benchmark and write the machine-readable BENCH_kernels.json
+    payload (shared by the CLI below and benchmarks/run.py)."""
+    results = run()
+    payload = {
+        "benchmark": "kernel_bench",
+        "backend": jax.default_backend(),
+        "elements": N,
+        "kernels": {
+            "rqm_fused_jnp": {"us": results["rqm_fast_us"],
+                              "elts_per_us": N / results["rqm_fast_us"]},
+            "rqm_uniforms_ref": {"us": results["ref_us"]},
+            "rqm_pallas_interpret_128k": {"us": results["interpret_us"]},
+            "pbm_fused_jnp": {"us": results["pbm_fast_us"],
+                              "elts_per_us": N / results["pbm_fast_us"]},
+            "rqm_batched_40x25k": {"us": results["batch_us"],
+                                   "vmap_us": results["vmap_us"]},
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("wrote", path)
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable results (BENCH_kernels.json)")
     args = ap.parse_args()
-    results = run()
     if args.json:
-        payload = {
-            "benchmark": "kernel_bench",
-            "backend": jax.default_backend(),
-            "elements": N,
-            "kernels": {
-                "rqm_fused_jnp": {"us": results["rqm_fast_us"],
-                                  "elts_per_us": N / results["rqm_fast_us"]},
-                "rqm_uniforms_ref": {"us": results["ref_us"]},
-                "rqm_pallas_interpret_128k": {"us": results["interpret_us"]},
-                "pbm_fused_jnp": {"us": results["pbm_fast_us"],
-                                  "elts_per_us": N / results["pbm_fast_us"]},
-                "rqm_batched_40x25k": {"us": results["batch_us"],
-                                       "vmap_us": results["vmap_us"]},
-            },
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print("wrote", args.json)
+        bench_json(args.json)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -1,4 +1,8 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV; the JSON-instrumented benchmarks (fig3, kernels, budget) ALSO write
+# machine-readable BENCH_*.json files to the repo root by default — the
+# perf-trajectory artifacts the CI bench lane uploads (docs/scaling.md
+# explains how to read them). --json-dir none disables the artifacts.
 from __future__ import annotations
 
 import argparse
@@ -8,7 +12,8 @@ import time
 
 # `python benchmarks/run.py` puts benchmarks/ itself on sys.path; the
 # `from benchmarks import ...` imports below need the repo root.
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO_ROOT)
 
 
 def main() -> None:
@@ -16,15 +21,30 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig45,fig3,budget,kernels,qopt,"
                          "roofline")
-    ap.add_argument("--fl-rounds", type=int, default=120)
+    ap.add_argument("--fl-rounds", type=int, default=None,
+                    help="fig3 round budget (default: the benchmark's own "
+                         "full/smoke default; an explicit value wins even "
+                         "with --smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-lane budgets for the JSON-instrumented "
+                         "benchmarks (fig3, budget)")
+    ap.add_argument("--json-dir", default=REPO_ROOT, metavar="DIR",
+                    help="where BENCH_*.json artifacts land (default: the "
+                         "repo root, where the CI bench lane uploads them "
+                         "from); 'none' disables JSON output")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
+    json_dir = None if args.json_dir == "none" else args.json_dir
 
     def want(name):
         return wanted is None or name in wanted
 
+    def json_path(name):
+        return os.path.join(json_dir, name) if json_dir else None
+
     print("name,us_per_call,derived")
     t0 = time.time()
+    violations = []
     if want("fig2"):
         from benchmarks import fig2_renyi
 
@@ -36,17 +56,35 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import kernel_bench
 
-        kernel_bench.run()
+        if json_dir:
+            kernel_bench.bench_json(json_path("BENCH_kernels.json"))
+        else:
+            kernel_bench.run()
     if want("fig3"):
         from benchmarks import fig3_fl_emnist
 
-        fig3_fl_emnist.run(rounds=args.fl_rounds)
+        if json_dir:
+            fig3_fl_emnist.bench_json(json_path("BENCH_fig3.json"),
+                                      smoke=args.smoke, rounds=args.fl_rounds)
+        else:
+            rounds = args.fl_rounds or (fig3_fl_emnist.SMOKE_ROUNDS
+                                        if args.smoke else fig3_fl_emnist.ROUNDS)
+            fig3_fl_emnist.run(
+                rounds=rounds,
+                fed=fig3_fl_emnist.SMOKE_FED if args.smoke else None,
+            )
     if want("budget"):
         from benchmarks import fig_budget
 
-        fig_budget.run(targets=fig_budget.SMOKE_TARGETS,
-                       rounds=fig_budget.SMOKE_ROUNDS,
-                       fed=fig_budget.SMOKE_FED)
+        if json_dir:
+            # the budget sweep always runs at the smoke budget here (the
+            # full sweep is a standalone `python benchmarks/fig_budget.py`)
+            violations = fig_budget.bench_json(json_path("BENCH_budget.json"),
+                                               smoke=True)
+        else:
+            fig_budget.run(targets=fig_budget.SMOKE_TARGETS,
+                           rounds=fig_budget.SMOKE_ROUNDS,
+                           fed=fig_budget.SMOKE_FED)
     if want("qopt"):
         from benchmarks import beyond_qopt
 
@@ -57,6 +95,9 @@ def main() -> None:
         roofline.run()
     print(f"total_wall,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}",
           file=sys.stderr)
+    if violations:
+        raise SystemExit(f"budget contract violated ({len(violations)}): "
+                         + "; ".join(violations))
 
 
 if __name__ == "__main__":

@@ -26,7 +26,10 @@ drops selected clients i.i.d. — accounting composes at the realized size.
       --target-eps 30 --subsampling poisson --dropout 0.1
 """
 import argparse
+import dataclasses
+import hashlib
 import json
+import os
 
 from repro.core.mechanisms import (
     accepted_options,
@@ -34,13 +37,15 @@ from repro.core.mechanisms import (
     mechanism_names,
     parse_mechanism_spec,
 )
-from repro.fed.loop import FedConfig, FedTrainer
+from repro.fed import FedConfig, FedTrainer
+from repro.fed.engine import engine_names
 from repro.privacy.calibrate import DEFAULT_ALPHAS, calibrate, calibration_knobs
 
 
-def run_one(spec, fcfg, target_eps=None, **defaults):
+def run_one(spec, fcfg, target_eps=None, resume=False, **defaults):
     """One mechanism end-to-end: build from the spec (or calibrate the
-    family to --target-eps), train with the configured round engine,
+    family to --target-eps), train with the configured round engine
+    (resuming from the mechanism's checkpoint directory when asked),
     report the mechanism's own accounting."""
     calibrated = None
     name, explicit = parse_mechanism_spec(spec)
@@ -60,8 +65,42 @@ def run_one(spec, fcfg, target_eps=None, **defaults):
         print(f"[{name}] calibrated: {calibrated.describe()}")
     else:
         mech = make_mechanism(spec, **defaults)
+    if fcfg.ckpt_dir:
+        # one checkpoint directory per FULL mechanism spec (family name +
+        # an 8-hex digest of the exact parameters): a multi-mechanism
+        # sweep must not interleave checkpoints, and two runs of the same
+        # family with different knobs (or different calibrations) must
+        # not clobber each other's step files
+        digest = hashlib.sha256(mech.describe().encode()).hexdigest()[:8]
+        fcfg = dataclasses.replace(
+            fcfg, ckpt_dir=os.path.join(fcfg.ckpt_dir, f"{name}-{digest}")
+        )
     tr = FedTrainer(mech, fcfg)
-    hist = tr.train(eval_every=25)
+    remaining = fcfg.rounds
+    if resume:
+        try:
+            restored = tr.restore_checkpoint()
+        except FileNotFoundError:
+            print(f"[{name}] no checkpoints in {fcfg.ckpt_dir}; "
+                  f"starting fresh")
+        else:
+            remaining = max(fcfg.rounds - restored, 0)
+            if remaining == 0:
+                print(f"[{name}] checkpoint at round {restored} already "
+                      f"covers --rounds {fcfg.rounds}; nothing to train "
+                      f"(reporting the restored state)")
+            else:
+                print(f"[{name}] resumed from round {restored} "
+                      f"({fcfg.ckpt_dir}); {remaining} rounds to go")
+    hist = tr.train(rounds=remaining, eval_every=25)
+    if not hist:
+        # nothing left to train (resume at/beyond --rounds): still report
+        # the restored model instead of an empty history
+        m = tr.evaluate()
+        m["round"] = tr.accountant.rounds
+        if fcfg.budget_eps is not None:
+            m["eps_spent"], m["eps_remaining"] = tr.budget_spent()
+        hist = [m]
     out = {"mechanism": mech.name, "spec": mech.describe(), "history": hist}
     if calibrated is not None:
         out["calibration"] = {
@@ -103,13 +142,28 @@ def main():
                          "'name:k=v,...' spec string; the flags above act "
                          "as defaults for whatever the spec leaves unset")
     ap.add_argument("--engine", default="scan",
-                    choices=["scan", "perround", "host", "shard"],
-                    help="round engine: 'scan' = device-resident jitted "
-                         "blocks (fastest on one device), 'shard' = scan "
-                         "blocks sharded over all visible devices with "
-                         "encoded-domain cross-shard aggregation (see "
-                         "docs/scaling.md), 'perround' = same step driven "
-                         "per round, 'host' = legacy host loop")
+                    choices=list(engine_names()),
+                    help="round engine (any registered engine, "
+                         "docs/engines.md): 'scan' = device-resident "
+                         "jitted blocks (fastest on one device), 'shard' "
+                         "= scan blocks sharded over all visible devices "
+                         "with encoded-domain cross-shard aggregation "
+                         "(see docs/scaling.md), 'perround' = same step "
+                         "driven per round, 'host' = legacy host loop")
+    ap.add_argument("--server-opt", default="sgd",
+                    help="server optimizer at the decode-then-apply "
+                         "boundary: 'sgd' (the paper's w - lr*g_hat), "
+                         "'momentum', or 'adam'; state rides the jitted "
+                         "carry and checkpoints with the params")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (per-mechanism subdirs); "
+                         "enables --ckpt-every and --resume")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N rounds (requires --ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from --ckpt-dir "
+                         "and continue BIT-IDENTICALLY to the "
+                         "uninterrupted run (params + epsilon sequence)")
     ap.add_argument("--shards", type=int, default=None,
                     help="engine=shard: cohort shards (default: all devices)")
     ap.add_argument("--staging", default="full", choices=["full", "stream"],
@@ -134,12 +188,16 @@ def main():
     ap.add_argument("--target-delta", type=float, default=1e-5)
     ap.add_argument("--out", default=None, help="write results JSON")
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     fcfg = FedConfig(
         num_clients=args.clients, clients_per_round=args.per_round,
         rounds=args.rounds, lr=args.lr, eval_size=1000,
         data_noise=1.5, data_deform=1.2,  # see benchmarks/fig3_fl_emnist.py
         engine=args.engine, shards=args.shards, staging=args.staging,
+        server_opt=args.server_opt,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         subsampling=args.subsampling, dropout=args.dropout,
         budget_eps=args.target_eps, budget_delta=args.target_delta,
         # budget mode: account on the same alpha grid calibration optimizes
@@ -151,7 +209,8 @@ def main():
              else [args.mechanism])
     defaults = dict(c=args.clip, m=args.m, q=args.q,
                     delta_ratio=args.delta_ratio, theta=args.theta, r=args.r)
-    results = [run_one(s, fcfg, target_eps=args.target_eps, **defaults)
+    results = [run_one(s, fcfg, target_eps=args.target_eps,
+                       resume=args.resume, **defaults)
                for s in specs]
     if args.out:
         with open(args.out, "w") as f:

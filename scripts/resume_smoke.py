@@ -1,0 +1,66 @@
+"""CI resume-smoke: train, "kill", resume — assert the bit-identical
+continuation contract end to end (.github/workflows/ci.yml PR lane).
+
+Phase 1 trains ROUNDS rounds uninterrupted (the reference). Phase 2
+trains only up to the MID-round checkpoint and stops — simulating a
+killed run whose only survivor is the checkpoint directory. Phase 3
+builds a FRESH trainer (new jits, new RNG objects), restores the
+checkpoint, trains the remaining rounds, and asserts the parameters and
+the accounted epsilon sequence equal the reference EXACTLY (bit-for-bit,
+not allclose) — on both the default scan engine and a stateful
+server optimizer.
+"""
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.core.mechanisms import make_mechanism
+from repro.fed import FedConfig, FedTrainer
+
+FED = dict(num_clients=24, clients_per_round=6, rounds=6, lr=1.0,
+           eval_size=64, samples_per_client=8)
+ROUNDS, MID = 6, 3
+
+
+def check(server_opt: str) -> None:
+    mech = lambda: make_mechanism("rqm", c=0.05)
+    quiet = dict(eval_every=ROUNDS, log=lambda *_: None)
+
+    ref = FedTrainer(mech(), FedConfig(server_opt=server_opt, **FED))
+    ref.train(rounds=ROUNDS, **quiet)
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        cfg = dict(server_opt=server_opt, ckpt_dir=ckpt, ckpt_every=MID, **FED)
+        killed = FedTrainer(mech(), FedConfig(**cfg))
+        killed.train(rounds=MID, **quiet)  # dies here; checkpoint survives
+        del killed
+
+        resumed = FedTrainer(mech(), FedConfig(**cfg))
+        restored = resumed.restore_checkpoint()
+        assert restored == MID, f"restored {restored}, expected {MID}"
+        resumed.train(rounds=ROUNDS - MID, **quiet)
+
+        np.testing.assert_array_equal(
+            np.asarray(ref.flat), np.asarray(resumed.flat),
+            err_msg=f"[{server_opt}] resumed params differ from uninterrupted",
+        )
+        assert resumed.realized_n == ref.realized_n
+        for t, (x, y) in enumerate(zip(ref.accountant.history,
+                                       resumed.accountant.history)):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"[{server_opt}] eps vector differs at round {t}"
+            )
+    print(f"resume-smoke [{server_opt}]: OK "
+          f"({ROUNDS} rounds == {MID} + resume {ROUNDS - MID}, bit-identical)")
+
+
+def main():
+    check("sgd")
+    check("momentum")
+    print("RESUME SMOKE PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,7 +59,11 @@ def latest_step(ckpt_dir: str):
 
 def restore(ckpt_dir: str, step: int, like):
     """Restore into the structure/dtypes of `like` (a pytree of arrays or
-    ShapeDtypeStructs)."""
+    ShapeDtypeStructs). Leaves whose reference is a plain numpy array are
+    restored as numpy (exact — never routed through jax, whose disabled
+    x64 mode would silently truncate float64/int64 host-side state such as
+    the fed trainer's accountant history); everything else restores as a
+    jnp array of the reference dtype."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     with np.load(path) as data:
         named = _flatten_with_names(like)
@@ -72,6 +76,9 @@ def restore(ckpt_dir: str, step: int, like):
                 raise ValueError(
                     f"shape mismatch for {name}: ckpt {arr.shape} vs {ref.shape}"
                 )
-            leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+            if isinstance(ref, np.ndarray):
+                leaves.append(np.asarray(arr, dtype=ref.dtype))
+            else:
+                leaves.append(jnp.asarray(arr, dtype=ref.dtype))
     treedef = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -36,7 +36,7 @@ and benchmarks:
 Keyword options passed to ``make_mechanism`` are DEFAULTS (unknown ones are
 ignored, so one CLI surface can serve every mechanism); options inline in
 the spec/dict are EXPLICIT (unknown ones raise). Adding a new mechanism is
-one registered class — no if-chains, no edits to fed/loop.py or
+one registered class — no if-chains, no edits to the fed engine package or
 distributed/step.py (see docs/mechanisms.md for the worked example).
 """
 from __future__ import annotations

@@ -187,7 +187,7 @@ class RenyiAccountant:
     ) -> tuple[float, float]:
         """(eps, alpha)-DP after the spent budget PLUS ``rounds`` further
         rounds of the per-round vector ``extra_eps`` (the budget-halting
-        lookahead in fed/loop.py). ``rounds=0`` is the spent budget itself."""
+        lookahead in fed/trainer.py). ``rounds=0`` is the spent budget itself."""
         total = self._eps
         if rounds:
             total = total + rounds * np.asarray(extra_eps, dtype=np.float64)

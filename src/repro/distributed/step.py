@@ -54,7 +54,7 @@ class MeshPlan:
 
     model_axis=None (or an axis the mesh doesn't have) is a pure
     client-parallel plan — every device is a whole client group, tp == 1.
-    The federated "shard" engine (fed/loop.py) runs on exactly this plan
+    The federated "shard" engine (fed/engines.py) runs on exactly this plan
     over a 1-D ("shard",) mesh."""
 
     mesh: Mesh

@@ -1,4 +1,45 @@
-from repro.fed.cnn import cnn_apply, cnn_init
-from repro.fed.loop import FedConfig, FedTrainer
+"""Algorithm 1 — Distributed DP-SGD with RQM — the paper-faithful federated
+loop (the EMNIST experiment of Section 6.2), as a composable package.
 
-__all__ = ["FedConfig", "FedTrainer", "cnn_init", "cnn_apply"]
+Per round: sample n of N clients; each computes a clipped gradient on its
+local data; the gradient is flattened and encoded coordinate-wise by the
+mechanism (RQM levels / PBM binomial draws / raw floats for noise-free);
+SecAgg sums the integer messages (modular-sum emulation); the server
+decodes g_hat and applies the pluggable SERVER OPTIMIZER (FedConfig.
+server_opt: "sgd" is the paper's w - lr*g_hat). The Renyi accountant
+composes the per-round aggregate-level epsilon across rounds.
+
+Package layout (docs/engines.md has the full guide):
+
+  * ``config``  — FedConfig, the one knob surface for every engine.
+  * ``engine``  — the ``@register_engine`` registry + ``Engine`` base
+    (mirrors ``core.mechanisms.register_mechanism``).
+  * ``engines`` — the four registered engines: ``scan`` (device-resident
+    jitted blocks, default), ``perround`` (same step, one jit per round —
+    proves scan correct bit-for-bit), ``host`` (legacy baseline), and
+    ``shard`` (scan blocks sharded over a device mesh with encoded-domain
+    cross-shard aggregation; docs/scaling.md).
+  * ``cohort``  — slate sizing/sampling + participation masks
+    (subsampling/dropout; docs/privacy.md).
+  * ``staging`` — full-population vs. streaming-cohort device staging.
+  * ``rounds``  — the jitted round-step/block builders shared by the
+    engines, including the decode-then-apply server-optimizer boundary.
+  * ``trainer`` — FedTrainer, the thin orchestrator over engine +
+    accountant + privacy budget + checkpoint/resume.
+  * ``checkpointing`` — bit-identical save/resume (checkpoint/store.py).
+"""
+from repro.fed.cnn import cnn_apply, cnn_init
+from repro.fed.config import FedConfig
+from repro.fed.engine import Engine, engine_names, get_engine, register_engine
+from repro.fed.trainer import FedTrainer
+
+__all__ = [
+    "FedConfig",
+    "FedTrainer",
+    "Engine",
+    "register_engine",
+    "engine_names",
+    "get_engine",
+    "cnn_init",
+    "cnn_apply",
+]

@@ -1,0 +1,165 @@
+"""Checkpoint/resume for FedTrainer (checkpoint/store.py npz files).
+
+One checkpoint = the full resumable state at a round boundary: the flat
+parameter buffer, the server-optimizer state tree, the round RNG key, the
+host sampling RNG (PCG64, host engine's fixed-cohort sampling), and the
+accountant's realized per-round history (eps vectors + cohort sizes).
+Restoring reproduces the uninterrupted run BIT-IDENTICALLY on every
+engine: the jitted engines are pure functions of (flat, opt_state, key)
+plus deterministically re-staged data, and the accountant is replayed
+from its recorded history, so the continued epsilon sequence is exact
+(tests/test_checkpoint_resume.py; the CI resume-smoke lane).
+
+Every checkpoint also carries a FINGERPRINT of the trajectory-defining
+state — the mechanism's canonical spec plus the FedConfig fields that
+determine the training trajectory and its accounting (population, cohort,
+seed, lr, data knobs, subsampling/dropout, alphas, server optimizer) and
+the TRAJECTORY FAMILY: "device" for the jitted engines (scan, perround,
+shard — one shared jax.random stream, bit-identical to each other, so
+cross-engine resume among them is valid and exact) vs "host" (the legacy
+engine samples fixed cohorts from its own numpy PCG64 stream — a
+different trajectory, so host checkpoints only resume into host
+trainers). Restoring into a trainer with a DIFFERENT fingerprint raises:
+replaying one mechanism's eps history and continuing with another would
+produce an epsilon claim that corresponds to no real mechanism. Staging,
+block sizes, budget, and checkpoint cadence are deliberately NOT
+fingerprinted — they never change the trajectory.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+
+_U64 = (1 << 64) - 1
+
+# FedConfig fields that define the trajectory + its accounting (see module
+# docstring for why engine/staging/budget/ckpt knobs are excluded).
+_FINGERPRINT_FIELDS = (
+    "num_clients", "clients_per_round", "seed", "lr", "samples_per_client",
+    "accountant_alphas", "data_deform", "data_noise", "local_steps",
+    "local_lr", "subsampling", "dropout", "max_cohort", "server_opt",
+    "server_opt_options",
+)
+
+
+def fingerprint(trainer) -> np.ndarray:
+    """sha256 of (mechanism spec, trajectory-defining config) as a (32,)
+    uint8 array — fixed shape, so it rides the npz checkpoint tree."""
+    cfg = trainer.cfg
+    fields = {f: getattr(cfg, f) for f in _FINGERPRINT_FIELDS}
+    # None and {} build the identical optimizer — normalize so the two
+    # spellings (CLIs pass None, programmatic configs often {}) can never
+    # cause a spurious mismatch
+    fields["server_opt_options"] = fields["server_opt_options"] or {}
+    # host vs device sampling streams are different trajectories (module
+    # docstring); engine NAME within the device family is not fingerprinted
+    fields["trajectory"] = "host" if cfg.engine == "host" else "device"
+    blob = json.dumps(
+        {"mechanism": trainer.mech.spec(), "config": fields},
+        sort_keys=True, default=repr,
+    )
+    return np.frombuffer(hashlib.sha256(blob.encode()).digest(), np.uint8)
+
+
+def pack_host_rng(rng) -> np.ndarray:
+    """numpy Generator (PCG64) state -> fixed-shape (6,) uint64 array."""
+    st = rng.bit_generator.state
+    if st["bit_generator"] != "PCG64":  # pragma: no cover - default_rng only
+        raise ValueError(f"unsupported bit generator {st['bit_generator']!r}")
+    s, inc = st["state"]["state"], st["state"]["inc"]
+    return np.asarray([s & _U64, s >> 64, inc & _U64, inc >> 64,
+                       st["has_uint32"], st["uinteger"]], np.uint64)
+
+
+def unpack_host_rng(arr) -> np.random.Generator:
+    a = [int(x) for x in np.asarray(arr, np.uint64)]
+    rng = np.random.default_rng(0)
+    st = rng.bit_generator.state
+    st["state"]["state"] = a[0] | (a[1] << 64)
+    st["state"]["inc"] = a[2] | (a[3] << 64)
+    st["has_uint32"], st["uinteger"] = a[4], a[5]
+    rng.bit_generator.state = st
+    return rng
+
+
+def _like(trainer, steps_done: int):
+    """The reference tree restore validates against: device leaves restore
+    as jnp arrays, host-side leaves (numpy refs) as numpy — exact float64
+    for the eps history regardless of jax's x64 mode."""
+    return {
+        "flat": trainer.flat,
+        "opt": trainer.opt_state,
+        "key": jax.random.key_data(trainer._key),
+        "host_rng": np.zeros(6, np.uint64),
+        "eps_history": np.zeros(
+            (steps_done, len(trainer.cfg.accountant_alphas)), np.float64
+        ),
+        "realized_n": np.zeros(steps_done, np.int64),
+        "fingerprint": np.zeros(32, np.uint8),
+    }
+
+
+def save_checkpoint(trainer) -> str:
+    """Write the trainer's resumable state at the current round count."""
+    if not trainer.cfg.ckpt_dir:
+        raise ValueError("no checkpoint directory configured (cfg.ckpt_dir)")
+    alphas = trainer.cfg.accountant_alphas
+    hist = trainer.accountant.history
+    tree = {
+        "flat": trainer.flat,
+        "opt": trainer.opt_state,
+        "key": jax.random.key_data(trainer._key),
+        "host_rng": pack_host_rng(trainer._rng),
+        "eps_history": (np.stack(hist) if hist
+                        else np.zeros((0, len(alphas)))),
+        "realized_n": np.asarray(trainer.realized_n, np.int64),
+        "fingerprint": fingerprint(trainer),
+    }
+    return store.save(trainer.cfg.ckpt_dir, trainer.accountant.rounds, tree)
+
+
+def restore_checkpoint(trainer, step=None) -> int:
+    """Load a checkpoint into the trainer (latest step by default) and
+    return the restored round count."""
+    cfg = trainer.cfg
+    if not cfg.ckpt_dir:
+        raise ValueError("no checkpoint directory configured (cfg.ckpt_dir)")
+    if step is None:
+        step = store.latest_step(cfg.ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {cfg.ckpt_dir}")
+    # fingerprint first, alone: a mismatched trainer may not even share
+    # the checkpoint's optimizer-state tree (sgd's empty tuple vs
+    # momentum's m-buffer), which would abort the full restore with a
+    # missing-leaf KeyError before this clearer diagnosis could fire
+    fp = store.restore(cfg.ckpt_dir, step,
+                       {"fingerprint": np.zeros(32, np.uint8)})
+    if not np.array_equal(fp["fingerprint"], fingerprint(trainer)):
+        raise ValueError(
+            f"checkpoint step {step} in {cfg.ckpt_dir} was written by a "
+            f"DIFFERENT mechanism/config (fingerprint mismatch): resuming "
+            f"would replay its epsilon history under parameters it does "
+            f"not describe. Match the original mechanism spec and the "
+            f"trajectory-defining FedConfig fields "
+            f"({', '.join(_FINGERPRINT_FIELDS)}), or start a fresh "
+            f"checkpoint directory."
+        )
+    data = store.restore(cfg.ckpt_dir, step, _like(trainer, step))
+    trainer.flat = data["flat"]
+    trainer.opt_state = data["opt"]
+    trainer._key = jax.random.wrap_key_data(data["key"])
+    trainer._rng = unpack_host_rng(data["host_rng"])
+    trainer.accountant = type(trainer.accountant)(alphas=cfg.accountant_alphas)
+    trainer.realized_n = []
+    for n, vec in zip(data["realized_n"], data["eps_history"]):
+        trainer.realized_n.append(int(n))
+        trainer.accountant.step(vec)
+    trainer.round_sums = []
+    if trainer._mesh is not None:
+        trainer._commit_to_mesh()
+    return step

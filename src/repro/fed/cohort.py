@@ -1,0 +1,88 @@
+"""Cohort realization — slate sizing, slate sampling, participation masks.
+
+Shared by every engine and by the streaming stager (docs/privacy.md): the
+jitted engines keep static shapes by gradient-computing a fixed-size
+cohort SLATE and masking non-participants out of the SecAgg sum; the
+accountant then composes each round at its REALIZED size. All functions
+here are pure jnp (or host-side ints) so the identical code runs traced
+inside the jitted engines and eagerly on the host (``jax.random`` is
+deterministic in or out of jit, so every engine realizes the SAME cohort
+sequence from the same key stream).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.config import FedConfig
+
+
+def is_hetero(cfg: FedConfig) -> bool:
+    """Heterogeneous cohorts: the realized size is a per-round random
+    variable (Poisson subsampling and/or dropout)."""
+    return cfg.subsampling != "fixed" or cfg.dropout > 0
+
+
+def poisson_rate(cfg: FedConfig) -> float:
+    return cfg.clients_per_round / cfg.num_clients
+
+
+def base_slate(cfg: FedConfig) -> int:
+    """The static cohort slate the jitted engines allocate (pre-shard-
+    rounding): clients_per_round for fixed cohorts; for Poisson cohorts
+    mean + 6 sigma (truncation probability ~1e-9 per round) unless
+    cfg.max_cohort caps it."""
+    if cfg.subsampling != "poisson":
+        return cfg.clients_per_round
+    rate = poisson_rate(cfg)
+    if cfg.max_cohort is not None:
+        slate = min(cfg.max_cohort, cfg.num_clients)
+        if slate < 1:
+            raise ValueError(f"max_cohort must be >= 1, got {slate}")
+        return slate
+    sigma = np.sqrt(cfg.num_clients * rate * (1.0 - rate))
+    return min(cfg.num_clients,
+               cfg.clients_per_round + int(np.ceil(6 * sigma)) + 4)
+
+
+def sample_slate(cfg: FedConfig, slate: int, k_sample: jax.Array):
+    """One round's static-size cohort slate: ``(ids, valid)`` with
+    ``ids.shape == valid.shape == (slate,)``.
+
+    Fixed-size sampling fills the whole slate (valid everywhere); Poisson
+    subsampling selects each of the N population clients i.i.d. at rate
+    clients_per_round/N, packs the selected ids (ascending) into the slate
+    front and marks padding/overflow slots invalid."""
+    if cfg.subsampling == "poisson":
+        sel = jax.random.bernoulli(
+            k_sample, poisson_rate(cfg), (cfg.num_clients,)
+        )
+        # distinct priorities make the order deterministic under ANY
+        # sort algorithm: selected ids (ascending) first, then the rest
+        prio = jnp.where(sel, 0, cfg.num_clients) + jnp.arange(cfg.num_clients)
+        ids = jnp.argsort(prio)[:slate]
+        return ids, sel[ids]
+    ids = jax.random.choice(
+        k_sample, cfg.num_clients, (slate,), replace=False
+    )
+    return ids, jnp.ones((slate,), bool)
+
+
+def participation(cfg: FedConfig, valid: jnp.ndarray, k_drop: jax.Array):
+    """Slate-shaped participation mask: selected AND not dropped out
+    (i.i.d. Bernoulli(cfg.dropout) per selected client)."""
+    if cfg.dropout > 0:
+        drop = jax.random.bernoulli(k_drop, cfg.dropout, valid.shape)
+        return valid & ~drop
+    return valid
+
+
+def split_round_keys(cfg: FedConfig, key: jax.Array):
+    """The per-round key evolution every engine shares: 3 splits per round
+    (carry, sample, encode), 4 when heterogeneous cohorts also draw a
+    dropout key. Returns ``(key, k_sample, k_enc, k_drop_or_None)``."""
+    if is_hetero(cfg):
+        return jax.random.split(key, 4)
+    key, k_sample, k_enc = jax.random.split(key, 3)
+    return key, k_sample, k_enc, None

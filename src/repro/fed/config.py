@@ -1,0 +1,136 @@
+"""FedConfig — the one knob surface shared by every registered round engine.
+
+The engine itself is picked by name (``FedConfig.engine``) from the engine
+registry (``repro.fed.engine``); every other field is either shared by all
+engines (cohort realization, privacy budget, server optimizer, checkpoint
+cadence) or namespaced to one engine family and validated by that engine's
+``Engine.validate`` hook (e.g. ``shards``/``staging``/``shard_packed`` for
+the "shard" engine). See the package docstring in ``repro/fed/__init__.py``
+for the four-engine overview.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+STAGINGS = ("full", "stream")
+SUBSAMPLINGS = ("fixed", "poisson")
+
+
+@dataclasses.dataclass
+class FedConfig:
+    num_clients: int = 3400
+    clients_per_round: int = 40
+    rounds: int = 200
+    lr: float = 0.5
+    seed: int = 0
+    eval_size: int = 2000
+    samples_per_client: int = 20
+    accountant_alphas: tuple = (2.0, 4.0, 8.0, 16.0, 32.0)
+    data_deform: float = 0.35
+    data_noise: float = 0.25
+    # local_steps=1 reproduces Algorithm 1 exactly (one clipped gradient per
+    # client per round). local_steps>1 is the FedAvg-RQM extension: clients
+    # run several local SGD steps and the MODEL DELTA is clipped+quantized —
+    # the mechanism and its DP accounting apply unchanged (the released
+    # quantity is still one [-c,c]^f vector per client per round).
+    local_steps: int = 1
+    local_lr: float = 0.1
+    engine: str = "scan"  # any registered engine: scan|perround|host|shard
+    # Server optimizer (Algorithm 1 line 11 generalized): the decode-then-
+    # apply boundary of EVERY engine routes the decoded aggregate g_hat
+    # through a repro.optim.Optimizer — "sgd" (the paper's w - lr*g_hat,
+    # bit-identical to the pre-optimizer engines), "momentum", or "adam".
+    # Optimizer state lives in the jitted scan/shard carry, is donated with
+    # the parameters, and checkpoints/restores with them. server_opt_options
+    # are keyword options for the factory (e.g. {"beta": 0.9}).
+    server_opt: str = "sgd"
+    server_opt_options: Optional[dict] = None
+    # Checkpoint/resume (checkpoint/store.py): with ckpt_dir set, train()
+    # saves params + server-optimizer state + the round RNG key + the
+    # accountant's realized history every ckpt_every rounds (block
+    # boundaries are split to land exactly on multiples). A restored
+    # trainer continues BIT-IDENTICALLY: the resumed run reproduces the
+    # uninterrupted run's parameters and epsilon sequence exactly, on
+    # every engine (tests/test_checkpoint_resume.py).
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    # scan engine tuning. Blocks are executed in chunks of at most
+    # scan_block rounds (bounds compile time of unrolled blocks; each
+    # distinct chunk length compiles once). scan_unroll=None auto-selects:
+    # full unroll on CPU (XLA:CPU runs while-loop bodies single-threaded,
+    # so an un-unrolled scan would serialize the per-client gradient work),
+    # no unroll on TPU/GPU (the while loop is free there and unrolling
+    # only bloats compile time and program size).
+    scan_block: int = 64
+    scan_unroll: Optional[int] = None
+    # shard engine (engine="shard") tuning. shards=None spans every visible
+    # device; clients_per_round must divide evenly across shards. staging:
+    # "full" stages the whole population on device once (replicated, like
+    # scan); "stream" stages only each block's active cohort, sharded over
+    # the mesh — host memory stays O(scan_block * clients_per_round) client
+    # datasets regardless of num_clients. shard_packed: None = lane-pack
+    # the cross-shard level sum exactly when mech.sum_bound(n) fits 16 bits;
+    # True forces packing (raises if unsafe); False forces the plain psum.
+    shards: Optional[int] = None
+    staging: str = "full"
+    shard_packed: Optional[bool] = None
+    # Cohort realization (all engines; see docs/privacy.md).
+    # subsampling="fixed" (default) samples exactly clients_per_round
+    # clients without replacement — every round has the same cohort size.
+    # subsampling="poisson" includes EACH of the num_clients clients
+    # i.i.d. with rate clients_per_round/num_clients (clients_per_round is
+    # then the EXPECTED cohort); the realized cohort size varies round to
+    # round and the accountant composes the per-round epsilon at the
+    # REALIZED size. dropout additionally drops each selected client
+    # i.i.d. with this probability (network loss, stragglers) — dropped
+    # clients contribute nothing to the SecAgg sum and the round is
+    # accounted at the surviving count (fewer participants = LESS
+    # amplification-by-aggregation = a strictly larger per-round epsilon;
+    # naive nominal-n accounting under-reports). max_cohort bounds the
+    # static slate the jitted engines allocate for Poisson cohorts
+    # (default: mean + 6 sigma; overflow beyond the slate is truncated —
+    # those clients simply do not participate that round, which keeps the
+    # accounting exact).
+    subsampling: str = "fixed"
+    dropout: float = 0.0
+    max_cohort: Optional[int] = None
+    # Privacy budget (docs/privacy.md): when budget_eps is set, train()
+    # logs the remaining (eps, budget_delta)-DP budget and halts at
+    # exhaustion — exactly at the last affordable round for fixed cohorts,
+    # at the first round whose realized spend crosses the budget under
+    # subsampling/dropout.
+    budget_eps: Optional[float] = None
+    budget_delta: float = 1e-5
+    # Debug/test instrumentation (all engines): record each round's
+    # aggregated encoded SecAgg sum on the host (trainer.round_sums)
+    # — the observable the cross-engine "exact encoded-sum equality" tests
+    # assert on.
+    collect_sums: bool = False
+
+
+def validate_config(cfg: FedConfig) -> None:
+    """Engine-independent FedConfig validation (the engine registry then
+    applies each engine's own ``Engine.validate`` on top)."""
+    if cfg.staging not in STAGINGS:
+        raise ValueError(
+            f"unknown staging {cfg.staging!r}; expected one of {STAGINGS}"
+        )
+    if cfg.subsampling not in SUBSAMPLINGS:
+        raise ValueError(
+            f"unknown subsampling {cfg.subsampling!r}; expected one "
+            f"of {SUBSAMPLINGS}"
+        )
+    if not 0.0 <= cfg.dropout < 1.0:
+        raise ValueError(f"dropout must be in [0, 1), got {cfg.dropout}")
+    if cfg.max_cohort is not None and cfg.subsampling != "poisson":
+        raise ValueError("max_cohort only applies to subsampling='poisson'")
+    if cfg.clients_per_round > cfg.num_clients:
+        raise ValueError(
+            f"clients_per_round={cfg.clients_per_round} exceeds the "
+            f"population num_clients={cfg.num_clients}"
+        )
+    if cfg.ckpt_every < 0:
+        raise ValueError(f"ckpt_every must be >= 0, got {cfg.ckpt_every}")
+    if cfg.ckpt_every and not cfg.ckpt_dir:
+        raise ValueError("ckpt_every requires ckpt_dir")

@@ -1,0 +1,114 @@
+"""The round-engine registry: ``@register_engine`` + the ``Engine`` base.
+
+Mirrors the mechanism registry (``core.mechanisms.register_mechanism``):
+an engine is a registered class that turns one FedTrainer's state into
+executed Algorithm-1 rounds. The trainer owns everything an engine needs
+(mechanism, config, staged data, the flat parameter buffer, the server
+optimizer state, the round RNG key, the accountant) and the engine owns
+HOW rounds run — per-round jit calls, scanned jitted blocks, a host loop,
+or shard_map blocks over a device mesh.
+
+Adding an engine is one registered class — no edits to the trainer, the
+config surface, or the CLIs (``--engine`` accepts any registered name):
+
+    @register_engine("myengine")
+    class MyEngine(Engine):
+        blocked = True                      # advances in jitted blocks
+        @classmethod
+        def validate(cls, cfg, mech): ...   # engine-specific config checks
+        def build(self): ...                # construct jits (post-staging)
+        def advance(self, rounds): ...      # run rounds + account them
+
+See docs/engines.md for the worked example and the trainer-side contract
+(which trainer attributes an engine may read/write).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable, ClassVar, Dict, Type
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.mechanisms import Mechanism
+    from repro.fed.config import FedConfig
+    from repro.fed.trainer import FedTrainer
+
+_REGISTRY: Dict[str, Type["Engine"]] = {}
+
+
+def register_engine(name: str) -> Callable[[type], type]:
+    """Class decorator: register an Engine subclass under ``name``."""
+
+    def deco(cls: type) -> type:
+        if not (isinstance(cls, type) and issubclass(cls, Engine)):
+            raise TypeError(f"{cls!r} must subclass Engine")
+        existing = _REGISTRY.get(name)
+        if existing is not None and existing is not cls:
+            raise ValueError(f"engine {name!r} already registered to {existing}")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def engine_names() -> tuple:
+    """Registered engine names (stable registration order)."""
+    return tuple(_REGISTRY)
+
+
+def get_engine(name: str) -> Type["Engine"]:
+    """Look up a registered engine class by name."""
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {', '.join(_REGISTRY)}"
+        )
+    return cls
+
+
+class Engine:
+    """One way of running Algorithm-1 rounds for a FedTrainer.
+
+    Lifecycle (driven by ``FedTrainer.__init__``):
+
+      1. ``validate(cfg, mech)`` — classmethod, raises on config the engine
+         cannot run (called before any state is built).
+      2. ``__init__(trainer)`` — may claim resources (the shard engine
+         builds its device mesh here) and adjust the trainer's cohort
+         slate; runs BEFORE data staging so staging can depend on it.
+      3. ``build()`` — construct the jitted round/block programs; runs
+         after parameters, data staging, and the server optimizer exist.
+      4. ``advance(rounds)`` — execute that many rounds, updating
+         ``trainer.flat`` / ``trainer.opt_state`` / ``trainer._key`` and
+         accounting each round via the trainer's ``_account*`` helpers.
+
+    ``blocked`` engines advance in jitted multi-round blocks
+    (``FedTrainer.run_block``); unblocked engines advance one round per
+    ``advance(1)`` call. ``stages_population`` engines get the full client
+    population staged on device before ``build()``. ``supports_streaming``
+    engines accept ``staging="stream"`` — a capability flag, so subclasses
+    of a streaming engine inherit it under any registered name.
+    """
+
+    name: ClassVar[str] = "?"
+    blocked: ClassVar[bool] = False
+    stages_population: ClassVar[bool] = True
+    supports_streaming: ClassVar[bool] = False
+
+    def __init__(self, trainer: "FedTrainer"):
+        self.tr = trainer
+
+    @classmethod
+    def validate(cls, cfg: "FedConfig", mech: "Mechanism") -> None:
+        """Engine-specific config validation. The base rejects streaming
+        staging for engines whose class doesn't support it."""
+        if cfg.staging == "stream" and not cls.supports_streaming:
+            raise ValueError(
+                f"staging='stream' requires a streaming-capable engine "
+                f"such as 'shard'; {cls.name!r} does not support it"
+            )
+
+    def build(self) -> None:
+        """Construct the engine's jitted programs (optional)."""
+
+    def advance(self, rounds: int) -> None:
+        raise NotImplementedError

@@ -1,0 +1,263 @@
+"""The four registered round engines: scan, perround, host, shard.
+
+Same Algorithm-1 semantics under every engine (see the package docstring
+in ``repro/fed/__init__.py`` and docs/engines.md); what differs is HOW
+rounds execute:
+
+  * ``"scan"`` (default) — device-resident: the population is staged once,
+    a whole block of rounds runs inside a single jitted ``lax.scan`` with
+    the flat parameter buffer AND server-optimizer state donated.
+  * ``"perround"`` — the identical round step, one jitted call per round.
+    Exists to prove the scan engine correct (bit-for-bit parity).
+  * ``"host"`` — the legacy loop: numpy client sampling, per-round host
+    stacking, per-client vmapped encode. The benchmark baseline.
+  * ``"shard"`` — the scan block inside ``shard_map`` over a 1-D
+    ``('shard',)`` mesh: global cohort sampling from the replicated key,
+    per-shard gradient+encode over the n/S cohort slice, one cross-shard
+    encoded-domain ``secure_sum`` per round (docs/scaling.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import secagg
+from repro.data.federated import sample_clients
+from repro.distributed.step import MeshPlan, compat_shard_map
+from repro.fed import cohort, rounds, staging
+from repro.fed.engine import Engine, register_engine
+from repro.launch.mesh import make_shard_mesh
+
+
+@register_engine("scan")
+class ScanEngine(Engine):
+    """Blocks of rounds in one jitted ``lax.scan`` (unrolled on CPU), the
+    flat parameter buffer and optimizer state donated: zero host<->device
+    transfers and zero dispatch per round."""
+
+    blocked = True
+
+    def build(self):
+        tr = self.tr
+        step = rounds.make_round_step(
+            tr.mech, tr.cfg, tr.server_opt, tr.slate, tr._client_grad
+        )
+        block = rounds.make_block(step, tr.cfg)
+        self._block_jit = jax.jit(
+            block, static_argnums=(5,), donate_argnums=(0, 1)
+        )
+
+    def advance(self, n_rounds: int):
+        tr = self.tr
+        done = 0
+        while done < n_rounds:
+            step = min(tr.cfg.scan_block, n_rounds - done)
+            out = self._block_jit(
+                tr.flat, tr.opt_state, tr._key,
+                tr.client_images, tr.client_labels, step,
+            )
+            tr._finish_block(out)
+            done += step
+        if not tr._hetero:
+            tr._account(n_rounds)
+
+
+@register_engine("perround")
+class PerRoundEngine(Engine):
+    """The scan engine's round step driven one jitted call per round from
+    Python — both trace the same ``round_step``, so a fixed seed yields
+    bit-identical parameters (asserted in tests/test_fed_engine.py)."""
+
+    def build(self):
+        tr = self.tr
+        step = rounds.make_round_step(
+            tr.mech, tr.cfg, tr.server_opt, tr.slate, tr._client_grad
+        )
+        self._round_jit = jax.jit(step)
+
+    def advance(self, n_rounds: int):
+        tr = self.tr
+        for _ in range(n_rounds):
+            tr.flat, tr.opt_state, tr._key, z_sum, n_real = self._round_jit(
+                tr.flat, tr.opt_state, tr._key,
+                tr.client_images, tr.client_labels,
+            )
+            if tr.cfg.collect_sums:
+                tr.round_sums.append(np.asarray(z_sum))
+            if tr._hetero:
+                tr._account_realized([n_real])
+            else:
+                tr._account(1)
+
+
+@register_engine("host")
+class HostEngine(Engine):
+    """The legacy loop: numpy client sampling (fixed cohorts) or a replay
+    of the device key stream (heterogeneous cohorts — identical realized
+    cohort and eps sequence to the jitted engines), per-round host
+    stacking of client data, per-client vmapped encode. Kept as the
+    baseline the rounds/sec benchmark measures the scan engine against."""
+
+    stages_population = False
+
+    def advance(self, n_rounds: int):
+        for _ in range(n_rounds):
+            if self.tr._hetero:
+                self._hetero_round()
+            else:
+                self._fixed_round()
+
+    def _stack(self, ids):
+        # one client_data call per id (it re-synthesizes deterministically
+        # on every call — the monolith's two-comprehension stacking
+        # generated every cohort dataset twice per round)
+        data = [self.tr.partition.client_data(int(i)) for i in ids]
+        images = np.stack([im for im, _ in data])
+        labels = np.stack([lb for _, lb in data])
+        return jnp.asarray(images), jnp.asarray(labels)
+
+    def _fixed_round(self):
+        tr, cfg = self.tr, self.tr.cfg
+        ids = sample_clients(tr._rng, cfg.num_clients, cfg.clients_per_round)
+        grads = tr._client_grads(tr.flat, *self._stack(ids))
+        tr._key, sub = jax.random.split(tr._key)
+        keys = jax.random.split(sub, cfg.clients_per_round)
+        z = tr._encode(grads, keys)  # (n, dim) int32 (or float for 'none')
+        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
+        g_hat = tr._decode(z_sum, cfg.clients_per_round)
+        tr.flat, tr.opt_state = tr.server_opt.update(
+            g_hat, tr.opt_state, tr.flat, cfg.lr
+        )
+        if cfg.collect_sums:
+            tr.round_sums.append(np.asarray(z_sum))
+        tr._account(1)
+
+    def _hetero_round(self):
+        """Host round under subsampling/dropout: the legacy per-round host
+        data staging, but cohort/participation come from the SAME device
+        key stream the jitted engines evolve (4 splits per round), so the
+        realized cohort sequence — and hence the accounted eps sequence —
+        is identical on every engine."""
+        tr, cfg = self.tr, self.tr.cfg
+        tr._key, k_sample, k_enc, k_drop = jax.random.split(tr._key, 4)
+        ids, valid = cohort.sample_slate(cfg, tr.slate, k_sample)
+        grads = tr._client_grads(tr.flat, *self._stack(np.asarray(ids)))
+        z = tr._quantize_batch(grads, k_enc)  # full slate, like the engines
+        part = cohort.participation(cfg, valid, k_drop)
+        z = z * part.astype(z.dtype)[:, None]
+        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)
+        n_real = int(np.asarray(jnp.sum(part, dtype=jnp.int32)))
+        if n_real > 0:
+            g_hat = tr._decode(z_sum, n_real)
+            tr.flat, tr.opt_state = tr.server_opt.update(
+                g_hat, tr.opt_state, tr.flat, cfg.lr
+            )
+        if cfg.collect_sums:
+            tr.round_sums.append(np.asarray(z_sum))
+        tr._account_realized([n_real])
+
+
+@register_engine("shard")
+class ShardEngine(Engine):
+    """The scan engine distributed over a 1-D ``('shard',)`` device mesh
+    via shard_map; per-round aggregation is an encoded-domain cross-shard
+    sum — integer level indices, lane-packed when safe (core/secagg.py) —
+    exactly as the mechanism's ``decode_sum``/``sum_bound`` contract
+    expects of a real SecAgg deployment. On a 1-shard mesh the engine is
+    bit-identical to ``"scan"``. Privacy is accounted for the FULL
+    cross-shard cohort, never the per-shard count. ``staging="stream"``
+    bounds host memory to each block's active cohort."""
+
+    blocked = True
+    supports_streaming = True
+
+    def __init__(self, trainer):
+        super().__init__(trainer)
+        tr, cfg, mech = trainer, trainer.cfg, trainer.mech
+        self.shards = cfg.shards or jax.device_count()
+        tr.shards = self.shards
+        if cfg.subsampling == "poisson":
+            # round the slate up so it splits evenly across shards
+            slate = -(-tr.slate // self.shards) * self.shards
+            if slate > cfg.num_clients:
+                raise ValueError(
+                    f"poisson cohort slate {slate} (rounded to "
+                    f"{self.shards} shards) exceeds the population "
+                    f"{cfg.num_clients}; lower max_cohort or shards"
+                )
+            tr.slate = slate
+        elif cfg.clients_per_round % self.shards:
+            raise ValueError(
+                f"clients_per_round={cfg.clients_per_round} must "
+                f"divide across {self.shards} shards"
+            )
+        # the packing-safety bound covers the WORST-case participant
+        # count — the full slate (== clients_per_round when fixed)
+        bound = mech.sum_bound(tr.slate)
+        if cfg.shard_packed and not 0 < bound < (1 << secagg.LANE_BITS):
+            raise ValueError(
+                f"shard_packed=True unsafe: full-cohort sum bound {bound} "
+                f">= 2^{secagg.LANE_BITS} (or mechanism is not "
+                f"integer-coded)"
+            )
+        tr._mesh = make_shard_mesh(self.shards)
+        # pure client-parallel plan: every shard a whole client group
+        tr._plan = MeshPlan(mesh=tr._mesh, client_axes=("shard",),
+                            model_axis=None)
+        assert tr._plan.tp == 1 and tr._plan.n_clients == self.shards
+
+    def build(self):
+        tr = self.tr
+        step = rounds.make_shard_round_step(
+            tr.mech, tr.cfg, tr.server_opt, tr.slate, self.shards,
+            tr._client_grad,
+        )
+        streamed = tr.cfg.staging == "stream"
+        data_spec = P(None, "shard") if streamed else P()
+
+        def make_block_jit(length):
+            block = rounds.make_block(step, tr.cfg, streamed=streamed)
+
+            def block_l(flat, opt_state, key, images, labels):
+                return block(flat, opt_state, key, images, labels, length)
+
+            # P() entries covering the None (not collected) outputs map no
+            # leaves — harmless placeholders keeping the spec tree aligned
+            mapped = compat_shard_map(
+                block_l,
+                mesh=tr._mesh,
+                in_specs=(P(), P(), P(), data_spec, data_spec),
+                out_specs=(P(), P(), P(), P(), P()),
+            )
+            return jax.jit(mapped, donate_argnums=(0, 1))
+
+        self._blocks: dict = {}
+        self._make_block_jit = make_block_jit
+
+    def _block_jit(self, length: int):
+        if length not in self._blocks:
+            self._blocks[length] = self._make_block_jit(length)
+        return self._blocks[length]
+
+    def advance(self, n_rounds: int):
+        tr, cfg = self.tr, self.tr.cfg
+        done = 0
+        while done < n_rounds:
+            step = min(cfg.scan_block, n_rounds - done)
+            if cfg.staging == "stream":
+                images, labels, nbytes = staging.stage_stream_block(
+                    tr.partition, cfg, tr._mesh, tr.slate, tr._key, step
+                )
+                tr.staged_bytes_last_block = nbytes
+                tr.staged_bytes_total += nbytes
+            else:
+                images, labels = tr.client_images, tr.client_labels
+            out = self._block_jit(step)(
+                tr.flat, tr.opt_state, tr._key, images, labels
+            )
+            tr._finish_block(out)
+            done += step
+        if not tr._hetero:
+            tr._account(n_rounds)

@@ -1,904 +1,22 @@
-"""Algorithm 1 — Distributed DP-SGD with RQM — the paper-faithful federated
-loop (the EMNIST experiment of Section 6.2).
+"""Backward-compatibility shim — the fed monolith is now a package.
 
-Per round: sample n of N clients; each computes a clipped gradient on its
-local data; the gradient is flattened and encoded coordinate-wise by the
-mechanism (RQM levels / PBM binomial draws / raw floats for noise-free);
-SecAgg sums the integer messages (modular-sum emulation); the server
-decodes g_hat and takes the SGD step. The Renyi accountant composes the
-per-round aggregate-level epsilon across rounds.
+``fed/loop.py`` (904 lines at its peak) was decomposed into the
+``repro.fed`` package: ``config.py`` (FedConfig), ``engine.py`` (the
+``@register_engine`` registry), ``engines.py`` (scan/perround/host/shard),
+``cohort.py`` (slate + participation), ``staging.py`` (full vs. stream),
+``rounds.py`` (the jitted round-step/block builders), ``trainer.py``
+(FedTrainer) and ``checkpointing.py`` (save/resume). See docs/engines.md.
 
-Four round engines (FedConfig.engine), same Algorithm-1 semantics:
+Import from ``repro.fed`` (or the submodules) in new code:
 
-  * ``"scan"`` (default) — the device-resident engine. All client datasets
-    are staged on device ONCE at construction; client sampling is
-    ``jax.random.choice`` on device; a whole block of rounds runs inside a
-    single jitted ``jax.lax.scan`` (unrolled on CPU, see FedConfig) with
-    the flat parameter buffer donated. Zero host<->device transfers and
-    zero dispatch per round.
-  * ``"perround"`` — the identical device-resident round step, driven one
-    jitted call per round from Python. Exists to prove the scan engine
-    correct: both trace the same ``round_step``, so a fixed seed yields
-    bit-identical parameters (asserted in tests/test_fed_engine.py).
-  * ``"host"`` — the legacy loop: numpy client sampling, per-round host
-    stacking of client data, per-client vmap encode. Kept as the baseline
-    the rounds/sec benchmark (benchmarks/fig3_fl_emnist.py) measures the
-    scan engine against.
-  * ``"shard"`` — the scan engine distributed over a 1-D ``('shard',)``
-    device mesh (launch/mesh.make_shard_mesh) via shard_map: every round
-    the cohort of ``clients_per_round`` clients is sampled GLOBALLY (the
-    replicated key makes every shard compute the same ids), each shard
-    runs the identical jitted round body over its ``n/S`` cohort slice
-    (the offset-aware batched encode draws exactly the randomness its
-    rows draw in the unsharded batch), and the per-round aggregation is
-    an encoded-domain cross-shard sum — integer level indices, lane-packed
-    when safe (core/secagg.py), cross the shard boundary, never floats,
-    exactly as the mechanism's ``decode_sum``/``sum_bound`` contract
-    expects of a real SecAgg deployment. On a 1-shard mesh the engine is
-    bit-identical to ``"scan"``; on a multi-shard mesh the encoded
-    per-round sums are exactly equal (integer psum is order-free) and
-    parameters match to reduction-order tolerance (bit-equal for integer
-    mechanisms, allclose for the float 'none' baseline). Privacy is
-    accounted for the FULL cross-shard cohort ``clients_per_round``,
-    never the per-shard count. ``staging="stream"`` additionally bounds
-    host memory: only each block's active cohort is materialized and
-    shipped (sharded over the mesh), so simulated populations of 1e5-1e6
-    clients never exist in memory at once (see docs/scaling.md).
+    from repro.fed import FedConfig, FedTrainer
 
-Cohort realization + privacy budgets (docs/privacy.md): FedConfig's
-``subsampling``/``dropout`` knobs make the realized cohort size a
-per-round random variable, identically on every engine (the jitted
-engines compute a static cohort SLATE and mask non-participants out of
-the SecAgg sum); the accountant composes each round at its REALIZED size
-(``trainer.realized_n``, ``accountant.history``) — dropout-aware: fewer
-participants mean less amplification-by-aggregation and a strictly
-larger per-round epsilon. ``budget_eps``/``budget_delta`` turn train()
-into a budgeted run: remaining budget is logged and training halts at
-exhaustion. Mechanisms for a target budget come from
-``repro.privacy.calibrate``.
+This module only re-exports the public names old call sites used.
 """
-from __future__ import annotations
+from repro.fed.config import STAGINGS, SUBSAMPLINGS, FedConfig
+from repro.fed.engine import engine_names
+from repro.fed.trainer import FedTrainer
 
-import dataclasses
-import time
-import warnings
-from typing import Optional
+ENGINES = engine_names()  # populated by repro.fed.engines via trainer import
 
-import jax
-import jax.flatten_util
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
-
-from repro.core import secagg
-from repro.core.mechanisms import Mechanism
-from repro.core.renyi import RenyiAccountant
-from repro.data.federated import FederatedPartition, sample_clients
-from repro.distributed.step import MeshPlan, compat_shard_map
-from repro.fed.cnn import cnn_accuracy, cnn_init, cnn_loss
-from repro.launch.mesh import make_shard_mesh
-
-ENGINES = ("scan", "perround", "host", "shard")
-STAGINGS = ("full", "stream")
-SUBSAMPLINGS = ("fixed", "poisson")
-
-
-@dataclasses.dataclass
-class FedConfig:
-    num_clients: int = 3400
-    clients_per_round: int = 40
-    rounds: int = 200
-    lr: float = 0.5
-    seed: int = 0
-    eval_size: int = 2000
-    samples_per_client: int = 20
-    accountant_alphas: tuple = (2.0, 4.0, 8.0, 16.0, 32.0)
-    data_deform: float = 0.35
-    data_noise: float = 0.25
-    # local_steps=1 reproduces Algorithm 1 exactly (one clipped gradient per
-    # client per round). local_steps>1 is the FedAvg-RQM extension: clients
-    # run several local SGD steps and the MODEL DELTA is clipped+quantized —
-    # the mechanism and its DP accounting apply unchanged (the released
-    # quantity is still one [-c,c]^f vector per client per round).
-    local_steps: int = 1
-    local_lr: float = 0.1
-    engine: str = "scan"  # "scan" | "perround" | "host" (see module docstring)
-    # scan engine tuning. Blocks are executed in chunks of at most
-    # scan_block rounds (bounds compile time of unrolled blocks; each
-    # distinct chunk length compiles once). scan_unroll=None auto-selects:
-    # full unroll on CPU (XLA:CPU runs while-loop bodies single-threaded,
-    # so an un-unrolled scan would serialize the per-client gradient work),
-    # no unroll on TPU/GPU (the while loop is free there and unrolling
-    # only bloats compile time and program size).
-    scan_block: int = 64
-    scan_unroll: Optional[int] = None
-    # shard engine (engine="shard") tuning. shards=None spans every visible
-    # device; clients_per_round must divide evenly across shards. staging:
-    # "full" stages the whole population on device once (replicated, like
-    # scan); "stream" stages only each block's active cohort, sharded over
-    # the mesh — host memory stays O(scan_block * clients_per_round) client
-    # datasets regardless of num_clients. shard_packed: None = lane-pack
-    # the cross-shard level sum exactly when mech.sum_bound(n) fits 16 bits;
-    # True forces packing (raises if unsafe); False forces the plain psum.
-    shards: Optional[int] = None
-    staging: str = "full"
-    shard_packed: Optional[bool] = None
-    # Cohort realization (all four engines; see docs/privacy.md).
-    # subsampling="fixed" (default) samples exactly clients_per_round
-    # clients without replacement — every round has the same cohort size.
-    # subsampling="poisson" includes EACH of the num_clients clients
-    # i.i.d. with rate clients_per_round/num_clients (clients_per_round is
-    # then the EXPECTED cohort); the realized cohort size varies round to
-    # round and the accountant composes the per-round epsilon at the
-    # REALIZED size. dropout additionally drops each selected client
-    # i.i.d. with this probability (network loss, stragglers) — dropped
-    # clients contribute nothing to the SecAgg sum and the round is
-    # accounted at the surviving count (fewer participants = LESS
-    # amplification-by-aggregation = a strictly larger per-round epsilon;
-    # naive nominal-n accounting under-reports). max_cohort bounds the
-    # static slate the jitted engines allocate for Poisson cohorts
-    # (default: mean + 6 sigma; overflow beyond the slate is truncated —
-    # those clients simply do not participate that round, which keeps the
-    # accounting exact).
-    subsampling: str = "fixed"
-    dropout: float = 0.0
-    max_cohort: Optional[int] = None
-    # Privacy budget (docs/privacy.md): when budget_eps is set, train()
-    # logs the remaining (eps, budget_delta)-DP budget and halts at
-    # exhaustion — exactly at the last affordable round for fixed cohorts,
-    # at the first round whose realized spend crosses the budget under
-    # subsampling/dropout.
-    budget_eps: Optional[float] = None
-    budget_delta: float = 1e-5
-    # Debug/test instrumentation (scan/perround/host/shard): record each
-    # round's aggregated encoded SecAgg sum on the host (trainer.round_sums)
-    # — the observable the cross-engine "exact encoded-sum equality" tests
-    # assert on.
-    collect_sums: bool = False
-
-
-class FedTrainer:
-    def __init__(self, mech: Mechanism, fed_cfg: FedConfig):
-        if fed_cfg.engine not in ENGINES:
-            raise ValueError(
-                f"unknown engine {fed_cfg.engine!r}; expected one of {ENGINES}"
-            )
-        if fed_cfg.staging not in STAGINGS:
-            raise ValueError(
-                f"unknown staging {fed_cfg.staging!r}; expected one of {STAGINGS}"
-            )
-        if fed_cfg.staging == "stream" and fed_cfg.engine != "shard":
-            raise ValueError("staging='stream' requires engine='shard'")
-        if fed_cfg.subsampling not in SUBSAMPLINGS:
-            raise ValueError(
-                f"unknown subsampling {fed_cfg.subsampling!r}; expected one "
-                f"of {SUBSAMPLINGS}"
-            )
-        if not 0.0 <= fed_cfg.dropout < 1.0:
-            raise ValueError(f"dropout must be in [0, 1), got {fed_cfg.dropout}")
-        if fed_cfg.max_cohort is not None and fed_cfg.subsampling != "poisson":
-            raise ValueError("max_cohort only applies to subsampling='poisson'")
-        if fed_cfg.clients_per_round > fed_cfg.num_clients:
-            raise ValueError(
-                f"clients_per_round={fed_cfg.clients_per_round} exceeds the "
-                f"population num_clients={fed_cfg.num_clients}"
-            )
-        self.mech = mech
-        self.cfg = fed_cfg
-        self._mesh = None
-        self.shards = 1
-        # Heterogeneous cohorts (docs/privacy.md): Poisson subsampling and/or
-        # dropout make the realized cohort size a per-round random variable.
-        # The jitted engines keep static shapes by gradient-computing a
-        # fixed-size cohort SLATE and masking non-participants out of the
-        # SecAgg sum; the accountant then composes each round at its
-        # realized size (trainer.realized_n).
-        self._hetero = fed_cfg.subsampling != "fixed" or fed_cfg.dropout > 0
-        if fed_cfg.subsampling == "poisson":
-            rate = fed_cfg.clients_per_round / fed_cfg.num_clients
-            self._poisson_rate = rate
-            if fed_cfg.max_cohort is not None:
-                slate = min(fed_cfg.max_cohort, fed_cfg.num_clients)
-                if slate < 1:
-                    raise ValueError(f"max_cohort must be >= 1, got {slate}")
-            else:
-                # mean + 6 sigma: truncation probability ~ 1e-9 per round
-                sigma = np.sqrt(fed_cfg.num_clients * rate * (1.0 - rate))
-                slate = min(fed_cfg.num_clients,
-                            fed_cfg.clients_per_round + int(np.ceil(6 * sigma)) + 4)
-        else:
-            slate = fed_cfg.clients_per_round
-        if fed_cfg.engine == "shard":
-            self.shards = fed_cfg.shards or jax.device_count()
-            if fed_cfg.subsampling == "poisson":
-                # round the slate up so it splits evenly across shards
-                slate = -(-slate // self.shards) * self.shards
-                if slate > fed_cfg.num_clients:
-                    raise ValueError(
-                        f"poisson cohort slate {slate} (rounded to "
-                        f"{self.shards} shards) exceeds the population "
-                        f"{fed_cfg.num_clients}; lower max_cohort or shards"
-                    )
-            elif fed_cfg.clients_per_round % self.shards:
-                raise ValueError(
-                    f"clients_per_round={fed_cfg.clients_per_round} must "
-                    f"divide across {self.shards} shards"
-                )
-            # the packing-safety bound covers the WORST-case participant
-            # count — the full slate (== clients_per_round when fixed)
-            bound = mech.sum_bound(slate)
-            if fed_cfg.shard_packed and not 0 < bound < (1 << secagg.LANE_BITS):
-                raise ValueError(
-                    f"shard_packed=True unsafe: full-cohort sum bound {bound} "
-                    f">= 2^{secagg.LANE_BITS} (or mechanism is not "
-                    f"integer-coded)"
-                )
-            self._mesh = make_shard_mesh(self.shards)
-            # pure client-parallel plan: every shard a whole client group
-            self._plan = MeshPlan(mesh=self._mesh, client_axes=("shard",),
-                                  model_axis=None)
-            assert self._plan.tp == 1 and self._plan.n_clients == self.shards
-        self.slate = int(slate)
-        # collect_sums / streaming bookkeeping (see FedConfig)
-        self.round_sums: list = []
-        self.staged_bytes_total = 0
-        self.staged_bytes_last_block = 0
-        # realized cohort size per round (every engine appends here; for
-        # fixed cohorts without dropout it is constantly clients_per_round)
-        self.realized_n: list = []
-        self.partition = FederatedPartition(
-            num_clients=fed_cfg.num_clients,
-            samples_per_client=fed_cfg.samples_per_client,
-            seed=fed_cfg.seed,
-            deform=fed_cfg.data_deform,
-            noise=fed_cfg.data_noise,
-        )
-        key = jax.random.key(fed_cfg.seed)
-        self.params = cnn_init(key)
-        self.flat, self.unravel = jax.flatten_util.ravel_pytree(self.params)
-        ev_im, ev_lb = self.partition.gen.make_split(
-            seed=10_000 + fed_cfg.seed, size=fed_cfg.eval_size
-        )
-        self.eval_images = jnp.asarray(ev_im)
-        self.eval_labels = jnp.asarray(ev_lb)
-        self._rng = np.random.default_rng(fed_cfg.seed + 7)  # host engine only
-        self._key = jax.random.key(fed_cfg.seed + 11)
-        self.accountant = RenyiAccountant(alphas=fed_cfg.accountant_alphas)
-        # Self-accounting: the mechanism carries its own parameters, so the
-        # exact per-round aggregate-level eps vector comes straight from the
-        # object that encodes — no second parameter hand-off to drift. With
-        # fixed cohorts all rounds are identical, so the nominal vector is
-        # computed once and composed additively; under subsampling/dropout
-        # each round is composed at its REALIZED cohort size via
-        # _eps_vector (memoized per size, backed by the privacy cache).
-        # Under the shard engine the size is always the FULL cross-shard
-        # cohort — the SecAgg sum spans every shard, so the mechanism's
-        # amplification-by-aggregation sees all participants, never the
-        # per-shard slice.
-        self._per_round_eps = np.asarray([
-            mech.per_round_epsilon(fed_cfg.clients_per_round, a)
-            for a in fed_cfg.accountant_alphas
-        ])
-        self._eps_by_n = {fed_cfg.clients_per_round: self._per_round_eps}
-        if fed_cfg.engine != "host" and fed_cfg.staging != "stream":
-            self._stage_clients()
-        self._build_jits()
-        if self._mesh is not None:
-            # Commit the carried state to the mesh (replicated) up front:
-            # the first donated block call then compiles with the same
-            # input shardings every later call has — one compile, not two.
-            repl = NamedSharding(self._mesh, P())
-            self.flat = jax.device_put(self.flat, repl)
-            self._key = jax.device_put(self._key, repl)
-
-    # -- device staging -----------------------------------------------------
-    def _stage_clients(self):
-        """Materialize every client's dataset on device ONCE.
-
-        (N, s, 28, 28) images + (N, s) labels. At the paper's scale
-        (N=3400, s=20) this is ~210 MB — one transfer for the whole run,
-        vs the host engine's per-round stack-and-ship of the sampled
-        clients (which re-reads clients across rounds)."""
-        imgs, lbls = [], []
-        for i in range(self.cfg.num_clients):
-            im, lb = self.partition.client_data(i)
-            imgs.append(im)
-            lbls.append(lb)
-        self.client_images = jnp.asarray(np.stack(imgs))
-        self.client_labels = jnp.asarray(np.stack(lbls))
-        if self._mesh is not None:
-            # shard engine, full staging: the population is replicated on
-            # every shard (sampling is global, so any shard may need any
-            # client). staging="stream" is the memory-bounded alternative.
-            repl = NamedSharding(self._mesh, P())
-            self.client_images = jax.device_put(self.client_images, repl)
-            self.client_labels = jax.device_put(self.client_labels, repl)
-        self.staged_bytes_total += (self.client_images.nbytes
-                                    + self.client_labels.nbytes)
-
-    # -- cohort realization (shared by every engine; see docs/privacy.md) ----
-    def _sample_slate(self, k_sample):
-        """One round's static-size cohort slate: ``(ids, valid)`` with
-        ``ids.shape == valid.shape == (self.slate,)``.
-
-        Fixed-size sampling fills the whole slate (valid everywhere);
-        Poisson subsampling selects each of the N population clients i.i.d.
-        at rate clients_per_round/N, packs the selected ids (ascending)
-        into the slate front and marks padding/overflow slots invalid.
-        Identical jnp ops run traced (device engines) and eagerly (host
-        engine, streaming staging) — jax.random is deterministic in or out
-        of jit, so every engine realizes the SAME cohort sequence."""
-        cfg = self.cfg
-        if cfg.subsampling == "poisson":
-            sel = jax.random.bernoulli(
-                k_sample, self._poisson_rate, (cfg.num_clients,)
-            )
-            # distinct priorities make the order deterministic under ANY
-            # sort algorithm: selected ids (ascending) first, then the rest
-            prio = jnp.where(sel, 0, cfg.num_clients) + jnp.arange(cfg.num_clients)
-            ids = jnp.argsort(prio)[: self.slate]
-            return ids, sel[ids]
-        ids = jax.random.choice(
-            k_sample, cfg.num_clients, (self.slate,), replace=False
-        )
-        return ids, jnp.ones((self.slate,), bool)
-
-    def _participation(self, valid, k_drop):
-        """Slate-shaped participation mask: selected AND not dropped out
-        (i.i.d. Bernoulli(cfg.dropout) per selected client)."""
-        if self.cfg.dropout > 0:
-            drop = jax.random.bernoulli(k_drop, self.cfg.dropout, valid.shape)
-            return valid & ~drop
-        return valid
-
-    # -- jitted inner pieces ------------------------------------------------
-    def _build_jits(self):
-        mech = self.mech
-        unravel = self.unravel
-        cfg = self.cfg
-
-        local_steps = cfg.local_steps
-        local_lr = cfg.local_lr
-
-        def client_grad(flat_params, images, labels):
-            if local_steps <= 1:
-                params = unravel(flat_params)
-                g = jax.grad(cnn_loss)(params, images, labels)
-                gflat, _ = jax.flatten_util.ravel_pytree(g)
-                return jnp.clip(gflat, -mech.clip, mech.clip)
-            # FedAvg-RQM: several local SGD steps, release the clipped
-            # NEGATIVE model delta (so the server's w - lr*g_hat moves
-            # toward the clients' local optima).
-            def body(flat, _):
-                params = unravel(flat)
-                g = jax.grad(cnn_loss)(params, images, labels)
-                gflat, _ = jax.flatten_util.ravel_pytree(g)
-                return flat - local_lr * gflat, None
-
-            flat_new, _ = jax.lax.scan(body, flat_params, None,
-                                       length=local_steps)
-            delta = flat_params - flat_new
-            return jnp.clip(delta, -mech.clip, mech.clip)
-
-        def encode(gflat, key):
-            return mech.encode(gflat, key)
-
-        # host engine pieces (legacy loop) + shared eval
-        self._client_grads = jax.jit(jax.vmap(client_grad, in_axes=(None, 0, 0)))
-        self._encode = jax.jit(jax.vmap(encode, in_axes=(0, 0)))
-        self._quantize_batch = jax.jit(lambda g, k: mech.quantize_batch(g, k))
-        self._decode = jax.jit(lambda zsum, n: mech.decode_sum(zsum, n))
-        self._eval = jax.jit(
-            lambda flat, im, lb: cnn_accuracy(unravel(flat), im, lb)
-        )
-        self._eval_loss = jax.jit(
-            lambda flat, im, lb: cnn_loss(unravel(flat), im, lb)
-        )
-
-        if cfg.engine == "host":
-            return
-
-        if cfg.engine == "shard":
-            self._build_shard_engine(client_grad)
-            return
-
-        # Device-resident round step, shared verbatim by "perround" and
-        # "scan". The trailing optimization_barrier pins the round boundary:
-        # XLA cannot fuse one round's float math into the next, so the body
-        # compiles to the same numerics whether it stands alone (perround)
-        # or is repeated inside an unrolled scan block — the bit-for-bit
-        # parity the engine test asserts on CPU. (Without it, cross-round
-        # fusion and while-loop single-threading on XLA:CPU shift gradients
-        # by ~1 ULP, which RQM's randomized rounding then amplifies.)
-        # Heterogeneous cohorts (cfg.subsampling/cfg.dropout) keep the
-        # shapes static: the whole SLATE is gradient-computed and encoded,
-        # non-participants are masked out of the SecAgg sum, and the decode
-        # runs at the realized (traced) cohort size — which the step
-        # returns so the host can account each round exactly.
-        hetero = self._hetero
-
-        def round_step(flat, key, images, labels):
-            if hetero:
-                key, k_sample, k_enc, k_drop = jax.random.split(key, 4)
-            else:
-                key, k_sample, k_enc = jax.random.split(key, 3)
-            ids, valid = self._sample_slate(k_sample)
-            grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
-                flat, images[ids], labels[ids]
-            )
-            # Shared clip->encode dispatch (clip is idempotent on the
-            # already-clipped grads): one fused kernel call over the whole
-            # (clients, dim) stack when the mechanism is kernel-backed.
-            z = mech.quantize_batch(grads, k_enc)
-            if not hetero:
-                z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum
-                g_hat = mech.decode_sum(z_sum, cfg.clients_per_round)
-                new = flat - cfg.lr * g_hat
-                n_real = jnp.int32(cfg.clients_per_round)
-                return jax.lax.optimization_barrier(new), key, z_sum, n_real
-            part = self._participation(valid, k_drop)
-            z = z * part.astype(z.dtype)[:, None]  # non-participants: 0
-            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
-            n_real = jnp.sum(part, dtype=jnp.int32)
-            g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
-            # an empty round releases nothing and moves nothing
-            new = jnp.where(n_real > 0, flat - cfg.lr * g_hat, flat)
-            return jax.lax.optimization_barrier(new), key, z_sum, n_real
-
-        self._round_jit = jax.jit(round_step)
-        collect = cfg.collect_sums
-
-        def block_fn(flat, key, images, labels, length):
-            unroll = cfg.scan_unroll
-            if unroll is None:
-                # Full unroll ONLY on CPU, where XLA runs while-loop bodies
-                # single-threaded; TPU/GPU while loops lose nothing and
-                # unrolling would just bloat compile time and program size.
-                unroll = length if jax.default_backend() == "cpu" else 1
-
-            def body(carry, _):
-                f, k = carry
-                f, k, z_sum, n_real = round_step(f, k, images, labels)
-                return (f, k), (z_sum if collect else None,
-                                n_real if hetero else None)
-
-            (flat, key), (sums, ns) = jax.lax.scan(
-                body, (flat, key), None, length=length,
-                unroll=min(unroll, length),
-            )
-            return flat, key, sums, ns
-
-        self._run_block_jit = jax.jit(
-            block_fn, static_argnums=(4,), donate_argnums=(0,)
-        )
-
-    # -- the shard engine ----------------------------------------------------
-    def _build_shard_engine(self, client_grad):
-        """Blocks of rounds over the ('shard',) mesh (see module docstring).
-
-        Per round, inside shard_map: replicated global cohort sampling ->
-        per-shard gradient+encode over the shard's n/S cohort slice (the
-        row_offset keeps the RNG counters identical to the unsharded batch)
-        -> per-shard partial integer sum -> ONE cross-shard secure_sum of
-        packed level indices -> replicated decode + SGD step. The only
-        tensor that crosses the shard boundary is the encoded partial sum.
-        """
-        cfg, mech = self.cfg, self.mech
-        n = cfg.clients_per_round
-        S = self.slate  # == n for fixed cohorts; rounded to shards for poisson
-        n_per = S // self.shards
-        bound = mech.sum_bound(S)  # safety of forced packing checked in init
-        prefer_packed = cfg.shard_packed is None or cfg.shard_packed
-        streamed = cfg.staging == "stream"
-        collect = cfg.collect_sums
-        hetero = self._hetero
-
-        # On a 1-shard mesh the shard-local slice IS the whole cohort and
-        # the RNG row offset IS zero: specialize them away statically so
-        # the round body traces to exactly the scan engine's program (the
-        # bit-identity contract for free, and none of the dynamic-slice /
-        # traced-offset overhead on single-device runs — the CI bench lane
-        # measures this case). Multi-shard meshes take the generic path.
-        multi = self.shards > 1
-
-        def round_step(flat, key, images, labels):
-            # Identical key evolution to the scan engine's round_step: the
-            # key is replicated, so every shard derives the same k_sample /
-            # k_enc / k_drop and the same global cohort slate + masks.
-            if hetero:
-                key, k_sample, k_enc, k_drop = jax.random.split(key, 4)
-            else:
-                key, k_sample, k_enc = jax.random.split(key, 3)
-            j = jax.lax.axis_index("shard") if multi else 0
-            valid = None
-            if streamed:
-                # the block staging already gathered this round's slate in
-                # sampled order and sharded it over the mesh; the device
-                # re-derives only the (replicated) validity mask from the
-                # same k_sample the host replayed.
-                local_im, local_lb = images, labels
-                if hetero:
-                    _, valid = self._sample_slate(k_sample)
-            else:
-                ids, valid = self._sample_slate(k_sample)
-                if multi:
-                    ids = jax.lax.dynamic_slice_in_dim(ids, j * n_per, n_per)
-                local_im, local_lb = images[ids], labels[ids]
-            grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
-                flat, local_im, local_lb
-            )
-            z = mech.quantize_batch(
-                grads, k_enc,
-                row_offset=j * n_per if multi else None,
-                total_rows=S if multi else None,
-            )
-            if hetero:
-                # replicated full-slate participation; each shard masks its
-                # own row slice out of the partial sum
-                part = self._participation(valid, k_drop)
-                local = (jax.lax.dynamic_slice_in_dim(part, j * n_per, n_per)
-                         if multi else part)
-                z = z * local.astype(z.dtype)[:, None]
-                n_real = jnp.sum(part, dtype=jnp.int32)
-            else:
-                n_real = jnp.int32(n)
-            z_part = jnp.sum(z, axis=0, dtype=z.dtype)  # shard-local partial
-            # The SecAgg boundary: integer level indices cross shards,
-            # lane-packed two-per-int32 word when the full-cohort sum bound
-            # allows (exact either way). The float 'none' baseline has
-            # bound 0 and takes the plain psum.
-            z_sum = secagg.secure_sum_bounded(
-                z_part, ("shard",), bound, packed=prefer_packed
-            )
-            if hetero:
-                g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
-                new = jnp.where(n_real > 0, flat - cfg.lr * g_hat, flat)
-            else:
-                g_hat = mech.decode_sum(z_sum, n)
-                new = flat - cfg.lr * g_hat
-            return jax.lax.optimization_barrier(new), key, z_sum, n_real
-
-        def make_block(length):
-            unroll = cfg.scan_unroll
-            if unroll is None:
-                unroll = length if jax.default_backend() == "cpu" else 1
-
-            def block(flat, key, images, labels):
-                def body(carry, xs):
-                    f, k = carry
-                    im, lb = xs if streamed else (images, labels)
-                    f, k, z_sum, n_real = round_step(f, k, im, lb)
-                    return (f, k), (z_sum if collect else None,
-                                    n_real if hetero else None)
-
-                xs = (images, labels) if streamed else None
-                (flat, key), (sums, ns) = jax.lax.scan(
-                    body, (flat, key), xs, length=length,
-                    unroll=min(unroll, length),
-                )
-                return flat, key, sums, ns
-
-            data_spec = P(None, "shard") if streamed else P()
-            # P() entries covering the None (not collected) outputs map no
-            # leaves — harmless placeholders keeping the spec tree aligned
-            out_specs = (P(), P(), P(), P())
-            mapped = compat_shard_map(
-                block,
-                mesh=self._mesh,
-                in_specs=(P(), P(), data_spec, data_spec),
-                out_specs=out_specs,
-            )
-            return jax.jit(mapped, donate_argnums=(0,))
-
-        self._shard_blocks: dict = {}
-        self._make_shard_block = make_block
-
-    def _shard_block_jit(self, length: int):
-        if length not in self._shard_blocks:
-            self._shard_blocks[length] = self._make_shard_block(length)
-        return self._shard_blocks[length]
-
-    def _stage_stream_block(self, length: int):
-        """Streaming-cohort staging: materialize ONLY the next ``length``
-        rounds' sampled cohorts (replaying the device key stream on the
-        host — jax.random is deterministic in or out of jit) and ship them
-        sharded over the mesh. Host + device footprint per block is
-        O(length * clients_per_round) client datasets, independent of
-        num_clients — 1e5-1e6 simulated clients never exist at once."""
-        cfg = self.cfg
-        n = self.slate
-        key = self._key
-        ids_rounds = np.empty((length, n), np.int64)
-        for t in range(length):
-            # replay exactly the device key evolution (3 splits, 4 when
-            # heterogeneous cohorts draw a dropout key)
-            if self._hetero:
-                key, k_sample, _, _ = jax.random.split(key, 4)
-            else:
-                key, k_sample, _ = jax.random.split(key, 3)
-            ids_rounds[t] = np.asarray(self._sample_slate(k_sample)[0])
-        imgs = lbls = None
-        cache: dict = {}  # client data is deterministic — dedup within block
-        for t in range(length):
-            for u, cid in enumerate(ids_rounds[t]):
-                cid = int(cid)
-                if cid not in cache:
-                    cache[cid] = self.partition.client_data(cid)
-                im, lb = cache[cid]
-                if imgs is None:
-                    # geometry/dtype come from the data pipeline itself, so
-                    # streamed staging can never drift from _stage_clients
-                    imgs = np.empty((length, n) + im.shape, im.dtype)
-                    lbls = np.empty((length, n) + lb.shape, lb.dtype)
-                imgs[t, u], lbls[t, u] = im, lb
-        self.staged_bytes_last_block = imgs.nbytes + lbls.nbytes
-        self.staged_bytes_total += self.staged_bytes_last_block
-        shard = NamedSharding(self._mesh, P(None, "shard"))
-        return (jax.device_put(jnp.asarray(imgs), shard),
-                jax.device_put(jnp.asarray(lbls), shard))
-
-    # -- privacy accounting -------------------------------------------------
-    def attach_params(self, mech_params=None):
-        """DEPRECATED no-op (v1 API): mechanisms are self-accounting.
-
-        Accounting is always on and computed from ``self.mech``'s own
-        parameter object via ``Mechanism.per_round_epsilon`` — exactly the
-        params that encode, so no mismatch is possible. This shim only
-        warns (and flags a params mismatch, the bug the v2 API removes);
-        it will be deleted next release."""
-        mech_self = getattr(self.mech, "params", None)
-        mismatch = (
-            mech_params is not None
-            and mech_self is not None
-            and mech_params != mech_self
-        )
-        warnings.warn(
-            "FedTrainer.attach_params is deprecated and a no-op: the "
-            "mechanism is self-accounting (Mechanism.per_round_epsilon)."
-            + (f" NOTE: the params passed here {mech_params} differ from "
-               f"the mechanism's own {mech_self}; accounting uses the "
-               f"latter." if mismatch else ""),
-            DeprecationWarning,
-            stacklevel=2,
-        )
-
-    def _eps_vector(self, n: int) -> np.ndarray:
-        """Exact per-round eps vector (over cfg.accountant_alphas) for a
-        realized cohort of n clients. Memoized per size; each distinct size
-        costs one exact accountant evaluation per alpha (served by the
-        privacy cache across trainers/processes). n = 0 releases nothing
-        (the all-zero SecAgg sum is data-independent) — eps 0."""
-        n = int(n)
-        if n not in self._eps_by_n:
-            if n <= 0:
-                v = np.zeros(len(self.cfg.accountant_alphas))
-            else:
-                v = np.asarray([
-                    self.mech.per_round_epsilon(n, a)
-                    for a in self.cfg.accountant_alphas
-                ])
-            self._eps_by_n[n] = v
-        return self._eps_by_n[n]
-
-    def _account(self, rounds: int):
-        """Fixed-cohort composition: every round at clients_per_round."""
-        for _ in range(rounds):
-            self.realized_n.append(self.cfg.clients_per_round)
-            self.accountant.step(self._per_round_eps)
-
-    def _account_realized(self, ns) -> None:
-        """Heterogeneous composition: each round at its REALIZED size."""
-        for n in np.asarray(ns).reshape(-1):
-            n = int(n)
-            self.realized_n.append(n)
-            self.accountant.step(self._eps_vector(n))
-
-    def budget_spent(self) -> tuple:
-        """(eps spent at cfg.budget_delta, remaining eps) — requires
-        cfg.budget_eps to be set."""
-        cfg = self.cfg
-        if cfg.budget_eps is None:
-            raise ValueError("no privacy budget configured (cfg.budget_eps)")
-        spent, _ = self.accountant.dp_epsilon(cfg.budget_delta)
-        return spent, max(0.0, cfg.budget_eps - spent)
-
-    # -- the loop -----------------------------------------------------------
-    def round(self, t: int):
-        """Advance one round (perround/host engines; scan/shard use
-        run_block — calling round() there advances a 1-round block)."""
-        cfg = self.cfg
-        if cfg.engine in ("scan", "shard"):
-            self.run_block(1)
-            return
-        if cfg.engine == "host":
-            if self._hetero:
-                self._host_hetero_round()
-                return
-            ids = sample_clients(self._rng, cfg.num_clients, cfg.clients_per_round)
-            images = np.stack([self.partition.client_data(i)[0] for i in ids])
-            labels = np.stack([self.partition.client_data(i)[1] for i in ids])
-            grads = self._client_grads(self.flat, jnp.asarray(images), jnp.asarray(labels))
-            self._key, sub = jax.random.split(self._key)
-            keys = jax.random.split(sub, cfg.clients_per_round)
-            z = self._encode(grads, keys)  # (n, dim) int32 (or float for 'none')
-            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
-            g_hat = self._decode(z_sum, cfg.clients_per_round)
-            self.flat = self.flat - cfg.lr * g_hat
-            if cfg.collect_sums:
-                self.round_sums.append(np.asarray(z_sum))
-        else:
-            self.flat, self._key, z_sum, n_real = self._round_jit(
-                self.flat, self._key, self.client_images, self.client_labels
-            )
-            if cfg.collect_sums:
-                self.round_sums.append(np.asarray(z_sum))
-            if self._hetero:
-                self._account_realized([n_real])
-                return
-        self._account(1)
-
-    def _host_hetero_round(self):
-        """Host-engine round under subsampling/dropout: the legacy per-round
-        host data staging, but cohort/participation come from the SAME
-        device key stream the jitted engines evolve (4 splits per round),
-        so the realized cohort sequence — and hence the accounted eps
-        sequence — is identical on every engine."""
-        cfg = self.cfg
-        self._key, k_sample, k_enc, k_drop = jax.random.split(self._key, 4)
-        ids, valid = self._sample_slate(k_sample)
-        ids = np.asarray(ids)
-        images = np.stack([self.partition.client_data(int(i))[0] for i in ids])
-        labels = np.stack([self.partition.client_data(int(i))[1] for i in ids])
-        grads = self._client_grads(
-            self.flat, jnp.asarray(images), jnp.asarray(labels)
-        )
-        z = self._quantize_batch(grads, k_enc)  # full slate, like the engines
-        part = self._participation(valid, k_drop)
-        z = z * part.astype(z.dtype)[:, None]
-        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)
-        n_real = int(np.asarray(jnp.sum(part, dtype=jnp.int32)))
-        if n_real > 0:
-            g_hat = self._decode(z_sum, n_real)
-            self.flat = self.flat - cfg.lr * g_hat
-        if cfg.collect_sums:
-            self.round_sums.append(np.asarray(z_sum))
-        self._account_realized([n_real])
-
-    def run_block(self, rounds: int):
-        """Advance ``rounds`` rounds inside jitted blocks (scan and shard
-        engines).
-
-        The flat parameter buffer is donated to each call, so blocks update
-        parameters in place with no per-round dispatch. Blocks longer than
-        cfg.scan_block are split into chunks (compile-time bound; each
-        distinct chunk length compiles once and is then reused). Under the
-        shard engine each chunk is one shard_map call over the mesh; with
-        staging="stream" the chunk's cohort is staged just-in-time."""
-        if self.cfg.engine not in ("scan", "shard"):
-            raise ValueError(f"run_block requires engine='scan' or 'shard', "
-                             f"got {self.cfg.engine!r}")
-        done = 0
-        while done < rounds:
-            step = min(self.cfg.scan_block, rounds - done)
-            if self.cfg.engine == "shard":
-                if self.cfg.staging == "stream":
-                    images, labels = self._stage_stream_block(step)
-                else:
-                    images, labels = self.client_images, self.client_labels
-                out = self._shard_block_jit(step)(
-                    self.flat, self._key, images, labels
-                )
-            else:
-                out = self._run_block_jit(
-                    self.flat, self._key, self.client_images,
-                    self.client_labels, step,
-                )
-            self.flat, self._key, sums, ns = out
-            if self.cfg.collect_sums:
-                self.round_sums.extend(np.asarray(sums))
-            if self._hetero:
-                self._account_realized(np.asarray(ns))
-            done += step
-        if not self._hetero:
-            self._account(rounds)
-
-    def evaluate(self):
-        flat = self.flat
-        if self._mesh is not None:
-            # the shard engine leaves flat committed (replicated) on the
-            # mesh; evaluate on an uncommitted host copy so the eval jit
-            # never mixes device sets with the single-device eval arrays.
-            flat = jnp.asarray(np.asarray(flat))
-        acc = float(self._eval(flat, self.eval_images, self.eval_labels))
-        loss = float(self._eval_loss(flat, self.eval_images, self.eval_labels))
-        return {"accuracy": acc, "loss": loss}
-
-    def train(self, rounds: Optional[int] = None, eval_every: int = 25, log=print):
-        """Run up to ``rounds`` rounds; with cfg.budget_eps set, log the
-        remaining (eps, budget_delta)-DP budget at every eval point and
-        halt at budget exhaustion — exactly at the last affordable round
-        for fixed cohorts (the per-round spend is constant and the
-        lookahead is exact), at the first eval/block boundary whose
-        realized spend crosses the budget under subsampling/dropout (the
-        realized spend is only known after the round; see docs/privacy.md).
-        """
-        rounds = rounds or self.cfg.rounds
-        cfg = self.cfg
-        budget = cfg.budget_eps
-        history = []
-        t0 = time.time()
-
-        def record(done):
-            m = self.evaluate()
-            m.update(round=done, seconds=round(time.time() - t0, 1))
-            msg = (f"[{self.mech.name}] round {done:4d} "
-                   f"loss={m['loss']:.4f} acc={m['accuracy']:.4f}")
-            if budget is not None:
-                spent, remaining = self.budget_spent()
-                m.update(eps_spent=spent, eps_remaining=remaining)
-                msg += (f" eps_spent={spent:.3f}/{budget:g} "
-                        f"(delta={cfg.budget_delta:g})")
-            history.append(m)
-            log(msg)
-
-        def affordable(want: int) -> int:
-            """How many of the next ``want`` rounds the budget still buys:
-            an exact projection with the constant per-round vector for
-            fixed cohorts, a nominal-cohort lookahead (realized spend
-            re-checked next call) under subsampling/dropout."""
-            if budget is None:
-                return want
-            if self.budget_spent()[1] <= 0:
-                return 0
-            k = self.accountant.rounds_within_budget(
-                budget, cfg.budget_delta, self._per_round_eps
-            )
-            return want if k > want else int(k)
-
-        halted = False
-        if cfg.engine in ("scan", "shard"):
-            done = 0
-            while done < rounds:
-                block = affordable(min(eval_every, rounds - done))
-                if block == 0:
-                    halted = True
-                    break
-                if budget is not None and self._hetero:
-                    # the realized spend is only known AFTER a round: advance
-                    # one round at a time and stop at the first crossing
-                    # (overshoot <= one round; the nominal lookahead above
-                    # only caps the attempt)
-                    ran = 0
-                    while ran < block:
-                        self.run_block(1)
-                        ran += 1
-                        if self.budget_spent()[1] <= 0:
-                            halted = True
-                            break
-                    done += ran
-                    record(done)
-                    if halted:
-                        break
-                else:
-                    self.run_block(block)
-                    done += block
-                    record(done)
-        else:
-            for t in range(rounds):
-                # for hetero budget runs affordable() returns 0 at the first
-                # call after the realized spend crosses — overshoot <= 1 round
-                if affordable(1) == 0:
-                    halted = True
-                    break
-                self.round(t)
-                if (t + 1) % eval_every == 0 or t == rounds - 1:
-                    record(t + 1)
-        if halted:
-            spent, _ = self.budget_spent()
-            log(f"[{self.mech.name}] privacy budget exhausted after "
-                f"{self.accountant.rounds} rounds: eps_spent={spent:.4f} of "
-                f"{budget:g} at delta={cfg.budget_delta:g}; halting")
-            if not history or history[-1]["round"] != self.accountant.rounds:
-                record(self.accountant.rounds)
-        return history
+__all__ = ["FedConfig", "FedTrainer", "ENGINES", "STAGINGS", "SUBSAMPLINGS"]

@@ -1,0 +1,233 @@
+"""The jitted Algorithm-1 round-step and block builders.
+
+One round, identical under every engine: split the round key; sample the
+cohort slate; per-client clipped gradient (or FedAvg delta) over the
+slate; one fused clip->encode over the (clients, dim) stack; mask
+non-participants; SecAgg-sum the integer messages; decode g_hat at the
+realized cohort size; route g_hat through the SERVER OPTIMIZER at the
+decode-then-apply boundary (``repro.optim.Optimizer`` — plain SGD is the
+paper's w - lr*g_hat, bit-identical by construction; momentum/adam carry
+their state through the scan/shard carry, donated with the parameters).
+
+The trailing optimization_barrier pins the round boundary: XLA cannot
+fuse one round's float math into the next, so the body compiles to the
+same numerics whether it stands alone (perround) or is repeated inside an
+unrolled scan block — the bit-for-bit parity the engine tests assert on
+CPU. (Without it, cross-round fusion and while-loop single-threading on
+XLA:CPU shift gradients by ~1 ULP, which RQM's randomized rounding then
+amplifies.)
+
+Builders return traced-side callables; the engine classes
+(``repro.fed.engines``) own jit/shard_map wrapping and dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.core import secagg
+from repro.fed import cohort
+from repro.fed.cnn import cnn_loss
+
+
+def make_client_grad(mech, unravel, cfg):
+    """Per-client release: the clipped gradient (local_steps=1, Algorithm
+    1 exactly) or the clipped NEGATIVE model delta of several local SGD
+    steps (FedAvg-RQM — the server's w - lr*g_hat then moves toward the
+    clients' local optima). Same DP accounting either way: one [-c,c]^f
+    vector per client per round."""
+    local_steps, local_lr = cfg.local_steps, cfg.local_lr
+
+    def client_grad(flat_params, images, labels):
+        if local_steps <= 1:
+            params = unravel(flat_params)
+            g = jax.grad(cnn_loss)(params, images, labels)
+            gflat, _ = jax.flatten_util.ravel_pytree(g)
+            return jnp.clip(gflat, -mech.clip, mech.clip)
+
+        def body(flat, _):
+            params = unravel(flat)
+            g = jax.grad(cnn_loss)(params, images, labels)
+            gflat, _ = jax.flatten_util.ravel_pytree(g)
+            return flat - local_lr * gflat, None
+
+        flat_new, _ = jax.lax.scan(body, flat_params, None, length=local_steps)
+        delta = flat_params - flat_new
+        return jnp.clip(delta, -mech.clip, mech.clip)
+
+    return client_grad
+
+
+def make_server_apply(opt, cfg, hetero):
+    """The decode-then-apply boundary: g_hat -> (new_params, new_state)
+    via the pluggable server optimizer. Empty heterogeneous rounds (zero
+    surviving participants) release nothing and move NOTHING — neither
+    parameters nor optimizer state."""
+    lr = cfg.lr
+
+    def apply(flat, opt_state, g_hat, n_real):
+        new, new_state = opt.update(g_hat, opt_state, flat, lr)
+        if hetero:
+            ok = n_real > 0
+            new = jnp.where(ok, new, flat)
+            new_state = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(ok, a, b), new_state, opt_state
+            )
+        return new, new_state
+
+    return apply
+
+
+def make_round_step(mech, cfg, opt, slate, client_grad):
+    """The device-resident round step shared verbatim by the "perround"
+    and "scan" engines (and, via the specialized 1-shard path, "shard").
+    Carry is (flat, opt_state, key); also returns the round's encoded
+    SecAgg sum and realized participant count for host-side accounting."""
+    hetero = cohort.is_hetero(cfg)
+    apply = make_server_apply(opt, cfg, hetero)
+
+    def round_step(flat, opt_state, key, images, labels):
+        key, k_sample, k_enc, k_drop = cohort.split_round_keys(cfg, key)
+        ids, valid = cohort.sample_slate(cfg, slate, k_sample)
+        grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
+            flat, images[ids], labels[ids]
+        )
+        # Shared clip->encode dispatch (clip is idempotent on the
+        # already-clipped grads): one fused kernel call over the whole
+        # (clients, dim) stack when the mechanism is kernel-backed.
+        z = mech.quantize_batch(grads, k_enc)
+        if not hetero:
+            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum
+            g_hat = mech.decode_sum(z_sum, cfg.clients_per_round)
+            n_real = jnp.int32(cfg.clients_per_round)
+        else:
+            part = cohort.participation(cfg, valid, k_drop)
+            z = z * part.astype(z.dtype)[:, None]  # non-participants: 0
+            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg emulation
+            n_real = jnp.sum(part, dtype=jnp.int32)
+            # an empty round releases nothing and moves nothing
+            g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
+        new, new_state = apply(flat, opt_state, g_hat, n_real)
+        new, new_state = jax.lax.optimization_barrier((new, new_state))
+        return new, new_state, key, z_sum, n_real
+
+    return round_step
+
+
+def pick_unroll(cfg, length: int) -> int:
+    """Full unroll ONLY on CPU, where XLA runs while-loop bodies
+    single-threaded; TPU/GPU while loops lose nothing and unrolling would
+    just bloat compile time and program size."""
+    unroll = cfg.scan_unroll
+    if unroll is None:
+        unroll = length if jax.default_backend() == "cpu" else 1
+    return min(unroll, length)
+
+
+def make_block(round_step, cfg, *, streamed: bool = False):
+    """A block of rounds as one ``lax.scan`` over the round step. With
+    ``streamed`` staging the per-round cohort data rides the scan xs
+    (leading axis = rounds); otherwise the staged population is closed
+    over as a scan-invariant. Returns
+    ``block(flat, opt_state, key, images, labels, length)``."""
+    hetero = cohort.is_hetero(cfg)
+    collect = cfg.collect_sums
+
+    def block(flat, opt_state, key, images, labels, length):
+        def body(carry, xs):
+            f, s, k = carry
+            im, lb = xs if streamed else (images, labels)
+            f, s, k, z_sum, n_real = round_step(f, s, k, im, lb)
+            return (f, s, k), (z_sum if collect else None,
+                               n_real if hetero else None)
+
+        xs = (images, labels) if streamed else None
+        (flat, opt_state, key), (sums, ns) = jax.lax.scan(
+            body, (flat, opt_state, key), xs, length=length,
+            unroll=pick_unroll(cfg, length),
+        )
+        return flat, opt_state, key, sums, ns
+
+    return block
+
+
+def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
+    """The shard engine's round step (inside shard_map over ('shard',)).
+
+    Identical key evolution to the scan engine: the key is replicated, so
+    every shard derives the same k_sample/k_enc/k_drop and the same global
+    cohort slate + masks. Each shard grads+encodes its slate/shards cohort
+    slice (the row_offset keeps the RNG counters identical to the
+    unsharded batch), takes its partial integer sum, and ONE cross-shard
+    secure_sum of packed level indices crosses the shard boundary — never
+    floats — before the replicated decode + server-optimizer step.
+
+    On a 1-shard mesh the shard-local slice IS the whole cohort and the
+    RNG row offset IS zero: both are specialized away statically so the
+    round body traces to exactly the scan engine's program (the
+    bit-identity contract for free, and none of the dynamic-slice /
+    traced-offset overhead on single-device runs). Multi-shard meshes
+    take the generic path.
+    """
+    hetero = cohort.is_hetero(cfg)
+    apply = make_server_apply(opt, cfg, hetero)
+    n = cfg.clients_per_round
+    n_per = slate // shards
+    bound = mech.sum_bound(slate)  # forced-packing safety checked at init
+    prefer_packed = cfg.shard_packed is None or cfg.shard_packed
+    streamed = cfg.staging == "stream"
+    multi = shards > 1
+
+    def round_step(flat, opt_state, key, images, labels):
+        key, k_sample, k_enc, k_drop = cohort.split_round_keys(cfg, key)
+        j = jax.lax.axis_index("shard") if multi else 0
+        valid = None
+        if streamed:
+            # the block staging already gathered this round's slate in
+            # sampled order and sharded it over the mesh; the device
+            # re-derives only the (replicated) validity mask from the
+            # same k_sample the host replayed.
+            local_im, local_lb = images, labels
+            if hetero:
+                _, valid = cohort.sample_slate(cfg, slate, k_sample)
+        else:
+            ids, valid = cohort.sample_slate(cfg, slate, k_sample)
+            if multi:
+                ids = jax.lax.dynamic_slice_in_dim(ids, j * n_per, n_per)
+            local_im, local_lb = images[ids], labels[ids]
+        grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
+            flat, local_im, local_lb
+        )
+        z = mech.quantize_batch(
+            grads, k_enc,
+            row_offset=j * n_per if multi else None,
+            total_rows=slate if multi else None,
+        )
+        if hetero:
+            # replicated full-slate participation; each shard masks its
+            # own row slice out of the partial sum
+            part = cohort.participation(cfg, valid, k_drop)
+            local = (jax.lax.dynamic_slice_in_dim(part, j * n_per, n_per)
+                     if multi else part)
+            z = z * local.astype(z.dtype)[:, None]
+            n_real = jnp.sum(part, dtype=jnp.int32)
+        else:
+            n_real = jnp.int32(n)
+        z_part = jnp.sum(z, axis=0, dtype=z.dtype)  # shard-local partial
+        # The SecAgg boundary: integer level indices cross shards,
+        # lane-packed two-per-int32 word when the full-cohort sum bound
+        # allows (exact either way). The float 'none' baseline has
+        # bound 0 and takes the plain psum.
+        z_sum = secagg.secure_sum_bounded(
+            z_part, ("shard",), bound, packed=prefer_packed
+        )
+        if hetero:
+            g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
+        else:
+            g_hat = mech.decode_sum(z_sum, n)
+        new, new_state = apply(flat, opt_state, g_hat, n_real)
+        new, new_state = jax.lax.optimization_barrier((new, new_state))
+        return new, new_state, key, z_sum, n_real
+
+    return round_step

@@ -13,12 +13,14 @@ Two modes:
 from __future__ import annotations
 
 import argparse
+import hashlib
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.checkpoint import save
+from repro.checkpoint import latest_step, restore, save
 from repro.configs.base import InputShape
 from repro.configs.registry import get_config
 from repro.core.mechanisms import accepted_options, make_mechanism, mechanism_names
@@ -64,7 +66,11 @@ def main():
     ap.add_argument("--target-delta", type=float, default=1e-5,
                     help="delta for --target-eps calibration")
     ap.add_argument("--lr", type=float, default=0.2)
-    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--server-opt", "--optimizer", dest="server_opt",
+                    default="sgd",
+                    help="server optimizer applied at the decode-then-"
+                         "apply boundary (sgd | momentum | adam); "
+                         "--optimizer is the legacy spelling")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--mesh-shape", default=None,
                     help="e.g. 2x2 => (data,model); 2x2x2 => (pod,data,model); "
@@ -72,6 +78,12 @@ def main():
                          "parallelism over (data,) with a trivial model axis")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params + optimizer state from the latest "
+                         "checkpoint in --ckpt-dir and continue from that "
+                         "step (the RNG key stream is replayed to the "
+                         "restored step, so the continuation matches the "
+                         "uninterrupted run)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -128,7 +140,7 @@ def main():
     print(f"[privacy] {mech.describe()}: per-step aggregate eps(alpha=8) = "
           f"{eps:.4f} with n_clients={n_clients}; "
           f"total over {args.steps} steps = {eps * args.steps:.4f}")
-    opt = make_optimizer(args.optimizer)
+    opt = make_optimizer(args.server_opt)
     lr_fn = warmup_cosine(args.lr, warmup=args.steps // 10 + 1, total_steps=args.steps)
     pipe = TokenPipeline(cfg, args.seq, args.batch, seed=args.seed)
     key = jax.random.key(args.seed)
@@ -144,8 +156,21 @@ def main():
             params = model_lib.init_params(jax.random.key(args.seed + 1), cfg, tp=tp)
             params = jax.device_put(params, meta_lib.shardings(specs["param_meta"], mesh))
             opt_state = opt.init(params)
+            # restored leaves must come back with the SAME shardings the
+            # non-resume path commits (restore() yields default-device
+            # arrays; re-sharding keeps large models from landing on one
+            # device and the first donated step from recompiling)
+            shardings = {
+                "params": meta_lib.shardings(specs["param_meta"], mesh),
+                "opt": meta_lib.shardings(
+                    opt.state_meta(specs["param_meta"]), mesh
+                ),
+            }
+            params, opt_state, key, start = _maybe_resume(
+                args, params, opt_state, key, shardings
+            )
             run_step = lambda p, o, s, b, k: step_fn(p, o, s, b, k)
-            _loop(args, cfg, pipe, run_step, params, opt_state, key)
+            _loop(args, cfg, pipe, run_step, params, opt_state, key, start)
     else:
         ctx = ParallelCtx()
         body = build_train_step_fn(
@@ -155,24 +180,86 @@ def main():
         step_fn = jax.jit(body, donate_argnums=(0, 1))
         params = model_lib.init_params(jax.random.key(args.seed + 1), cfg, tp=1)
         opt_state = opt.init(params)
-        _loop(args, cfg, pipe, step_fn, params, opt_state, key)
+        params, opt_state, key, start = _maybe_resume(
+            args, params, opt_state, key
+        )
+        _loop(args, cfg, pipe, step_fn, params, opt_state, key, start)
 
 
-def _loop(args, cfg, pipe, step_fn, params, opt_state, key):
+def _opt_fingerprint(server_opt: str) -> np.ndarray:
+    """(32,) uint8 sha256 of the optimizer name — saved with every
+    checkpoint so --resume can refuse a mismatched --server-opt instead
+    of silently dropping (or failing to find) the optimizer state."""
+    return np.frombuffer(hashlib.sha256(server_opt.encode()).digest(),
+                         np.uint8)
+
+
+def _maybe_resume(args, params, opt_state, key, shardings=None):
+    """--resume: restore {params, opt, key} from the latest checkpoint in
+    --ckpt-dir — the saved RNG key is the post-step carry, so the
+    continuation matches the uninterrupted run exactly (the data pipeline
+    is stateless per step). On a mesh run, ``shardings`` re-commits the
+    restored trees to the mesh (restore() returns default-device arrays).
+    Returns the (possibly restored) state and the start step."""
+    if not args.resume:
+        return params, opt_state, key, 0
+    if not args.ckpt_dir:
+        raise SystemExit("--resume requires --ckpt-dir")
+    step0 = latest_step(args.ckpt_dir)
+    if step0 is None:
+        print(f"[resume] no checkpoints in {args.ckpt_dir}; starting fresh")
+        return params, opt_state, key, 0
+    # fingerprint first, alone: a mismatched --server-opt may not even
+    # share the checkpoint's optimizer-state tree, which would abort the
+    # full restore with a missing-leaf error before this clearer one
+    try:
+        fp = restore(args.ckpt_dir, step0,
+                     {"server_opt_fp": np.zeros(32, np.uint8)})
+    except KeyError:
+        raise SystemExit(
+            f"--resume: checkpoint step {step0} in {args.ckpt_dir} "
+            f"predates the resume metadata (no optimizer fingerprint / "
+            f"RNG key saved) and cannot be resumed exactly; re-train "
+            f"with this build to produce resumable checkpoints"
+        )
+    if not np.array_equal(fp["server_opt_fp"],
+                          _opt_fingerprint(args.server_opt)):
+        raise SystemExit(
+            f"--resume: the checkpoint in {args.ckpt_dir} was written "
+            f"with a different --server-opt than {args.server_opt!r}; "
+            f"pass the original optimizer (continuing with another would "
+            f"silently diverge from the uninterrupted run)"
+        )
+    tree = restore(args.ckpt_dir, step0,
+                   {"params": params, "opt": opt_state,
+                    "key": jax.random.key_data(key)})
+    params, opt_state = tree["params"], tree["opt"]
+    key = jax.random.wrap_key_data(tree["key"])
+    if shardings is not None:
+        params = jax.device_put(params, shardings["params"])
+        opt_state = jax.device_put(opt_state, shardings["opt"])
+    print(f"[resume] restored step {step0} from {args.ckpt_dir}")
+    return params, opt_state, key, step0
+
+
+def _loop(args, cfg, pipe, step_fn, params, opt_state, key, start=0):
     t0 = time.time()
-    for step in range(args.steps):
+    for step in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
         key, sub = jax.random.split(key)
         params, opt_state, metrics = step_fn(
             params, opt_state, jnp.int32(step), batch, sub
         )
-        if (step + 1) % args.log_every == 0 or step == 0:
+        if (step + 1) % args.log_every == 0 or step == start:
             m = {k: float(v) for k, v in metrics.items()}
-            rate = (step + 1) * args.batch * args.seq / (time.time() - t0)
+            rate = (step + 1 - start) * args.batch * args.seq / (time.time() - t0)
             print(f"step {step+1:5d} loss={m['loss']:.4f} ce={m['ce_loss']:.4f} "
                   f"tok/s={rate:,.0f}", flush=True)
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            save(args.ckpt_dir, step + 1, {"params": params, "opt": opt_state})
+            save(args.ckpt_dir, step + 1,
+                 {"params": params, "opt": opt_state,
+                  "key": jax.random.key_data(key),
+                  "server_opt_fp": _opt_fingerprint(args.server_opt)})
     print(f"done in {time.time()-t0:.1f}s")
 
 

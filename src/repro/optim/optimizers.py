@@ -33,9 +33,15 @@ def sgd(weight_decay: float = 0.0) -> Optimizer:
         return ()
 
     def update(grads, state, params, lr):
-        new_params = jax.tree_util.tree_map(
-            lambda p, g: p - lr * (g + weight_decay * p).astype(p.dtype), params, grads
-        )
+        # weight_decay=0 skips the decay term entirely (trace-time): the
+        # update is then literally p - lr*g — the fed engines rely on this
+        # to keep server_opt="sgd" bit-identical to the bare SGD step
+        # (an added 0.0*p would flip -0.0 gradients to +0.0).
+        if weight_decay:
+            step = lambda p, g: p - lr * (g + weight_decay * p).astype(p.dtype)
+        else:
+            step = lambda p, g: p - lr * g.astype(p.dtype)
+        new_params = jax.tree_util.tree_map(step, params, grads)
         return new_params, state
 
     def state_meta(meta_tree):

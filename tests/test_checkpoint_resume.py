@@ -1,0 +1,204 @@
+"""Checkpoint/resume bit-identity (fed/checkpointing.py, FedConfig.
+ckpt_dir/ckpt_every).
+
+The contract (the tentpole's acceptance criterion): a run that
+checkpoints, dies, and resumes from the checkpoint reproduces the
+UNINTERRUPTED run's parameters and accounted epsilon sequence exactly —
+bit-for-bit — on every engine, for stateful server optimizers, under
+heterogeneous cohorts, and across a privacy-budget halt (mid-budget
+resume). The jitted engines are pure functions of (flat, opt_state, key)
+plus deterministically staged data, and the accountant replays its
+recorded history, so equality is exact, not approximate.
+"""
+import numpy as np
+import pytest
+from conftest import small_trainer as _trainer
+
+from repro.checkpoint.store import latest_step
+
+ROUNDS = 6
+MID = 3
+
+
+def _quiet_train(tr, rounds, eval_every=None):
+    return tr.train(rounds=rounds, eval_every=eval_every or rounds,
+                    log=lambda *_: None)
+
+
+def _resume_case(tmp_path, engine, **overrides):
+    """Train ROUNDS with checkpoints; return (reference, resumed) trainers
+    where `resumed` restored the MID-round checkpoint and trained the
+    rest."""
+    ckpt = str(tmp_path / engine)
+    ref = _trainer(engine, rounds=ROUNDS, **overrides)
+    _quiet_train(ref, ROUNDS)
+
+    full = _trainer(engine, rounds=ROUNDS, ckpt_dir=ckpt, ckpt_every=MID,
+                    **overrides)
+    _quiet_train(full, ROUNDS)
+
+    res = _trainer(engine, rounds=ROUNDS, ckpt_dir=ckpt, ckpt_every=MID,
+                   **overrides)
+    restored = res.restore_checkpoint(step=MID)
+    assert restored == MID
+    _quiet_train(res, ROUNDS - MID)
+    return ref, full, res
+
+
+ENGINE_KW = {
+    "scan": {},
+    "perround": {},
+    "host": {},
+    "shard": {"shards": 1},
+}
+
+
+class TestResumeBitIdentity:
+    @pytest.mark.parametrize("engine", list(ENGINE_KW))
+    def test_resumed_equals_uninterrupted(self, tmp_path, engine):
+        """The acceptance contract, on all four engines: params AND the
+        accounted eps sequence of the resumed run match the uninterrupted
+        run exactly."""
+        ref, full, res = _resume_case(tmp_path, engine, **ENGINE_KW[engine])
+        for tr in (full, res):
+            np.testing.assert_array_equal(np.asarray(ref.flat),
+                                          np.asarray(tr.flat))
+            assert tr.realized_n == ref.realized_n
+            assert len(tr.accountant.history) == ROUNDS
+            for t, (x, y) in enumerate(zip(ref.accountant.history,
+                                           tr.accountant.history)):
+                np.testing.assert_array_equal(x, y, err_msg=f"round {t}")
+            assert (tr.accountant.dp_epsilon(1e-5)
+                    == ref.accountant.dp_epsilon(1e-5))
+
+    def test_resume_under_subsampling_and_dropout(self, tmp_path):
+        """Heterogeneous cohorts: the restored RNG key replays the exact
+        realized cohort sequence, so the REALIZED eps history continues
+        identically."""
+        ref, full, res = _resume_case(
+            tmp_path, "scan", subsampling="poisson", dropout=0.3
+        )
+        np.testing.assert_array_equal(np.asarray(ref.flat), np.asarray(res.flat))
+        assert res.realized_n == ref.realized_n
+        for x, y in zip(ref.accountant.history, res.accountant.history):
+            np.testing.assert_array_equal(x, y)
+
+    def test_resume_with_momentum_state(self, tmp_path):
+        """Stateful server optimizer: the optimizer state round-trips
+        through the checkpoint and the continuation stays bit-identical."""
+        ref, full, res = _resume_case(tmp_path, "scan", server_opt="momentum")
+        np.testing.assert_array_equal(np.asarray(ref.flat), np.asarray(res.flat))
+        np.testing.assert_array_equal(np.asarray(ref.opt_state["m"]),
+                                      np.asarray(res.opt_state["m"]))
+
+    def test_host_rng_state_round_trips(self, tmp_path):
+        """The host engine's numpy sampling RNG (PCG64) is part of the
+        checkpoint: a resumed host run samples the SAME remaining cohort
+        sequence (not a reseeded one)."""
+        ref, full, res = _resume_case(tmp_path, "host")
+        assert res._rng.bit_generator.state == ref._rng.bit_generator.state
+        np.testing.assert_array_equal(np.asarray(ref.flat), np.asarray(res.flat))
+
+    def test_mid_budget_resume(self, tmp_path):
+        """Budgeted run: resume from a checkpoint taken well before
+        exhaustion; the resumed run halts at the SAME round with the SAME
+        spent epsilon and parameters."""
+        ckpt = str(tmp_path / "budget")
+        kw = dict(budget_eps=20.0, budget_delta=1e-5, rounds=100)
+        ref = _trainer("scan", **kw)
+        ref.train(rounds=100, eval_every=10, log=lambda *_: None)
+        halt = ref.accountant.rounds
+        assert 0 < halt < 100
+
+        full = _trainer("scan", ckpt_dir=ckpt, ckpt_every=4, **kw)
+        full.train(rounds=100, eval_every=10, log=lambda *_: None)
+        assert full.accountant.rounds == halt
+
+        res = _trainer("scan", ckpt_dir=ckpt, ckpt_every=4, **kw)
+        restored = res.restore_checkpoint(step=4)
+        assert restored == 4
+        # the restored accountant already carries 4 rounds of spend
+        assert res.accountant.rounds == 4
+        for x, y in zip(ref.accountant.history[:4], res.accountant.history):
+            np.testing.assert_array_equal(x, y)
+        assert res.budget_spent()[1] > 0
+        res.train(rounds=96, eval_every=10, log=lambda *_: None)
+        assert res.accountant.rounds == halt
+        np.testing.assert_array_equal(np.asarray(ref.flat), np.asarray(res.flat))
+        assert res.budget_spent() == ref.budget_spent()
+
+
+class TestCheckpointMechanics:
+    def test_boundaries_land_on_ckpt_every(self, tmp_path):
+        """Blocked engines split blocks so checkpoints land exactly on
+        multiples of ckpt_every even when eval_every doesn't divide."""
+        ckpt = str(tmp_path / "cadence")
+        tr = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt, ckpt_every=2)
+        _quiet_train(tr, ROUNDS, eval_every=5)
+        steps = sorted(
+            int(p.name[5:-4]) for p in (tmp_path / "cadence").glob("*.npz")
+        )
+        assert steps == [2, 4, 6]
+        assert latest_step(ckpt) == ROUNDS
+
+    def test_explicit_save_and_latest_restore(self, tmp_path):
+        ckpt = str(tmp_path / "explicit")
+        a = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt)
+        _quiet_train(a, 4)
+        a.save_checkpoint()
+        b = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt)
+        assert b.restore_checkpoint() == 4  # latest by default
+        _quiet_train(a, 2)
+        _quiet_train(b, 2)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+
+    def test_round_numbers_continue_after_resume(self, tmp_path):
+        ckpt = str(tmp_path / "roundno")
+        a = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt, ckpt_every=MID)
+        _quiet_train(a, ROUNDS)
+        b = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt, ckpt_every=MID)
+        b.restore_checkpoint(step=MID)
+        hist = _quiet_train(b, ROUNDS - MID)
+        assert hist[-1]["round"] == ROUNDS  # absolute, not restarted at 3
+
+    def test_errors(self, tmp_path):
+        with pytest.raises(ValueError, match="ckpt_dir"):
+            _trainer("scan").save_checkpoint()
+        with pytest.raises(ValueError, match="ckpt_dir"):
+            _trainer("scan").restore_checkpoint()
+        empty = _trainer("scan", ckpt_dir=str(tmp_path / "empty"))
+        with pytest.raises(FileNotFoundError, match="no checkpoints"):
+            empty.restore_checkpoint()
+
+    def test_fingerprint_rejects_changed_mechanism_or_config(self, tmp_path):
+        """A checkpoint written by one (mechanism, trajectory-config) must
+        not restore into another: replaying its eps history under
+        different parameters would fabricate the privacy claim. Engine
+        choice is NOT fingerprinted — cross-engine resume is valid (all
+        engines realize the same trajectory)."""
+        ckpt = str(tmp_path / "fp")
+        a = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt)
+        _quiet_train(a, 2)
+        a.save_checkpoint()
+        # different mechanism params (m=8): rejected
+        wrong_mech = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt,
+                              mech_options={"m": 8})
+        with pytest.raises(ValueError, match="fingerprint"):
+            wrong_mech.restore_checkpoint()
+        # different trajectory config (lr): rejected
+        wrong_cfg = _trainer("scan", rounds=ROUNDS, ckpt_dir=ckpt, lr=0.5)
+        with pytest.raises(ValueError, match="fingerprint"):
+            wrong_cfg.restore_checkpoint()
+        # different DEVICE engine, same trajectory: fine, and bit-identical
+        cross = _trainer("perround", rounds=ROUNDS, ckpt_dir=ckpt)
+        assert cross.restore_checkpoint() == 2
+        _quiet_train(a, ROUNDS - 2)
+        _quiet_train(cross, ROUNDS - 2)
+        np.testing.assert_array_equal(np.asarray(a.flat),
+                                      np.asarray(cross.flat))
+        # the HOST engine is a different trajectory family (its fixed
+        # cohorts come from the numpy stream, not the device key stream):
+        # a device checkpoint must not restore into it
+        host = _trainer("host", rounds=ROUNDS, ckpt_dir=ckpt)
+        with pytest.raises(ValueError, match="fingerprint"):
+            host.restore_checkpoint()

@@ -1,0 +1,197 @@
+"""The round-engine registry (fed/engine.py) + the pluggable server
+optimizer at the decode-then-apply boundary (fed/rounds.py).
+
+Contract:
+  * the four built-in engines register under their documented names and
+    ``FedTrainer`` resolves engines ONLY through the registry (unknown
+    names fail with the registered list);
+  * per-engine FedConfig validation is an Engine hook: each engine
+    rejects configs it cannot run, on top of the engine-independent
+    ``validate_config`` checks;
+  * adding an engine is one registered class — a subclass registered
+    under a new name trains through the stock FedTrainer unchanged;
+  * ``server_opt="sgd"`` (default) is bit-identical to the bare
+    w - lr*g_hat step, and non-trivial optimizer state (momentum) rides
+    the scan/shard carry with the SAME cross-engine bit-for-bit parity
+    the sgd engines are held to.
+"""
+import numpy as np
+import pytest
+from conftest import SMALL_FED as SMALL
+from conftest import small_trainer as _trainer
+from conftest import tiny_mechanism
+
+from repro.fed.config import FedConfig, validate_config
+from repro.fed.engine import engine_names, get_engine, register_engine
+from repro.fed.engine import _REGISTRY as _ENGINE_REGISTRY
+from repro.fed.engines import PerRoundEngine, ScanEngine
+
+
+class TestRegistry:
+    def test_builtin_engines_registered_in_order(self):
+        assert engine_names() == ("scan", "perround", "host", "shard")
+
+    def test_round_trip(self):
+        """Name -> class -> name, and the trainer instantiates exactly the
+        registered class."""
+        for name in engine_names():
+            assert get_engine(name).name == name
+        tr = _trainer("scan")
+        assert isinstance(tr.engine, ScanEngine)
+        assert tr.engine.name == tr.cfg.engine == "scan"
+
+    def test_unknown_engine_lists_registered(self):
+        with pytest.raises(ValueError, match="unknown engine.*scan"):
+            get_engine("warp")
+        with pytest.raises(ValueError, match="unknown engine"):
+            _trainer("warp")
+
+    def test_register_rejects_non_engine(self):
+        with pytest.raises(TypeError, match="must subclass Engine"):
+            register_engine("bogus")(object)
+
+    def test_register_rejects_name_collision(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_engine("scan")(PerRoundEngine)
+        # re-registering the SAME class is an idempotent no-op
+        assert register_engine("scan")(ScanEngine) is ScanEngine
+
+    def test_new_engine_trains_through_stock_trainer(self):
+        """The extensibility proof (mirrors the qmgeo mechanism): one
+        registered subclass, zero trainer/config edits."""
+
+        @register_engine("perround2")
+        class PerRound2(PerRoundEngine):
+            pass
+
+        try:
+            a = _trainer("perround2", rounds=3)
+            b = _trainer("perround", rounds=3)
+            assert isinstance(a.engine, PerRound2)
+            a.train(rounds=3, eval_every=3, log=lambda *_: None)
+            b.train(rounds=3, eval_every=3, log=lambda *_: None)
+            # same round step, same seed: bit-identical to the original
+            np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        finally:
+            _ENGINE_REGISTRY.pop("perround2", None)
+
+
+class TestPerEngineValidation:
+    """Engine.validate + validate_config: every rejection names its knob."""
+
+    @pytest.mark.parametrize("engine", ["scan", "perround", "host"])
+    def test_stream_staging_needs_shard(self, engine):
+        with pytest.raises(ValueError, match="stream.*requires"):
+            _trainer(engine, staging="stream")
+
+    def test_validate_hook_is_engine_scoped(self):
+        cfg = FedConfig(staging="stream", **SMALL)
+        validate_config(cfg)  # engine-independent checks pass
+        with pytest.raises(ValueError, match="stream.*requires"):
+            get_engine("scan").validate(cfg, tiny_mechanism())
+        get_engine("shard").validate(cfg, tiny_mechanism())  # fine
+
+    def test_shard_rejects_indivisible_cohort(self):
+        with pytest.raises(ValueError, match="divide across"):
+            _trainer("shard", shards=4, clients_per_round=6)
+
+    def test_generic_checks_precede_engine_checks(self):
+        with pytest.raises(ValueError, match="unknown staging"):
+            _trainer("scan", staging="lazy")
+        with pytest.raises(ValueError, match="ckpt_every requires"):
+            _trainer("scan", ckpt_every=5)
+        with pytest.raises(ValueError, match="ckpt_every must be"):
+            _trainer("scan", ckpt_every=-1, ckpt_dir="/tmp/x")
+
+
+class TestServerOptimizer:
+    """FedConfig.server_opt: the decode-then-apply boundary is pluggable
+    and engine-parity holds for stateful optimizers too (the state rides
+    the scan/shard carry)."""
+
+    def test_unknown_server_opt_rejected(self):
+        with pytest.raises(ValueError, match="unknown optimizer"):
+            _trainer("scan", server_opt="lion")
+
+    def test_default_is_sgd_with_empty_state(self):
+        tr = _trainer("scan")
+        assert tr.server_opt.name == "sgd"
+        assert tr.opt_state == ()
+
+    def test_scan_matches_perround_bit_for_bit_momentum(self):
+        a = _trainer("scan", server_opt="momentum")
+        b = _trainer("perround", server_opt="momentum")
+        a.train(rounds=5, eval_every=5, log=lambda *_: None)
+        b.train(rounds=5, eval_every=5, log=lambda *_: None)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        for la, lb in zip(jax_leaves(a.opt_state), jax_leaves(b.opt_state)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_scan_matches_perround_adam_to_tolerance(self):
+        """adam's bias correction (b**t pow) is a transcendental whose CPU
+        instruction selection differs between the standalone and scanned
+        compilations by ~1 ULP — the optimization_barrier pins round
+        boundaries, not within-round libm choices. Linear optimizers
+        (sgd/momentum) stay bit-exact; adam agrees to float tolerance."""
+        a = _trainer("scan", server_opt="adam")
+        b = _trainer("perround", server_opt="adam")
+        a.train(rounds=5, eval_every=5, log=lambda *_: None)
+        b.train(rounds=5, eval_every=5, log=lambda *_: None)
+        np.testing.assert_allclose(np.asarray(a.flat), np.asarray(b.flat),
+                                   atol=1e-5)
+
+    def test_shard_matches_scan_with_momentum(self):
+        a = _trainer("scan", server_opt="momentum")
+        b = _trainer("shard", shards=1, server_opt="momentum")
+        a.train(rounds=4, eval_every=4, log=lambda *_: None)
+        b.train(rounds=4, eval_every=4, log=lambda *_: None)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        np.testing.assert_array_equal(
+            np.asarray(a.opt_state["m"]), np.asarray(b.opt_state["m"])
+        )
+
+    def test_host_matches_scan_within_tolerance(self):
+        """The host engine applies the same optimizer eagerly. Compared
+        under dropout (a hetero mode) because only there does the host
+        replay the device key stream — fixed cohorts use the legacy numpy
+        sampling stream and realize different cohorts by design."""
+        a = _trainer("scan", server_opt="momentum", dropout=0.4)
+        h = _trainer("host", server_opt="momentum", dropout=0.4)
+        a.train(rounds=4, eval_every=4, log=lambda *_: None)
+        h.train(rounds=4, eval_every=4, log=lambda *_: None)
+        np.testing.assert_allclose(np.asarray(a.flat), np.asarray(h.flat),
+                                   atol=1e-5)
+
+    def test_momentum_actually_differs_from_sgd(self):
+        a = _trainer("scan", server_opt="sgd")
+        b = _trainer("scan", server_opt="momentum")
+        a.train(rounds=5, eval_every=5, log=lambda *_: None)
+        b.train(rounds=5, eval_every=5, log=lambda *_: None)
+        assert not np.array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        assert np.any(np.asarray(b.opt_state["m"]) != 0)
+
+    def test_server_opt_options_forwarded(self):
+        """beta=0 momentum degenerates to plain SGD — bit-identical."""
+        a = _trainer("scan", server_opt="momentum",
+                     server_opt_options={"beta": 0.0})
+        b = _trainer("scan", server_opt="sgd")
+        a.train(rounds=3, eval_every=3, log=lambda *_: None)
+        b.train(rounds=3, eval_every=3, log=lambda *_: None)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+
+    def test_empty_round_moves_neither_params_nor_state(self):
+        """dropout can empty a round: with a stateful server optimizer the
+        optimizer state must freeze too (no phantom momentum decay)."""
+        tr = _trainer("scan", server_opt="momentum", dropout=0.999, rounds=2)
+        before = np.asarray(tr.flat).copy()
+        tr.train(rounds=2, eval_every=2, log=lambda *_: None)
+        assert tr.realized_n == [0, 0]
+        np.testing.assert_array_equal(np.asarray(tr.flat), before)
+        np.testing.assert_array_equal(np.asarray(tr.opt_state["m"]),
+                                      np.zeros_like(before))
+
+
+def jax_leaves(tree):
+    import jax
+
+    return jax.tree_util.tree_leaves(tree)

@@ -1,4 +1,4 @@
-"""The device-resident federated round engine (fed/loop.py).
+"""The device-resident federated round engine (fed/rounds.py + fed/engines.py).
 
 Correctness contract:
   * scan engine == perround engine BIT-FOR-BIT after K rounds at a fixed
@@ -77,18 +77,6 @@ class TestEngineAccounting:
         np.testing.assert_allclose(
             tr.accountant.rdp_epsilon(8.0), 3 * per_round, rtol=1e-12
         )
-
-    def test_attach_params_is_deprecated_noop(self):
-        """v1 shim: warns, changes nothing (accounting already exact)."""
-        tr = _trainer("scan", rounds=2)
-        before = tr._per_round_eps.copy()
-        with pytest.warns(DeprecationWarning, match="self-accounting"):
-            tr.attach_params(RQMParams(c=0.05, delta=0.05, m=16, q=0.42))
-        np.testing.assert_array_equal(tr._per_round_eps, before)
-        # a MISMATCHED params object (the v1 footgun) is called out
-        with pytest.warns(DeprecationWarning, match="differ"):
-            tr.attach_params(RQMParams(c=0.9, delta=0.9, m=8, q=0.3))
-        np.testing.assert_array_equal(tr._per_round_eps, before)
 
     def test_scan_engine_learns(self):
         tr = _trainer("scan", rounds=10, num_clients=40, clients_per_round=8)

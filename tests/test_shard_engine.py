@@ -1,4 +1,4 @@
-"""The sharded multi-device federated round engine (fed/loop.py, ISSUE 3).
+"""The sharded multi-device federated round engine (fed/engines.py, ISSUE 3).
 
 Correctness contract:
   * engine="shard" on a 1-SHARD mesh is bit-identical to engine="scan" for
