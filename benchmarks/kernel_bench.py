@@ -68,9 +68,35 @@ def run(csv=print):
     us_vmap = _time(jax.jit(vmapped), xb)
     csv(f"rqm_batched_40x25k,{us_batch:.0f},"
         f"fused_batch_vs_vmap={us_vmap/us_batch:.2f}x")
+
+    # fused round sum — the (cohort, dim) -> (dim,) streaming reduction
+    # (kernels/fused_round_kernel.py): never materializes the encoded
+    # batch, so peak transient memory is O(tile) instead of O(cohort*dim).
+    # XLA's temp_size_in_bytes makes the memory claim measurable here.
+    rows, dim = 1024, 8192
+    xr = jax.random.uniform(
+        jax.random.key(4), (rows, dim), jnp.float32, -1, 1
+    )
+
+    def materialized(xb):
+        z = ops.rqm_batch(xb, key, PARAMS)
+        return jnp.sum(z, axis=0, dtype=jnp.int32)
+
+    mat_jit = jax.jit(materialized)
+    fus_jit = jax.jit(lambda xb: ops.rqm_round_sum(xb, key, PARAMS))
+    us_mat = _time(mat_jit, xr, reps=3)
+    us_fus = _time(fus_jit, xr, reps=3)
+    mat_tmp = mat_jit.lower(xr).compile().memory_analysis().temp_size_in_bytes
+    fus_tmp = fus_jit.lower(xr).compile().memory_analysis().temp_size_in_bytes
+    csv(f"rqm_round_sum_1024x8192,{us_fus:.0f},"
+        f"fused_vs_materialized={us_mat/us_fus:.2f}x;"
+        f"temp_mib={fus_tmp/2**20:.2f}_vs_{mat_tmp/2**20:.2f}")
     return {"rqm_fast_us": us_fast, "ref_us": us_ref, "pbm_fast_us": us_pbm,
             "interpret_us": us_interp, "batch_us": us_batch,
-            "vmap_us": us_vmap}
+            "vmap_us": us_vmap, "round_sum_us": us_fus,
+            "round_sum_materialized_us": us_mat,
+            "round_sum_temp_bytes": int(fus_tmp),
+            "round_sum_materialized_temp_bytes": int(mat_tmp)}
 
 
 def bench_json(path):
@@ -90,6 +116,13 @@ def bench_json(path):
                               "elts_per_us": N / results["pbm_fast_us"]},
             "rqm_batched_40x25k": {"us": results["batch_us"],
                                    "vmap_us": results["vmap_us"]},
+            "rqm_round_sum_1024x8192": {
+                "us": results["round_sum_us"],
+                "materialized_us": results["round_sum_materialized_us"],
+                "temp_bytes": results["round_sum_temp_bytes"],
+                "materialized_temp_bytes":
+                    results["round_sum_materialized_temp_bytes"],
+            },
         },
     }
     with open(path, "w") as f:

@@ -1,6 +1,8 @@
 """Roofline reporting: aggregates results/dryrun/*.json into the
 EXPERIMENTS.md tables (per arch x shape x mesh: three terms, dominant
-bottleneck, MODEL_FLOPS/HLO ratio, memory fit)."""
+bottleneck, MODEL_FLOPS/HLO ratio, memory fit) — plus the analytic
+fused-round traffic model (docs/kernels.md) showing why the streaming
+round sum is the memory-side win the dryrun tables can't see."""
 from __future__ import annotations
 
 import glob
@@ -8,6 +10,48 @@ import json
 import os
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LANE = 128  # TPU vreg lane width (kernels/rqm_kernel.py)
+
+# representative (cohort rows, model dim) round shapes: the paper's
+# Fig-2 cohort on the small CNN, a stream-staged shard slice, and the
+# async-engine target scale the fused path exists to unlock
+FUSED_ROUND_SHAPES = ((40, 222_030), (256, 222_030), (4096, 1_000_000))
+
+
+def fused_round_traffic(cohort: int, dim: int, block_rows: int = 8,
+                        bytes_in: int = 4) -> dict:
+    """Analytic HBM traffic + peak transient bytes for one round's
+    encode-and-sum, materialized vs fused (kernels/fused_round_kernel.py).
+
+    Materialized: read x, write the (cohort, dim) int32 encoded batch,
+    read it back for the reduce, write the (dim,) sum — the batch crosses
+    HBM twice and IS the peak transient. Fused: read x, write the sum;
+    the only transient is one (block_rows, LANE) tile's encode
+    intermediates plus the int32 accumulator, independent of cohort.
+    """
+    batch = cohort * dim * 4
+    x_bytes = cohort * dim * bytes_in
+    sum_bytes = dim * 4
+    return {
+        "materialized": {"hbm_bytes": x_bytes + 2 * batch + sum_bytes,
+                         "peak_transient_bytes": batch},
+        "fused": {"hbm_bytes": x_bytes + sum_bytes,
+                  "peak_transient_bytes": block_rows * LANE * 4 + sum_bytes},
+    }
+
+
+def fused_round_table(csv=print):
+    csv("fused_round,cohort,dim,hbm_ratio,materialized_peak_mib,fused_peak_mib")
+    rows = []
+    for cohort, dim in FUSED_ROUND_SHAPES:
+        t = fused_round_traffic(cohort, dim)
+        ratio = t["materialized"]["hbm_bytes"] / t["fused"]["hbm_bytes"]
+        csv(f"fused_round,{cohort},{dim},{ratio:.2f}x,"
+            f"{t['materialized']['peak_transient_bytes']/2**20:.1f},"
+            f"{t['fused']['peak_transient_bytes']/2**20:.3f}")
+        rows.append({"cohort": cohort, "dim": dim, **t})
+    return rows
 
 
 def load(out_dir="results/dryrun", tag=None):
@@ -72,6 +116,7 @@ def markdown(recs):
 
 
 def run(csv=print):
+    fused_round_table(csv=csv)
     recs = load()
     if not recs:
         csv("roofline,0,no dryrun artifacts yet (run scripts/run_dryrun_sweep.py)")

@@ -170,6 +170,11 @@ def main():
                     help="engine=shard: 'stream' stages only each block's "
                          "active cohort (bounded memory for huge "
                          "populations)")
+    ap.add_argument("--fused-rounds", action="store_true",
+                    help="stream the round's clip->encode->sum through the "
+                         "fused kernel (docs/kernels.md): never materializes "
+                         "the (cohort, dim) encoded batch, bit-identical "
+                         "results (scan/perround/shard engines)")
     ap.add_argument("--subsampling", default="fixed",
                     choices=["fixed", "poisson"],
                     help="cohort realization: 'poisson' includes each "
@@ -196,6 +201,7 @@ def main():
         rounds=args.rounds, lr=args.lr, eval_size=1000,
         data_noise=1.5, data_deform=1.2,  # see benchmarks/fig3_fl_emnist.py
         engine=args.engine, shards=args.shards, staging=args.staging,
+        fused_rounds=args.fused_rounds,
         server_opt=args.server_opt,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         subsampling=args.subsampling, dropout=args.dropout,

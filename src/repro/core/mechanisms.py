@@ -138,6 +138,30 @@ class Mechanism:
             keys = jax.random.wrap_key_data(kd)
         return jax.vmap(self.encode)(x, keys)
 
+    def encode_sum_batch(self, x: jnp.ndarray, key: jax.Array, *,
+                         weights=None, row_offset=None,
+                         total_rows: int = None) -> jnp.ndarray:
+        """Fused encode + weighted sum over the client axis: the SecAgg
+        input ``sum_i weights[i] * encode(x[i])`` as ONE (dim,) reduction.
+
+        The default falls back to the materialized
+        ``encode_batch(...)`` followed by the mask-and-sum the round
+        engines previously inlined — bit-identical by construction, so
+        every registered mechanism supports the fused-rounds hot path
+        even before it ships a streaming kernel. Kernel-backed grid
+        mechanisms override with ``ops.<name>_round_sum``
+        (kernels/fused_round_kernel.py), which never materializes the
+        (clients, dim) encoded batch.
+
+        ``weights``: optional (clients,) int participation mask (0 rows
+        contribute nothing); ``row_offset``/``total_rows``: shard-local
+        slice position, exactly as in ``encode_batch``."""
+        z = self.encode_batch(x, key, row_offset=row_offset,
+                              total_rows=total_rows)
+        if weights is not None:
+            z = z * weights.astype(z.dtype)[:, None]
+        return jnp.sum(z, axis=0, dtype=z.dtype)
+
     def decode_sum(self, z_sum: jnp.ndarray, n: int) -> jnp.ndarray:
         raise NotImplementedError
 
@@ -180,6 +204,17 @@ class Mechanism:
         g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
         return self.encode_batch(g, key, row_offset=row_offset,
                                  total_rows=total_rows)
+
+    def quantize_sum_batch(self, g: jnp.ndarray, key: jax.Array, *,
+                           weights=None, row_offset=None,
+                           total_rows: int = None) -> jnp.ndarray:
+        """clip + fused encode-and-sum — the FedConfig.fused_rounds hot
+        path: the round engines hand over the whole (clients, dim) stack
+        and get back only the dim-length aggregate that crosses SecAgg."""
+        g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
+        return self.encode_sum_batch(g, key, weights=weights,
+                                     row_offset=row_offset,
+                                     total_rows=total_rows)
 
     # -- introspection -------------------------------------------------------
     def spec(self) -> dict:
@@ -232,6 +267,17 @@ class RQMMechanism(Mechanism):
         return super().encode_batch(x, key, row_offset=row_offset,
                                     total_rows=total_rows)
 
+    def encode_sum_batch(self, x, key, *, weights=None, row_offset=None,
+                         total_rows=None):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.rqm_round_sum(x, key, self.params, weights=weights,
+                                      row_offset=row_offset)
+        return super().encode_sum_batch(x, key, weights=weights,
+                                        row_offset=row_offset,
+                                        total_rows=total_rows)
+
     def decode_sum(self, z_sum, n):
         return rqm_lib.decode_sum(z_sum, n, self.params)
 
@@ -279,6 +325,17 @@ class PBMMechanism(Mechanism):
             return kops.pbm_batch(x, key, self.params, row_offset=row_offset)
         return super().encode_batch(x, key, row_offset=row_offset,
                                     total_rows=total_rows)
+
+    def encode_sum_batch(self, x, key, *, weights=None, row_offset=None,
+                         total_rows=None):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.pbm_round_sum(x, key, self.params, weights=weights,
+                                      row_offset=row_offset)
+        return super().encode_sum_batch(x, key, weights=weights,
+                                        row_offset=row_offset,
+                                        total_rows=total_rows)
 
     def decode_sum(self, z_sum, n):
         return pbm_lib.decode_sum(z_sum, n, self.params)
@@ -333,6 +390,17 @@ class QMGeoMechanism(Mechanism):
             return kops.qmgeo_batch(x, key, self.params, row_offset=row_offset)
         return super().encode_batch(x, key, row_offset=row_offset,
                                     total_rows=total_rows)
+
+    def encode_sum_batch(self, x, key, *, weights=None, row_offset=None,
+                         total_rows=None):
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.qmgeo_round_sum(x, key, self.params, weights=weights,
+                                        row_offset=row_offset)
+        return super().encode_sum_batch(x, key, weights=weights,
+                                        row_offset=row_offset,
+                                        total_rows=total_rows)
 
     def decode_sum(self, z_sum, n):
         return qmgeo_lib.decode_sum(z_sum, n, self.params)

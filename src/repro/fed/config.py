@@ -102,6 +102,16 @@ class FedConfig:
     # subsampling/dropout.
     budget_eps: Optional[float] = None
     budget_delta: float = 1e-5
+    # Fused round hot path (scan/perround/shard; docs/kernels.md). When
+    # True, the round step routes clip->encode->cohort-sum through the
+    # mechanism's fused encode_sum_batch (kernels/fused_round_kernel.py:
+    # the encoded (cohort, dim) batch is never materialized — peak memory
+    # drops from O(cohort*dim) to O(tile) + O(dim)), and plain-SGD grid
+    # mechanisms take the fused decode->apply on the server side.
+    # Bit-identical to False on every supported engine (the parity suite
+    # in tests/test_fused_round_kernel.py); the legacy "host" engine
+    # rejects it.
+    fused_rounds: bool = False
     # Debug/test instrumentation (all engines): record each round's
     # aggregated encoded SecAgg sum on the host (trainer.round_sums)
     # — the observable the cross-engine "exact encoded-sum equality" tests

@@ -102,6 +102,17 @@ class HostEngine(Engine):
 
     stages_population = False
 
+    @classmethod
+    def validate(cls, cfg, mech):
+        super().validate(cfg, mech)
+        if cfg.fused_rounds:
+            raise ValueError(
+                "engine 'host' does not support fused_rounds=True: the "
+                "legacy loop is the materialized-encode benchmark "
+                "baseline; use the scan/perround/shard engines for the "
+                "fused hot path"
+            )
+
     def advance(self, n_rounds: int):
         for _ in range(n_rounds):
             if self.tr._hetero:

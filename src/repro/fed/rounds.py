@@ -9,6 +9,13 @@ decode-then-apply boundary (``repro.optim.Optimizer`` — plain SGD is the
 paper's w - lr*g_hat, bit-identical by construction; momentum/adam carry
 their state through the scan/shard carry, donated with the parameters).
 
+``FedConfig.fused_rounds`` collapses the encode / mask / sum triple into
+the mechanism's ``quantize_sum_batch`` (one streamed reduction, no
+materialized encoded batch — kernels/fused_round_kernel.py) and, for
+plain-SGD grid mechanisms, the decode / apply pair into
+``decode_apply_sum`` — both bit-identical to the unfused sequence (see
+``use_fused_apply`` and docs/kernels.md).
+
 The trailing optimization_barrier pins the round boundary: XLA cannot
 fuse one round's float math into the next, so the body compiles to the
 same numerics whether it stands alone (perround) or is repeated inside an
@@ -27,8 +34,22 @@ import jax.flatten_util
 import jax.numpy as jnp
 
 from repro.core import secagg
+from repro.core.grid import GridGeometry
 from repro.fed import cohort
 from repro.fed.cnn import cnn_loss
+from repro.kernels.decode_apply_kernel import decode_apply_sum
+
+
+def use_fused_apply(mech, cfg) -> bool:
+    """True when the fused decode->optimizer-apply kernel may replace the
+    decode_sum -> server-optimizer sequence bit-identically: fused rounds
+    on, plain SGD (weight_decay would add a term the fused kernel does not
+    carry), and a shared-affine-grid mechanism (GridGeometry params —
+    RQM/QMGeo; PBM's decode is binomial-centered, 'none' decodes floats).
+    Everything else falls back to the mechanism decode + optimizer step."""
+    wd = (cfg.server_opt_options or {}).get("weight_decay", 0.0)
+    return (cfg.fused_rounds and cfg.server_opt == "sgd" and not wd
+            and isinstance(getattr(mech, "params", None), GridGeometry))
 
 
 def make_client_grad(mech, unravel, cfg):
@@ -86,6 +107,8 @@ def make_round_step(mech, cfg, opt, slate, client_grad):
     SecAgg sum and realized participant count for host-side accounting."""
     hetero = cohort.is_hetero(cfg)
     apply = make_server_apply(opt, cfg, hetero)
+    fused = cfg.fused_rounds
+    fused_apply = use_fused_apply(mech, cfg)
 
     def round_step(flat, opt_state, key, images, labels):
         key, k_sample, k_enc, k_drop = cohort.split_round_keys(cfg, key)
@@ -95,20 +118,32 @@ def make_round_step(mech, cfg, opt, slate, client_grad):
         )
         # Shared clip->encode dispatch (clip is idempotent on the
         # already-clipped grads): one fused kernel call over the whole
-        # (clients, dim) stack when the mechanism is kernel-backed.
-        z = mech.quantize_batch(grads, k_enc)
-        if not hetero:
-            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum
-            g_hat = mech.decode_sum(z_sum, cfg.clients_per_round)
-            n_real = jnp.int32(cfg.clients_per_round)
+        # (clients, dim) stack when the mechanism is kernel-backed. With
+        # fused_rounds the encode and the SecAgg sum are ONE streamed
+        # reduction — the (clients, dim) encoded batch never exists.
+        part = cohort.participation(cfg, valid, k_drop) if hetero else None
+        if fused:
+            z_sum = mech.quantize_sum_batch(grads, k_enc, weights=part)
         else:
-            part = cohort.participation(cfg, valid, k_drop)
-            z = z * part.astype(z.dtype)[:, None]  # non-participants: 0
-            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg emulation
+            z = mech.quantize_batch(grads, k_enc)
+            if hetero:
+                z = z * part.astype(z.dtype)[:, None]  # non-participants: 0
+            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum
+        if not hetero:
+            n_real = jnp.int32(cfg.clients_per_round)
+            n_dec = cfg.clients_per_round
+        else:
             n_real = jnp.sum(part, dtype=jnp.int32)
             # an empty round releases nothing and moves nothing
-            g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
-        new, new_state = apply(flat, opt_state, g_hat, n_real)
+            n_dec = jnp.maximum(n_real, 1)
+        if fused_apply:
+            new = decode_apply_sum(flat, z_sum, mech.params, n_dec, cfg.lr)
+            new_state = opt_state
+            if hetero:
+                new = jnp.where(n_real > 0, new, flat)
+        else:
+            g_hat = mech.decode_sum(z_sum, n_dec)
+            new, new_state = apply(flat, opt_state, g_hat, n_real)
         new, new_state = jax.lax.optimization_barrier((new, new_state))
         return new, new_state, key, z_sum, n_real
 
@@ -172,6 +207,8 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
     """
     hetero = cohort.is_hetero(cfg)
     apply = make_server_apply(opt, cfg, hetero)
+    fused = cfg.fused_rounds
+    fused_apply = use_fused_apply(mech, cfg)
     n = cfg.clients_per_round
     n_per = slate // shards
     bound = mech.sum_bound(slate)  # forced-packing safety checked at init
@@ -199,22 +236,34 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
         grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
             flat, local_im, local_lb
         )
-        z = mech.quantize_batch(
-            grads, k_enc,
-            row_offset=j * n_per if multi else None,
-            total_rows=slate if multi else None,
-        )
+        local = None
         if hetero:
             # replicated full-slate participation; each shard masks its
             # own row slice out of the partial sum
             part = cohort.participation(cfg, valid, k_drop)
             local = (jax.lax.dynamic_slice_in_dim(part, j * n_per, n_per)
                      if multi else part)
-            z = z * local.astype(z.dtype)[:, None]
             n_real = jnp.sum(part, dtype=jnp.int32)
         else:
             n_real = jnp.int32(n)
-        z_part = jnp.sum(z, axis=0, dtype=z.dtype)  # shard-local partial
+        if fused:
+            # one streamed clip->encode->shard-local-sum: the per-shard
+            # (n_per, dim) encoded slice is never materialized, and the
+            # reduction the SecAgg boundary receives is already done.
+            z_part = mech.quantize_sum_batch(
+                grads, k_enc, weights=local,
+                row_offset=j * n_per if multi else None,
+                total_rows=slate if multi else None,
+            )
+        else:
+            z = mech.quantize_batch(
+                grads, k_enc,
+                row_offset=j * n_per if multi else None,
+                total_rows=slate if multi else None,
+            )
+            if hetero:
+                z = z * local.astype(z.dtype)[:, None]
+            z_part = jnp.sum(z, axis=0, dtype=z.dtype)  # shard-local partial
         # The SecAgg boundary: integer level indices cross shards,
         # lane-packed two-per-int32 word when the full-cohort sum bound
         # allows (exact either way). The float 'none' baseline has
@@ -222,11 +271,15 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
         z_sum = secagg.secure_sum_bounded(
             z_part, ("shard",), bound, packed=prefer_packed
         )
-        if hetero:
-            g_hat = mech.decode_sum(z_sum, jnp.maximum(n_real, 1))
+        n_dec = jnp.maximum(n_real, 1) if hetero else n
+        if fused_apply:
+            new = decode_apply_sum(flat, z_sum, mech.params, n_dec, cfg.lr)
+            new_state = opt_state
+            if hetero:
+                new = jnp.where(n_real > 0, new, flat)
         else:
-            g_hat = mech.decode_sum(z_sum, n)
-        new, new_state = apply(flat, opt_state, g_hat, n_real)
+            g_hat = mech.decode_sum(z_sum, n_dec)
+            new, new_state = apply(flat, opt_state, g_hat, n_real)
         new, new_state = jax.lax.optimization_barrier((new, new_state))
         return new, new_state, key, z_sum, n_real
 

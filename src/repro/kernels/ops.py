@@ -22,6 +22,11 @@ Every mechanism kernel gets the same three entry points, built once by
     batch, so every client row draws independent randomness from one
     per-round seed and the output inherits the kernel<->mechanism parity
     contract on the flattened input (see kernels/ref.py).
+  * ``<name>_round_sum(x, key, params, weights=..., row_offset=...)`` —
+    the fused ROUND: clip -> encode -> weighted column sum streamed
+    through VMEM-sized tiles (kernels/fused_round_kernel.py), bit-identical
+    to ``<name>_batch(...).sum(0)`` but O(tile) instead of O(clients*dim)
+    peak memory. What ``FedConfig.fused_rounds`` routes the engines over.
 
 Shard-local batches (the "shard" round engine): when a cohort of n clients
 is split across a device mesh, each shard encodes only its (n/S, dim) slice
@@ -36,12 +41,13 @@ container that is the production path anyway.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.grid import RQMParams
-from repro.kernels import pbm_kernel, qmgeo_kernel, rqm_kernel
+from repro.kernels import fused_round_kernel, pbm_kernel, qmgeo_kernel, rqm_kernel
 from repro.kernels.rqm_kernel import LANE, pick_block_rows
 
 
@@ -49,18 +55,35 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _force_interpret() -> bool:
+    """CI hook: REPRO_PALLAS_INTERPRET=1 routes the fused round-sum path
+    through the Pallas kernel in interpret mode, so the kernel BODY (not
+    just the fused-jnp twin) is exercised on CPU-only runners."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0")
+
+
 def key_to_seed(key: jax.Array) -> jnp.ndarray:
     """Derive the kernel's uint32 scalar seed from a jax PRNG key."""
     return jax.random.bits(key, (), jnp.uint32)
 
 
-def _tile(x_flat: jnp.ndarray, block_rows: int):
-    """Pad a flat vector and reshape to (rows, 128) with rows % block_rows == 0."""
+def tile_flat(x_flat: jnp.ndarray, block_rows: int | None = None):
+    """Pad a flat vector and reshape to (rows, 128) tiles.
+
+    THE single place that derives both the (clamped) block height and the
+    padding from it: ``block_rows=None`` clamps via ``pick_block_rows``,
+    so every wrapper — single-leaf, batched, decode-apply — takes the same
+    documented <1-sublane padding path for tiny leaves instead of
+    re-deriving padding against the unclamped default. Returns
+    ``(x2, n_elements, block_rows)`` with ``x2.shape[0] % block_rows == 0``.
+    """
     n = x_flat.shape[0]
+    if block_rows is None:
+        block_rows = pick_block_rows(n)
     tile = block_rows * LANE
     padded = ((n + tile - 1) // tile) * tile
     x2 = jnp.pad(x_flat, (0, padded - n)).reshape(-1, LANE)
-    return x2, n
+    return x2, n, block_rows
 
 
 def _make_fast_ops(quantize_2d, block_fn, name: str):
@@ -71,8 +94,8 @@ def _make_fast_ops(quantize_2d, block_fn, name: str):
     """
 
     @functools.partial(jax.jit, static_argnames=("params", "block_rows", "interpret"))
-    def _flat(x_flat, seed, params, block_rows: int, interpret: bool):
-        x2, n = _tile(x_flat, block_rows)
+    def _flat(x_flat, seed, params, block_rows: int | None, interpret: bool):
+        x2, n, block_rows = tile_flat(x_flat, block_rows)
         z2 = quantize_2d(x2, seed, params, block_rows=block_rows,
                          interpret=interpret)
         return z2.reshape(-1)[:n]
@@ -80,13 +103,11 @@ def _make_fast_ops(quantize_2d, block_fn, name: str):
     def pallas(x, key, params, *, block_rows=None, interpret=None):
         """Quantize an arbitrary-shape array via the Pallas kernel.
 
-        block_rows=None auto-sizes the block to the input (pick_block_rows);
-        an explicit value is honored as given."""
+        block_rows=None auto-sizes the block to the input (tile_flat's
+        pick_block_rows clamp); an explicit value is honored as given."""
         if interpret is None:
             interpret = _interpret_default()
         seed = key_to_seed(key)
-        if block_rows is None:
-            block_rows = pick_block_rows(x.size)
         z = _flat(x.reshape(-1), seed, params, block_rows, interpret)
         return z.reshape(x.shape)
 
@@ -129,12 +150,44 @@ def _make_fast_ops(quantize_2d, block_fn, name: str):
     return pallas, fast, batch
 
 
+def _make_round_sum(encode_name: str):
+    """Build ``<name>_round_sum`` — the fused clip->encode->sum entry for a
+    stacked ``(clients, dim)`` cohort batch (kernels/fused_round_kernel.py):
+    bit-identical to ``<name>_batch(...).sum(axis=0)`` with the optional
+    participation ``weights`` applied, but never materializing the
+    (clients, dim) encoded batch. Routing mirrors ``fast``: Pallas on TPU,
+    the serial-scan jnp twin elsewhere; REPRO_PALLAS_INTERPRET=1 forces
+    the Pallas body in interpret mode (CI's CPU kernel lane)."""
+
+    def round_sum(x, key, params, *, weights=None, row_offset=None,
+                  block_rows=None, interpret=None,
+                  compute_dtype=jnp.float32):
+        if x.ndim != 2:
+            raise ValueError(
+                f"{encode_name}_round_sum expects (clients, dim), got {x.shape}"
+            )
+        if interpret is None and _force_interpret():
+            interpret = True
+        return fused_round_kernel.round_sum(
+            x, key_to_seed(key), params, encode_name, weights=weights,
+            row_offset=row_offset, block_rows=block_rows,
+            interpret=interpret, compute_dtype=compute_dtype,
+        )
+
+    round_sum.__name__ = f"{encode_name}_round_sum"
+    return round_sum
+
+
 rqm, rqm_fast, rqm_batch = _make_fast_ops(
     rqm_kernel.rqm_quantize_2d, rqm_kernel._rqm_block, "rqm")
 pbm, pbm_fast, pbm_batch = _make_fast_ops(
     pbm_kernel.pbm_quantize_2d, pbm_kernel._pbm_block, "pbm")
 qmgeo, qmgeo_fast, qmgeo_batch = _make_fast_ops(
     qmgeo_kernel.qmgeo_quantize_2d, qmgeo_kernel._qmgeo_block, "qmgeo")
+
+rqm_round_sum = _make_round_sum("rqm")
+pbm_round_sum = _make_round_sum("pbm")
+qmgeo_round_sum = _make_round_sum("qmgeo")
 
 
 def rqm_tree(tree, key: jax.Array, params: RQMParams, **kw):

@@ -18,18 +18,29 @@ LANE = 128
 DEFAULT_BLOCK_ROWS = 256
 
 
-def _pbm_block(x, seed, base_offset, params: PBMParams):
-    x = jnp.clip(x.astype(jnp.float32), -params.c, params.c)
+def pbm_encode_counters(x, seed, counter, params: PBMParams,
+                        compute_dtype=jnp.float32):
+    """Element-wise PBM encode given explicit RNG counters (see
+    rqm_kernel.rqm_encode_counters for the counter/compute_dtype
+    contract — the clip/scale stage runs in ``compute_dtype``, the m
+    Bernoulli trials and the emitted counts stay integer-exact)."""
+    x = jnp.clip(x.astype(compute_dtype),
+                 -jnp.asarray(params.c, compute_dtype),
+                 jnp.asarray(params.c, compute_dtype)).astype(jnp.float32)
     p = 0.5 + jnp.float32(params.theta) * x / jnp.float32(params.c)
-    rows, cols = x.shape
-    row_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
-    col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
-    counter = base_offset.astype(jnp.uint32) + row_ids * jnp.uint32(cols) + col_ids
     z = jnp.zeros(x.shape, jnp.int32)
     for trial in range(params.m):  # static unroll, m Bernoulli(p) draws
         u = random_uniform(seed, counter, stream=trial)
         z = z + (u < p).astype(jnp.int32)
     return z
+
+
+def _pbm_block(x, seed, base_offset, params: PBMParams):
+    rows, cols = x.shape
+    row_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    counter = base_offset.astype(jnp.uint32) + row_ids * jnp.uint32(cols) + col_ids
+    return pbm_encode_counters(x, seed, counter, params)
 
 
 def _kernel(seed_ref, x_ref, z_ref, *, params: PBMParams, block_rows: int):

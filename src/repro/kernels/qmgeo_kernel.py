@@ -26,15 +26,27 @@ LANE = 128
 DEFAULT_BLOCK_ROWS = 256
 
 
+def qmgeo_encode_counters(x, seed, counter, params: QMGeoParams,
+                          compute_dtype=jnp.float32):
+    """Element-wise QMGeo encode given explicit RNG counters (see
+    rqm_kernel.rqm_encode_counters for the counter/compute_dtype
+    contract). Stream 0 drives the stochastic rounding, stream 1 the
+    truncated-geometric noise; the clip happens inside
+    ``quantize_with_uniforms``, so the compute_dtype round-trip here only
+    narrows the raw input's mantissa before that clip."""
+    x = x.astype(compute_dtype).astype(jnp.float32)
+    u_round = random_uniform(seed, counter, stream=0)
+    u_noise = random_uniform(seed, counter, stream=1)
+    return quantize_with_uniforms(x, u_round, u_noise, params)
+
+
 def _qmgeo_block(x, seed, base_offset, params: QMGeoParams):
     """Shared element-wise body (kernel, fused-jnp CPU path, and ref.py)."""
     rows, cols = x.shape
     row_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
     col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
     counter = base_offset.astype(jnp.uint32) + row_ids * jnp.uint32(cols) + col_ids
-    u_round = random_uniform(seed, counter, stream=0)
-    u_noise = random_uniform(seed, counter, stream=1)
-    return quantize_with_uniforms(x, u_round, u_noise, params)
+    return qmgeo_encode_counters(x, seed, counter, params)
 
 
 def _kernel(seed_ref, x_ref, z_ref, *, params: QMGeoParams, block_rows: int):

@@ -53,21 +53,30 @@ def pick_block_rows(n_elements: int, requested: int = DEFAULT_BLOCK_ROWS) -> int
     return max(SUBLANE, min(requested, rows_needed))
 
 
-def _rqm_block(x, seed, base_offset, params: RQMParams):
-    """Shared element-wise body (used by the kernel and, unchanged, by the
-    oracle in ref.py — the tiling is the only difference between them)."""
+def rqm_encode_counters(x, seed, counter, params: RQMParams,
+                        compute_dtype=jnp.float32):
+    """The element-wise RQM encode given EXPLICIT per-element RNG counters.
+
+    This is the single source of the mechanism's per-element math: the
+    contiguous-block body below, the oracle in ref.py, and the fused
+    round-sum kernel (kernels/fused_round_kernel.py — whose (block_rows,
+    128) column tiles are NOT contiguous in the conceptual flat input, so
+    they must supply their own counters) all delegate here. RNG draws
+    depend only on (seed, counter), never on tiling.
+
+    ``compute_dtype`` is the clip/scale-stage precision: float32 (default,
+    bit-exact contract) or bfloat16 (halves the VPU input width on TPU;
+    the level search and the emitted levels stay integer-exact either
+    way — only the clipped input loses mantissa bits).
+    """
     m = params.m
     q = jnp.float32(params.q)
     x_max = jnp.float32(params.x_max)
     step = jnp.float32(params.step)
 
-    x = jnp.clip(x.astype(jnp.float32), -jnp.float32(params.c), jnp.float32(params.c))
-
-    # Global element counter: RNG draws depend only on (seed, counter).
-    rows, cols = x.shape
-    row_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
-    col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
-    counter = base_offset.astype(jnp.uint32) + row_ids * jnp.uint32(cols) + col_ids
+    x = jnp.clip(x.astype(compute_dtype),
+                 -jnp.asarray(params.c, compute_dtype),
+                 jnp.asarray(params.c, compute_dtype)).astype(jnp.float32)
 
     # Bin index j: x in [B(j), B(j+1)), clipped for boundary round-off.
     j = jnp.clip(jnp.floor((x + x_max) / step), 0, m - 2).astype(jnp.int32)
@@ -87,6 +96,18 @@ def _rqm_block(x, seed, base_offset, params: RQMParams):
     p_up = (x - b_lo) / (b_hi - b_lo)
     u_round = random_uniform(seed, counter, stream=m)
     return jnp.where(u_round < p_up, i_hi, i_lo).astype(jnp.int32)
+
+
+def _rqm_block(x, seed, base_offset, params: RQMParams):
+    """Shared element-wise body on a CONTIGUOUS block (used by the kernel
+    and, unchanged, by the oracle in ref.py — the tiling is the only
+    difference between them): element (r, c) of the block is element
+    ``base_offset + r*cols + c`` of the conceptual flat input."""
+    rows, cols = x.shape
+    row_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    counter = base_offset.astype(jnp.uint32) + row_ids * jnp.uint32(cols) + col_ids
+    return rqm_encode_counters(x, seed, counter, params)
 
 
 def _kernel(seed_ref, x_ref, z_ref, *, params: RQMParams, block_rows: int):

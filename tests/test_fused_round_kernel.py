@@ -1,0 +1,292 @@
+"""Bit-exactness battery for the fused round kernel (clip -> encode ->
+shard-local sum, kernels/fused_round_kernel.py).
+
+Three layers of guarantees, all asserted with int32 EQUALITY (never
+allclose) on the integer paths:
+
+  1. Kernel parity: for every mechanism x tiling x row offset, the fused
+     level sum equals ``encode_batch(...).sum(0)`` on the materialized
+     batch — on the fused-jnp path AND the Pallas kernel body (interpret
+     mode; the CI lane REPRO_PALLAS_INTERPRET=1 additionally forces the
+     kernel body through the default dispatch).
+  2. Server boundary: ``decode_apply_sum`` is bit-identical to
+     decode_sum -> sgd jit-to-jit (the engines' context); the Pallas tile
+     variant agrees to 1 ULP across compilation modes (documented — FMA
+     contraction; the integer sum above is what must be exact).
+  3. Engine contract: ``FedConfig.fused_rounds=True`` trains BIT-
+     identically to ``False`` on the scan, perround, and 1-shard shard
+     engines — same per-round encoded SecAgg sums (``collect_sums``) and
+     same final parameters — plus the O(tile) peak-memory claim measured
+     from XLA's own memory analysis.
+
+Engine-scale cases skip under REPRO_PALLAS_INTERPRET=1: interpret mode
+unrolls the (dim/128 x rows/block) grid into a Python loop, which at CNN
+width (1735 column blocks) is minutes per round; the kernel-level battery
+above covers the kernel body in that lane.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import HETERO_MODES, small_trainer
+from repro.core.grid import RQMParams, decode_sum
+from repro.core.mechanisms import make_mechanism
+from repro.core.pbm import PBMParams
+from repro.core.qmgeo import QMGeoParams
+from repro.kernels import ops
+from repro.kernels.decode_apply_kernel import decode_apply_sum
+from repro.kernels.fused_round_kernel import pick_round_block_rows, round_sum
+
+INTERPRET_LANE = os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0")
+
+PARAMS = {
+    "rqm": RQMParams(c=1.0, delta=1.0, m=16, q=0.42),
+    "pbm": PBMParams(c=1.0, m=16, theta=0.25),
+    "qmgeo": QMGeoParams(c=1.0, delta=1.0, m=16, r=0.6),
+}
+BATCH_OPS = {"rqm": ops.rqm_batch, "pbm": ops.pbm_batch, "qmgeo": ops.qmgeo_batch}
+SUM_OPS = {"rqm": ops.rqm_round_sum, "pbm": ops.pbm_round_sum,
+           "qmgeo": ops.qmgeo_round_sum}
+
+# tilings the ISSUE battery names: a single row, a sublane-unaligned row
+# count, and a multi-tile cohort (rows > block_rows AND dim > one lane)
+TILINGS = {"one-row": (1, 257), "unaligned": (13, 200), "multi-tile": (40, 300)}
+
+
+def _batch(rows, dim, seed=0, c=1.0):
+    # span beyond [-c, c] so the in-kernel clip stage is exercised
+    return jax.random.uniform(
+        jax.random.key(seed), (rows, dim), jnp.float32, -1.5 * c, 1.5 * c
+    )
+
+
+class TestFusedSumParity:
+    @pytest.mark.parametrize("tiling", list(TILINGS))
+    @pytest.mark.parametrize("offset", [0, 17], ids=["off0", "offmid"])
+    @pytest.mark.parametrize("name", list(PARAMS))
+    def test_matches_materialized(self, name, tiling, offset):
+        """Fused sum == encode_batch(...).sum(0), int32-exact, on the
+        default dispatch AND the Pallas kernel body."""
+        rows, dim = TILINGS[tiling]
+        params = PARAMS[name]
+        x = _batch(rows, dim, seed=rows + offset)
+        key = jax.random.key(3)
+        ref = np.asarray(
+            BATCH_OPS[name](x, key, params, row_offset=offset or None)
+        ).sum(axis=0, dtype=np.int32)
+        got = SUM_OPS[name](x, key, params, row_offset=offset or None)
+        np.testing.assert_array_equal(ref, np.asarray(got))
+        got_pallas = SUM_OPS[name](x, key, params,
+                                   row_offset=offset or None, interpret=True)
+        np.testing.assert_array_equal(ref, np.asarray(got_pallas))
+
+    @pytest.mark.parametrize("name", list(PARAMS))
+    def test_weighted_matches_masked_batch(self, name):
+        """Participation weights inside the kernel == masking the
+        materialized batch (the hetero-round SecAgg emulation)."""
+        rows, dim = 24, 260
+        params = PARAMS[name]
+        x = _batch(rows, dim, seed=9)
+        key = jax.random.key(5)
+        w = (jax.random.uniform(jax.random.key(8), (rows,)) > 0.4)
+        w = w.astype(jnp.int32)
+        z = np.asarray(BATCH_OPS[name](x, key, params))
+        ref = (z * np.asarray(w)[:, None]).sum(axis=0, dtype=np.int32)
+        for interpret in (None, True):
+            got = SUM_OPS[name](x, key, params, weights=w,
+                                interpret=interpret)
+            np.testing.assert_array_equal(ref, np.asarray(got))
+
+    @pytest.mark.parametrize("block_rows", [8, 16, 32])
+    def test_block_rows_invariance(self, block_rows):
+        """The tile height is a scheduling choice, never a numeric one."""
+        x = _batch(40, 300, seed=2)
+        key = jax.random.key(1)
+        base = np.asarray(ops.rqm_round_sum(x, key, PARAMS["rqm"]))
+        got = ops.rqm_round_sum(x, key, PARAMS["rqm"], block_rows=block_rows)
+        np.testing.assert_array_equal(base, np.asarray(got))
+        got_p = ops.rqm_round_sum(x, key, PARAMS["rqm"],
+                                  block_rows=block_rows, interpret=True)
+        np.testing.assert_array_equal(base, np.asarray(got_p))
+
+    def test_shard_decomposition(self):
+        """Chunk sums with matching row offsets add up to the full-batch
+        sum — the invariant the multi-shard engine's per-shard partial
+        sums + secure_sum rely on."""
+        rows, dim = 24, 200
+        x = _batch(rows, dim, seed=4)
+        key = jax.random.key(2)
+        params = PARAMS["rqm"]
+        full = np.asarray(ops.rqm_round_sum(x, key, params))
+        for split in (1, 8, 13):
+            lo = ops.rqm_round_sum(x[:split], key, params)
+            hi = ops.rqm_round_sum(x[split:], key, params, row_offset=split)
+            np.testing.assert_array_equal(full, np.asarray(lo) + np.asarray(hi))
+
+    def test_bf16_compute_path(self):
+        """The bf16 clip/scale stage: jnp and Pallas paths agree exactly
+        (the encode arithmetic stays integer), and bf16 narrows only the
+        clip stage (results differ from f32 on some elements but stay
+        valid levels)."""
+        x = _batch(16, 260, seed=6)
+        key = jax.random.key(7)
+        params = PARAMS["rqm"]
+        a = ops.rqm_round_sum(x, key, params, compute_dtype=jnp.bfloat16)
+        b = ops.rqm_round_sum(x, key, params, compute_dtype=jnp.bfloat16,
+                              interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert 0 <= int(np.asarray(a).min())
+        assert int(np.asarray(a).max()) <= 16 * (params.m - 1)
+
+    def test_pick_round_block_rows(self):
+        assert pick_round_block_rows(1) == 8      # sublane floor
+        assert pick_round_block_rows(6) == 8
+        assert pick_round_block_rows(40) == 8     # default tile height
+        assert pick_round_block_rows(40, requested=64) == 40
+        assert pick_round_block_rows(100, requested=64) == 64
+
+
+class TestPaddingClampRegression:
+    """The ops.py tile_flat dedupe: auto-clamped and explicit block
+    heights, padded and unpadded lengths, all bit-equal (the counter-based
+    RNG keys on the flat element index, so padding position is invisible)."""
+
+    @pytest.mark.parametrize("n", [9, 100, 1024, 1100])
+    def test_padded_vs_unpadded(self, n):
+        params = PARAMS["rqm"]
+        key = jax.random.key(0)
+        big = jax.random.uniform(jax.random.key(1), (2048,), jnp.float32, -1, 1)
+        z_prefix = ops.rqm(big, key, params, interpret=True)[:n]
+        z_small = ops.rqm(big[:n], key, params, interpret=True)
+        np.testing.assert_array_equal(np.asarray(z_prefix), np.asarray(z_small))
+
+    def test_auto_clamp_equals_explicit(self):
+        params = PARAMS["rqm"]
+        key = jax.random.key(0)
+        x = jax.random.uniform(jax.random.key(2), (60,), jnp.float32, -1, 1)
+        auto = ops.rqm(x, key, params, interpret=True)  # tile_flat clamps
+        explicit = ops.rqm(x, key, params, interpret=True, block_rows=8)
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+
+    def test_tile_flat_single_derivation(self):
+        x2, n, br = ops.tile_flat(jnp.zeros(60))
+        assert n == 60 and br == 8 and x2.shape == (8, 128)
+        x2, n, br = ops.tile_flat(jnp.zeros(60), 16)
+        assert br == 16 and x2.shape == (16, 128)
+
+
+class TestDecodeApplySum:
+    def test_jit_bit_identity(self):
+        """decode_apply_sum == decode_sum -> sgd, jit-to-jit (the engines'
+        context), static and traced n."""
+        p = PARAMS["rqm"]
+        w = jax.random.normal(jax.random.key(0), (5000,), jnp.float32)
+        z = jax.random.randint(jax.random.key(1), (5000,), 0, 40 * 15, jnp.int32)
+        ref = jax.jit(lambda w, z: w - 0.5 * decode_sum(z, 40, p).astype(w.dtype))
+        got = jax.jit(lambda w, z: decode_apply_sum(w, z, p, 40, 0.5))
+        np.testing.assert_array_equal(np.asarray(ref(w, z)), np.asarray(got(w, z)))
+        reft = jax.jit(lambda w, z, n: w - 0.5 * decode_sum(
+            z, jnp.maximum(n, 1), p).astype(w.dtype))
+        gott = jax.jit(lambda w, z, n: decode_apply_sum(
+            w, z, p, jnp.maximum(n, 1), 0.5))
+        np.testing.assert_array_equal(
+            np.asarray(reft(w, z, jnp.int32(40))),
+            np.asarray(gott(w, z, jnp.int32(40))),
+        )
+
+    def test_pallas_tile_variant_one_ulp(self):
+        """The static-n Pallas tile kernel keeps the same association;
+        cross-mode FMA contraction bounds the drift to one rounding error
+        at the decode's INTERMEDIATE scale — ``g = -x_max + z*scale``
+        cancels when z*scale is near x_max, so the drift bound is an ULP
+        of 2*x_max (times lr), not of the small g that survives — plus
+        one ULP of the final subtraction."""
+        p = PARAMS["qmgeo"]  # GridGeometry params beyond RQM
+        lr = 0.5
+        w = jax.random.normal(jax.random.key(3), (2000,), jnp.float32)
+        z = jax.random.randint(jax.random.key(4), (2000,), 0, 40 * 15, jnp.int32)
+        g = lr * decode_sum(z, 40, p).astype(w.dtype)
+        ref = np.asarray(w - g)
+        got = np.asarray(decode_apply_sum(w, z, p, 40, lr, interpret=True))
+        out_scale = np.maximum(np.abs(ref), np.abs(np.asarray(w)))
+        tol = (lr * np.spacing(np.float32(2.0 * p.x_max))
+               + np.spacing(out_scale.astype(np.float32)))
+        assert np.all(np.abs(ref - got) <= tol)
+
+
+@pytest.mark.skipif(INTERPRET_LANE, reason="interpret mode unrolls the "
+                    "CNN-width kernel grid into a Python loop; the kernel "
+                    "battery above covers the kernel body in this lane")
+class TestFusedEngineBitIdentity:
+    def _run(self, engine, fused, name="rqm", **kw):
+        tr = small_trainer(engine, name, rounds=3, collect_sums=True,
+                           fused_rounds=fused, **kw)
+        tr.train()
+        return np.asarray(tr.flat), [np.asarray(s) for s in tr.round_sums]
+
+    @pytest.mark.parametrize("engine,kw", [
+        ("scan", {}),
+        ("perround", {}),
+        ("shard", {"shards": 1}),
+    ], ids=["scan", "perround", "shard1"])
+    def test_fused_trains_bit_identically(self, engine, kw):
+        flat0, sums0 = self._run(engine, False, **kw)
+        flat1, sums1 = self._run(engine, True, **kw)
+        assert len(sums0) == len(sums1) == 3
+        for a, b in zip(sums0, sums1):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(flat0, flat1)
+
+    def test_fused_hetero_dropout(self):
+        flat0, sums0 = self._run("scan", False, **HETERO_MODES["dropout"])
+        flat1, sums1 = self._run("scan", True, **HETERO_MODES["dropout"])
+        for a, b in zip(sums0, sums1):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(flat0, flat1)
+
+    def test_fused_none_mechanism_float_fallback(self):
+        """The 'none' float baseline rides the materialized fallback of
+        encode_sum_batch — identical program, identical floats."""
+        flat0, sums0 = self._run("scan", False, name="none")
+        flat1, sums1 = self._run("scan", True, name="none")
+        for a, b in zip(sums0, sums1):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(flat0, flat1)
+
+    def test_host_engine_rejects_fused(self):
+        with pytest.raises(ValueError, match="host.*fused_rounds"):
+            small_trainer("host", "rqm", fused_rounds=True)
+
+
+class TestPeakMemory:
+    def test_fused_temp_memory_is_o_tile(self):
+        """XLA's own memory analysis: the fused round sum's temp footprint
+        must be a small fraction of the materialized encode+sum's, which
+        carries the whole (cohort, dim) int32 batch."""
+        rows, dim = 256, 4096
+        params = PARAMS["rqm"]
+        x = jnp.zeros((rows, dim), jnp.float32)
+        seed = jnp.uint32(1)
+
+        def materialized(x, seed):
+            z = ops.rqm_fast(x, jax.random.key(0), params, offset=jnp.uint32(0))
+            return jnp.sum(z, axis=0, dtype=jnp.int32)
+
+        from repro.kernels.fused_round_kernel import round_sum_jnp
+
+        def fused(x, seed):
+            w = jnp.ones((rows,), jnp.int32)
+            return round_sum_jnp(x, w, seed, jnp.uint32(0), "rqm", params, 8)
+
+        mat = jax.jit(materialized).lower(x, seed).compile()
+        fus = jax.jit(fused).lower(x, seed).compile()
+        mat_tmp = mat.memory_analysis().temp_size_in_bytes
+        fus_tmp = fus.memory_analysis().temp_size_in_bytes
+        batch_bytes = rows * dim * 4
+        # materialized must hold the full encoded batch; fused stays
+        # within a few tiles + the dim-length accumulator
+        assert mat_tmp >= batch_bytes
+        assert fus_tmp < batch_bytes / 8

@@ -1,0 +1,104 @@
+"""Golden encoded-sum regression suite — the sums analogue of the golden
+epsilons (PR 4): tests/golden/encoded_sums.json pins the int32 level sum
+a fixed 12-client cohort RELEASES to SecAgg under the paper-default
+mechanism parameters, in three variants (plain, participation-weighted,
+shard-offset). Every word is asserted EXACTLY, against both:
+
+  * the materialized path — ``quantize_batch(...)`` then mask-and-sum,
+    exactly what the engines compute with ``fused_rounds=False``; and
+  * the fused path — ``quantize_sum_batch`` (the streaming round-sum
+    kernel of kernels/fused_round_kernel.py).
+
+A failure here means a kernel/RNG/mechanism refactor CHANGED WHAT THE
+MECHANISM RELEASES — which silently invalidates every recorded epsilon
+and every cross-engine bit-identity claim. Regenerate with
+scripts/make_goldens.py only for an intentional semantic change.
+"""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mechanisms import make_mechanism
+from repro.kernels import ops
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "scripts"))
+from make_goldens import golden_sum_inputs  # noqa: E402
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "encoded_sums.json")
+
+
+def _golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return _golden()
+
+
+def _mech_and_inputs(golden, name):
+    block = golden["mechanisms"][name]
+    mech = make_mechanism({"name": name, **block["params"]})
+    x, weights = golden_sum_inputs(mech.clip)
+    np.testing.assert_array_equal(weights, np.asarray(block["weights"]),
+                                  err_msg="pinned participation mask drifted")
+    key = jax.random.key(golden["key_seed"])
+    return mech, jnp.asarray(x), jnp.asarray(weights), key, block
+
+
+def test_kernel_seed_derivation_pinned(golden):
+    """key->seed derivation is part of the pinned definition: a jax
+    upgrade that changes jax.random.bits breaks every sum below — make
+    the root cause loud."""
+    key = jax.random.key(golden["key_seed"])
+    assert int(np.asarray(ops.key_to_seed(key))) == golden["kernel_seed_u32"]
+
+
+@pytest.mark.parametrize("name", ["rqm", "pbm", "qmgeo"])
+@pytest.mark.parametrize("path", ["materialized", "fused"])
+def test_golden_plain_sum(golden, name, path):
+    mech, x, _, key, block = _mech_and_inputs(golden, name)
+    if path == "materialized":
+        got = jnp.sum(mech.quantize_batch(x, key), axis=0, dtype=jnp.int32)
+    else:
+        got = mech.quantize_sum_batch(x, key)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(block["sum"]))
+
+
+@pytest.mark.parametrize("name", ["rqm", "pbm", "qmgeo"])
+@pytest.mark.parametrize("path", ["materialized", "fused"])
+def test_golden_weighted_sum(golden, name, path):
+    mech, x, w, key, block = _mech_and_inputs(golden, name)
+    if path == "materialized":
+        z = mech.quantize_batch(x, key)
+        got = jnp.sum(z * w.astype(z.dtype)[:, None], axis=0, dtype=jnp.int32)
+    else:
+        got = mech.quantize_sum_batch(x, key, weights=w)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(block["sum_weighted"]))
+
+
+@pytest.mark.parametrize("name", ["rqm", "pbm", "qmgeo"])
+@pytest.mark.parametrize("path", ["materialized", "fused"])
+def test_golden_offset_sum(golden, name, path):
+    """The shard-slice variant: rows play positions [offset, offset+rows)
+    of a larger conceptual cohort."""
+    mech, x, _, key, block = _mech_and_inputs(golden, name)
+    off = golden["row_offset"]
+    total = golden["rows"] + off
+    if path == "materialized":
+        z = mech.quantize_batch(x, key, row_offset=off, total_rows=total)
+        got = jnp.sum(z, axis=0, dtype=jnp.int32)
+    else:
+        got = mech.quantize_sum_batch(x, key, row_offset=off,
+                                      total_rows=total)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(block["sum_offset"]))

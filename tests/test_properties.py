@@ -134,3 +134,91 @@ def test_kernel_oracle_agreement_random_params(params, seed):
     z_k = ops.rqm(x, key, params, interpret=True, block_rows=8)
     z_r = ref.rqm_ref(x, ops.key_to_seed(key), params)
     np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+
+
+# ---- fused round-sum invariants (kernels/fused_round_kernel.py) ----
+# The counter convention (row_offset + r) * dim + c makes the fused sum a
+# pure function of each row's GLOBAL batch position — these properties pin
+# the consequences: tiling cannot matter, and any shard split of the
+# cohort with matching offsets must recompose exactly.
+
+fused_batch_strategy = st.tuples(
+    st.integers(1, 21),            # rows
+    st.integers(1, 200),           # dim
+    st.integers(0, 2**31 - 1),     # seed
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    params=params_strategy,
+    shape=fused_batch_strategy,
+    block_rows=st.sampled_from([8, 16, 32]),
+)
+def test_fused_sum_block_rows_invariance(params, shape, block_rows):
+    """The VMEM tile height is a performance knob, never a semantic one."""
+    from repro.kernels import ops
+
+    rows, dim, seed = shape
+    key = jax.random.key(seed)
+    x = jax.random.uniform(key, (rows, dim), jnp.float32,
+                           -1.5 * params.c, 1.5 * params.c)
+    base = ops.rqm_round_sum(x, key, params)
+    tiled = ops.rqm_round_sum(x, key, params, block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tiled))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    params=params_strategy,
+    shape=fused_batch_strategy,
+    data=st.data(),
+)
+def test_fused_sum_shard_split_recomposes(params, shape, data):
+    """Splitting the cohort at any row with matching row offsets sums the
+    parts back to the whole — the shard engine's correctness condition."""
+    from repro.kernels import ops
+
+    rows, dim, seed = shape
+    split = data.draw(st.integers(0, rows))
+    key = jax.random.key(seed)
+    x = jax.random.uniform(key, (rows, dim), jnp.float32,
+                           -1.5 * params.c, 1.5 * params.c)
+    whole = ops.rqm_round_sum(x, key, params)
+    parts = jnp.zeros_like(whole)
+    if split > 0:
+        parts = parts + ops.rqm_round_sum(x[:split], key, params,
+                                          row_offset=0)
+    if split < rows:
+        parts = parts + ops.rqm_round_sum(x[split:], key, params,
+                                          row_offset=split)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(parts))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    params=params_strategy,
+    shape=fused_batch_strategy,
+    data=st.data(),
+)
+def test_fused_sum_within_mechanism_bound(params, shape, data):
+    """The weighted level sum respects 0 <= sum <= sum_bound(#participants)
+    — the packing-safety contract the shard engine's SecAgg emulation
+    relies on (core/secagg.py lane bounds)."""
+    import dataclasses
+
+    from repro.core.mechanisms import make_mechanism
+
+    rows, dim, seed = shape
+    w = np.asarray(
+        data.draw(st.lists(st.integers(0, 1), min_size=rows, max_size=rows)),
+        dtype=np.int32,
+    )
+    mech = make_mechanism({"name": "rqm", **dataclasses.asdict(params)})
+    key = jax.random.key(seed)
+    x = jax.random.uniform(key, (rows, dim), jnp.float32,
+                           -1.5 * params.c, 1.5 * params.c)
+    z_sum = np.asarray(mech.quantize_sum_batch(x, key, weights=jnp.asarray(w)))
+    n_real = int(w.sum())
+    assert z_sum.min() >= 0
+    assert z_sum.max() <= mech.sum_bound(max(n_real, 1))
