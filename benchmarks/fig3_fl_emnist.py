@@ -18,13 +18,13 @@ tradeoff cannot drift from the parameters that actually ran.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 
 from repro.core.mechanisms import make_mechanism
 from repro.fed.loop import FedConfig, FedTrainer
+from repro.telemetry import write_bench_json
 
 C = 0.02  # clip scaled to the synthetic task's gradient magnitudes
 ROUNDS = 120
@@ -136,28 +136,28 @@ def run(csv=print, rounds=ROUNDS, fed=None, bench_rounds=12):
 
 def bench_json(path, smoke=False, rounds=None):
     """Run the benchmark and write the machine-readable BENCH_fig3.json
-    payload (shared by the CLI below and benchmarks/run.py)."""
+    artifact in the tracker document format — the same schema every
+    tracked run and baseline emits (docs/telemetry.md; shared by the CLI
+    below, benchmarks/run.py and scripts/check_bench_regression.py)."""
     rounds = rounds or (SMOKE_ROUNDS if smoke else ROUNDS)
     fed = SMOKE_FED if smoke else FED
     results = run(rounds=rounds, fed=fed)
     eng = results.pop("engine")
-    payload = {
+    meta = {
         "benchmark": "fig3_fl_emnist",
         "smoke": smoke,
         "rounds": rounds,
         "backend": jax.default_backend(),
-        "engines": {
-            "host": {"rounds_per_s": eng["host_rps"]},
-            "scan": {"rounds_per_s": eng["scan_rps"]},
-            "shard": {"rounds_per_s": eng["shard_rps"],
-                      "shards": eng["shards"]},
-        },
-        "mechanisms": results,
     }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
-    print("wrote", path)
-    return payload
+    engines = {
+        "host": {"rounds_per_s": eng["host_rps"]},
+        "scan": {"rounds_per_s": eng["scan_rps"]},
+        "shard": {"rounds_per_s": eng["shard_rps"],
+                  "shards": eng["shards"]},
+    }
+    return write_bench_json(
+        path, meta, {"engines": engines, "mechanisms": results}
+    )
 
 
 def main():

@@ -17,7 +17,6 @@ memo/disk cache (repro.privacy.cache) is supposed to move.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -25,6 +24,7 @@ import jax
 from repro.fed.loop import FedConfig, FedTrainer
 from repro.privacy.cache import global_cache
 from repro.privacy.calibrate import DEFAULT_ALPHAS, CalibrationError, calibrate
+from repro.telemetry import write_bench_json
 
 C = 0.02
 FAMILIES = ("rqm", "pbm", "qmgeo")
@@ -115,9 +115,10 @@ def run(csv=print, targets=TARGETS, rounds=ROUNDS, fed=None, delta=1e-5,
 
 def bench_json(path, smoke=False, rounds=None, delta=1e-5):
     """Run the sweep and write the machine-readable BENCH_budget.json
-    payload (shared by the CLI below and benchmarks/run.py). The artifact
-    is written even on contract violations (recorded in it); violations
-    are returned so callers can still fail loudly."""
+    artifact in the tracker document format (docs/telemetry.md; shared by
+    the CLI below and benchmarks/run.py). The artifact is written even on
+    contract violations (recorded in it); violations are returned so
+    callers can still fail loudly."""
     targets = SMOKE_TARGETS if smoke else TARGETS
     rounds = rounds or (SMOKE_ROUNDS if smoke else ROUNDS)
     fed = SMOKE_FED if smoke else FED
@@ -125,20 +126,19 @@ def bench_json(path, smoke=False, rounds=None, delta=1e-5):
     results = run(targets=targets, rounds=rounds, fed=fed, delta=delta,
                   raise_on_violation=False)
     violations = results.pop("_violations")
-    payload = {
+    meta = {
         "benchmark": "fig_budget",
         "smoke": smoke,
         "rounds": rounds,
         "delta": delta,
         "backend": jax.default_backend(),
         "seconds_total": round(time.time() - t0, 2),
+    }
+    write_bench_json(path, meta, {
+        "targets": {str(t): r for t, r in results.items()},
         "cache": global_cache().stats(),
         "violations": violations,
-        "targets": {str(t): r for t, r in results.items()},
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
-    print("wrote", path)
+    })
     return violations
 
 

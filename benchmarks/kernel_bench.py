@@ -8,7 +8,6 @@ counter-based RNG (the reference reads ~17x the bytes).
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -18,6 +17,7 @@ from repro.core import rqm as rqm_lib
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
 from repro.kernels import ops
+from repro.telemetry import write_bench_json
 
 PARAMS = RQMParams(c=1.0, delta=1.0, m=16, q=0.42)
 N = 1_000_000
@@ -101,13 +101,15 @@ def run(csv=print):
 
 def bench_json(path):
     """Run the benchmark and write the machine-readable BENCH_kernels.json
-    payload (shared by the CLI below and benchmarks/run.py)."""
+    artifact in the tracker document format (docs/telemetry.md; shared by
+    the CLI below and benchmarks/run.py)."""
     results = run()
-    payload = {
+    meta = {
         "benchmark": "kernel_bench",
         "backend": jax.default_backend(),
         "elements": N,
-        "kernels": {
+    }
+    kernels = {
             "rqm_fused_jnp": {"us": results["rqm_fast_us"],
                               "elts_per_us": N / results["rqm_fast_us"]},
             "rqm_uniforms_ref": {"us": results["ref_us"]},
@@ -123,12 +125,8 @@ def bench_json(path):
                 "materialized_temp_bytes":
                     results["round_sum_materialized_temp_bytes"],
             },
-        },
     }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
-    print("wrote", path)
-    return payload
+    return write_bench_json(path, meta, {"kernels": kernels})
 
 
 def main():

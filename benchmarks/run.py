@@ -45,59 +45,77 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     violations = []
+    errors = []
+
+    def attempt(name, fn):
+        # one broken benchmark must not abort the rest of the suite: the
+        # completed BENCH_*.json artifacts still land, the failure is
+        # collected, and the exit code stays nonzero at the end
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001 - isolate ANY bench failure
+            errors.append(f"{name}: {type(e).__name__}: {e}")
+            print(f"bench_error[{name}],0,{type(e).__name__}",
+                  file=sys.stderr)
+            return None
+
     if want("fig2"):
         from benchmarks import fig2_renyi
 
-        fig2_renyi.run()
+        attempt("fig2", fig2_renyi.run)
     if want("fig45"):
         from benchmarks import fig45_theta_sweep
 
-        fig45_theta_sweep.run()
+        attempt("fig45", fig45_theta_sweep.run)
     if want("kernels"):
         from benchmarks import kernel_bench
 
         if json_dir:
-            kernel_bench.bench_json(json_path("BENCH_kernels.json"))
+            attempt("kernels", lambda: kernel_bench.bench_json(
+                json_path("BENCH_kernels.json")))
         else:
-            kernel_bench.run()
+            attempt("kernels", kernel_bench.run)
     if want("fig3"):
         from benchmarks import fig3_fl_emnist
 
         if json_dir:
-            fig3_fl_emnist.bench_json(json_path("BENCH_fig3.json"),
-                                      smoke=args.smoke, rounds=args.fl_rounds)
+            attempt("fig3", lambda: fig3_fl_emnist.bench_json(
+                json_path("BENCH_fig3.json"),
+                smoke=args.smoke, rounds=args.fl_rounds))
         else:
             rounds = args.fl_rounds or (fig3_fl_emnist.SMOKE_ROUNDS
                                         if args.smoke else fig3_fl_emnist.ROUNDS)
-            fig3_fl_emnist.run(
+            attempt("fig3", lambda: fig3_fl_emnist.run(
                 rounds=rounds,
                 fed=fig3_fl_emnist.SMOKE_FED if args.smoke else None,
-            )
+            ))
     if want("budget"):
         from benchmarks import fig_budget
 
         if json_dir:
             # the budget sweep always runs at the smoke budget here (the
             # full sweep is a standalone `python benchmarks/fig_budget.py`)
-            violations = fig_budget.bench_json(json_path("BENCH_budget.json"),
-                                               smoke=True)
+            violations = attempt("budget", lambda: fig_budget.bench_json(
+                json_path("BENCH_budget.json"), smoke=True)) or []
         else:
-            fig_budget.run(targets=fig_budget.SMOKE_TARGETS,
-                           rounds=fig_budget.SMOKE_ROUNDS,
-                           fed=fig_budget.SMOKE_FED)
+            attempt("budget", lambda: fig_budget.run(
+                targets=fig_budget.SMOKE_TARGETS,
+                rounds=fig_budget.SMOKE_ROUNDS,
+                fed=fig_budget.SMOKE_FED))
     if want("qopt"):
         from benchmarks import beyond_qopt
 
-        beyond_qopt.run()
+        attempt("qopt", beyond_qopt.run)
     if want("roofline"):
         from benchmarks import roofline
 
-        roofline.run()
+        attempt("roofline", roofline.run)
     print(f"total_wall,{(time.time()-t0)*1e6:.0f},seconds={time.time()-t0:.1f}",
           file=sys.stderr)
-    if violations:
-        raise SystemExit(f"budget contract violated ({len(violations)}): "
-                         + "; ".join(violations))
+    failures = errors + [f"budget contract: {v}" for v in violations]
+    if failures:
+        raise SystemExit(f"benchmarks failed ({len(failures)}): "
+                         + "; ".join(failures))
 
 
 if __name__ == "__main__":

@@ -40,9 +40,26 @@ from repro.core.mechanisms import (
 from repro.fed import FedConfig, FedTrainer
 from repro.fed.engine import engine_names
 from repro.privacy.calibrate import DEFAULT_ALPHAS, calibrate, calibration_knobs
+from repro.telemetry import parse_tracker_spec
 
 
-def run_one(spec, fcfg, target_eps=None, resume=False, **defaults):
+def _suffix_track_spec(spec: str, tag: str) -> str:
+    """Per-mechanism tracker paths in a multi-mechanism sweep: insert the
+    mechanism tag before the extension of every path in the spec — the
+    same no-interleaving rule the per-mechanism checkpoint subdirs follow."""
+    parts = []
+    for sub in spec.split("+"):
+        name, opts = parse_tracker_spec(sub)
+        if opts.get("path"):
+            root, ext = os.path.splitext(str(opts["path"]))
+            opts["path"] = f"{root}-{tag}{ext}"
+        body = ",".join(f"{k}={v}" for k, v in opts.items())
+        parts.append(f"{name}:{body}" if body else name)
+    return "+".join(parts)
+
+
+def run_one(spec, fcfg, target_eps=None, resume=False, track=None,
+            multi=False, **defaults):
     """One mechanism end-to-end: build from the spec (or calibrate the
     family to --target-eps), train with the configured round engine
     (resuming from the mechanism's checkpoint directory when asked),
@@ -65,17 +82,19 @@ def run_one(spec, fcfg, target_eps=None, resume=False, **defaults):
         print(f"[{name}] calibrated: {calibrated.describe()}")
     else:
         mech = make_mechanism(spec, **defaults)
+    # one artifact per FULL mechanism spec (family name + an 8-hex digest
+    # of the exact parameters): a multi-mechanism sweep must not
+    # interleave checkpoints or tracker series, and two runs of the same
+    # family with different knobs (or different calibrations) must not
+    # clobber each other's files
+    tag = f"{name}-{hashlib.sha256(mech.describe().encode()).hexdigest()[:8]}"
     if fcfg.ckpt_dir:
-        # one checkpoint directory per FULL mechanism spec (family name +
-        # an 8-hex digest of the exact parameters): a multi-mechanism
-        # sweep must not interleave checkpoints, and two runs of the same
-        # family with different knobs (or different calibrations) must
-        # not clobber each other's step files
-        digest = hashlib.sha256(mech.describe().encode()).hexdigest()[:8]
         fcfg = dataclasses.replace(
-            fcfg, ckpt_dir=os.path.join(fcfg.ckpt_dir, f"{name}-{digest}")
+            fcfg, ckpt_dir=os.path.join(fcfg.ckpt_dir, tag)
         )
-    tr = FedTrainer(mech, fcfg)
+    if track and multi:
+        track = _suffix_track_spec(track, tag)
+    tr = FedTrainer(mech, fcfg, tracker=track)
     remaining = fcfg.rounds
     if resume:
         try:
@@ -112,6 +131,7 @@ def run_one(spec, fcfg, target_eps=None, resume=False, **defaults):
             "min": min(tr.realized_n), "max": max(tr.realized_n),
             "mean": sum(tr.realized_n) / len(tr.realized_n),
         }
+    tr.tracker.close()
     per_round = mech.per_round_epsilon(fcfg.clients_per_round, 8.0)
     if per_round > 0:
         out["per_round_eps_alpha8"] = per_round
@@ -191,6 +211,13 @@ def main():
                          "are then solved for, and the trainer halts at "
                          "budget exhaustion)")
     ap.add_argument("--target-delta", type=float, default=1e-5)
+    ap.add_argument("--track", default=None,
+                    help="tracker spec (make_mechanism-style, "
+                         "docs/telemetry.md): 'json:runs/fl.json', "
+                         "'csv:runs/fl.csv', or a '+'-joined composite; "
+                         "per-round eps/accuracy series land there. With "
+                         "--mechanism all, each mechanism writes its own "
+                         "suffixed file (like the checkpoint subdirs)")
     ap.add_argument("--out", default=None, help="write results JSON")
     args = ap.parse_args()
     if args.resume and not args.ckpt_dir:
@@ -216,7 +243,8 @@ def main():
     defaults = dict(c=args.clip, m=args.m, q=args.q,
                     delta_ratio=args.delta_ratio, theta=args.theta, r=args.r)
     results = [run_one(s, fcfg, target_eps=args.target_eps,
-                       resume=args.resume, **defaults)
+                       resume=args.resume, track=args.track,
+                       multi=len(specs) > 1, **defaults)
                for s in specs]
     if args.out:
         with open(args.out, "w") as f:

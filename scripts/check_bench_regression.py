@@ -1,0 +1,107 @@
+"""Compare fresh BENCH_*.json artifacts against the committed baselines
+and WARN on rounds/sec drops beyond the threshold (default 20%).
+
+Both sides are tracker documents (docs/telemetry.md): a per-engine
+baseline (benchmarks/baselines/BENCH_<engine>.json, written by
+scripts/make_baselines.py) exposes its per-round ``rounds_per_sec``
+series; the bench-suite artifacts (BENCH_fig3.json) expose per-engine
+rounds/sec under ``payloads.engines``. Metrics are matched by name —
+``<engine>`` for tracked runs, ``fig3/<engine>`` for the fig3 suite —
+and only names present on BOTH sides are compared, so partial artifact
+sets never fail spuriously.
+
+Default mode only warns (CI containers are noisy neighbors; the push
+lane prints the comparison next to the uploaded artifacts for a human
+to read). ``--strict`` turns any regression into exit 1.
+
+    PYTHONPATH=src python scripts/make_baselines.py --out /tmp/fresh
+    python scripts/check_bench_regression.py --current /tmp/fresh
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def extract_metrics(doc: dict) -> dict:
+    """name -> rounds/sec from any BENCH_*.json tracker document."""
+    out = {}
+    meta = doc.get("meta", {})
+    payloads = doc.get("payloads") or {}
+    summary = payloads.get("summary") or {}
+    rps = [r.get("rounds_per_sec") for r in doc.get("rounds") or []]
+    rps = [v for v in rps if v]
+    if "rounds_per_sec_peak" in summary:
+        out[meta.get("engine", "run")] = summary["rounds_per_sec_peak"]
+    elif rps:
+        # peak over the series: the first block's rate carries jit
+        # compilation; the later blocks are the engine's real rate
+        out[meta.get("engine", "run")] = max(rps)
+    for name, eng in (payloads.get("engines") or {}).items():
+        if "rounds_per_s" in eng:
+            out[f"fig3/{name}"] = eng["rounds_per_s"]
+    return out
+
+
+def load_dir(d: str) -> dict:
+    metrics = {}
+    for path in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[bench-check] skipping unreadable {path}: {e}",
+                  file=sys.stderr)
+            continue
+        metrics.update(extract_metrics(doc))
+    return metrics
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="committed baseline artifacts")
+    ap.add_argument("--current", default=".",
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="warn when rounds/sec drops by more than this "
+                         "fraction of the baseline (default 0.20)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any regression instead of warning")
+    args = ap.parse_args()
+
+    base = load_dir(args.baselines)
+    cur = load_dir(args.current)
+    if not base:
+        print(f"[bench-check] no baselines in {args.baselines}; nothing "
+              f"to compare")
+        return 0
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        print(f"[bench-check] no shared metrics between {args.baselines} "
+              f"({sorted(base)}) and {args.current} ({sorted(cur)})")
+        return 0
+
+    regressions = []
+    for name in shared:
+        b, c = base[name], cur[name]
+        drop = (b - c) / b if b > 0 else 0.0
+        status = "REGRESSION" if drop > args.threshold else "ok"
+        print(f"[bench-check] {name}: baseline {b:.2f} -> current {c:.2f} "
+              f"rounds/s ({-drop:+.1%}) {status}")
+        if drop > args.threshold:
+            regressions.append(name)
+    if regressions:
+        print(f"[bench-check] WARNING: >{args.threshold:.0%} rounds/sec "
+              f"drop on {', '.join(regressions)} — compare artifacts "
+              f"before trusting (containers are noisy; see "
+              f"scripts/make_baselines.py)", file=sys.stderr)
+        return 1 if args.strict else 0
+    print(f"[bench-check] all {len(shared)} shared metrics within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

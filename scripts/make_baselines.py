@@ -1,0 +1,72 @@
+"""Write the committed per-engine tracked baseline runs.
+
+One smoke-scale FedTrainer run per registered round engine (scan,
+perround, host, shard), each emitting its per-round series through the
+JSON tracker into ``benchmarks/baselines/BENCH_<engine>.json`` — the
+SAME document schema every tracked run and BENCH artifact uses
+(docs/telemetry.md). The committed files serve two jobs:
+
+  * golden schema anchors: tests and readers see a real tracked series
+    for every engine, not a synthetic example;
+  * perf baselines: scripts/check_bench_regression.py compares a fresh
+    run's rounds/sec against these and warns on >20% drops (the CI push
+    lane runs it in warn-only mode — container perf varies; a human
+    reads the warning next to the uploaded artifacts).
+
+Regenerate (from the repo root, on a quiet machine) with:
+
+    PYTHONPATH=src python scripts/make_baselines.py
+"""
+import argparse
+import os
+import sys
+
+from repro.core.mechanisms import make_mechanism
+from repro.fed import FedConfig, FedTrainer
+from repro.telemetry import JsonTracker
+
+ENGINES = ("scan", "perround", "host", "shard")
+SPEC = "rqm:c=0.02,m=16,q=0.42"
+ROUNDS = 8
+FED = dict(num_clients=48, clients_per_round=8, lr=1.0, eval_size=64,
+           samples_per_client=8, budget_eps=200.0)
+
+
+def run_engine(engine: str, out_dir: str, rounds: int = ROUNDS) -> str:
+    path = os.path.join(out_dir, f"BENCH_{engine}.json")
+    tracker = JsonTracker(path)
+    tr = FedTrainer(make_mechanism(SPEC),
+                    FedConfig(engine=engine, rounds=rounds, **FED),
+                    tracker=tracker)
+    tr.train(rounds=rounds, eval_every=max(rounds // 2, 1),
+             log=lambda *_: None)
+    rps = [r["rounds_per_sec"] for r in tracker.doc["rounds"]]
+    # peak is the steady-state statistic: the first block's rounds/sec
+    # carries jit compilation, the later blocks are the engine's real rate
+    tracker.log_payload("summary", {
+        "rounds_per_sec_peak": max(rps),
+        "rounds_per_sec_median": sorted(rps)[len(rps) // 2],
+    })
+    tracker.close()
+    print(f"wrote {path} (peak {max(rps):.2f} rounds/s)")
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="benchmarks/baselines",
+                    help="where BENCH_<engine>.json files land")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--only", default=None,
+                    help=f"comma list of engines (default: all of "
+                         f"{','.join(ENGINES)})")
+    args = ap.parse_args()
+    engines = args.only.split(",") if args.only else ENGINES
+    os.makedirs(args.out, exist_ok=True)
+    for engine in engines:
+        run_engine(engine, args.out, rounds=args.rounds)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

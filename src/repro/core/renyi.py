@@ -144,6 +144,26 @@ def qmgeo_aggregate_epsilon(
     return cached_epsilon("qmgeo", params, n, alpha, seed, compute)
 
 
+def rdp_to_dp(total_eps, alphas, delta: float) -> tuple[float, float]:
+    """Best (eps, alpha) conversion of a composed RDP vector to
+    (eps, delta)-DP: eps_DP = eps_RDP + log(1/delta)/(alpha - 1)
+    (Mironov 2017, Prop. 3), minimized over the tracked alphas.
+
+    The ONE conversion shared by the accountant, the budget-halting
+    lookahead, and the telemetry round emitter — so a tracked run's
+    per-round eps_spent series is bit-identical to querying the
+    accountant, by construction.
+    """
+    best_eps, best_alpha = math.inf, None
+    for a, e in zip(alphas, total_eps):
+        if a <= 1.0:
+            continue
+        eps = e + math.log(1.0 / delta) / (a - 1.0)
+        if eps < best_eps:
+            best_eps, best_alpha = eps, a
+    return best_eps, best_alpha
+
+
 @dataclasses.dataclass
 class RenyiAccountant:
     """Tracks cumulative (alpha, eps) Renyi-DP over composed training rounds.
@@ -191,14 +211,13 @@ class RenyiAccountant:
         total = self._eps
         if rounds:
             total = total + rounds * np.asarray(extra_eps, dtype=np.float64)
-        best_eps, best_alpha = math.inf, None
-        for a, e in zip(self.alphas, total):
-            if a <= 1.0:
-                continue
-            eps = e + math.log(1.0 / delta) / (a - 1.0)
-            if eps < best_eps:
-                best_eps, best_alpha = eps, a
-        return best_eps, best_alpha
+        return rdp_to_dp(total, self.alphas, delta)
+
+    def total_rdp(self) -> np.ndarray:
+        """Copy of the composed per-alpha RDP vector (aligned with
+        ``alphas``) — the telemetry emitter syncs its cumulative mirror
+        to this after a checkpoint restore."""
+        return self._eps.copy()
 
     def rounds_within_budget(
         self, budget_eps: float, delta: float, per_round_eps: Sequence[float]

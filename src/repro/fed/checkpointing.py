@@ -160,6 +160,12 @@ def restore_checkpoint(trainer, step=None) -> int:
         trainer.realized_n.append(int(n))
         trainer.accountant.step(vec)
     trainer.round_sums = []
+    # telemetry continues the SAME series: the emitter's cumulative RDP
+    # mirror re-anchors to the replayed accountant and the tracker drops
+    # any rounds past the restored step (a crash can land after an emit
+    # but before its checkpoint) — no duplicate or missing round indices
+    # across the resume boundary (tests/test_telemetry.py).
+    trainer._emitter.sync(trainer.accountant.total_rdp(), step)
     if trainer._mesh is not None:
         trainer._commit_to_mesh()
     return step

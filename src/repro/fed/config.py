@@ -112,6 +112,15 @@ class FedConfig:
     # in tests/test_fused_round_kernel.py); the legacy "host" engine
     # rejects it.
     fused_rounds: bool = False
+    # Telemetry (docs/telemetry.md): a tracker spec — a registered name
+    # ("noop"), a "name:k=v,..." / "name:<path>" spec string
+    # ("json:runs/a.json", "csv:runs/a.csv,append=true", a "+"-joined
+    # composite), a list of specs, or a telemetry.Tracker instance. The
+    # trainer emits run metadata, one schema-stable record per round
+    # (round, realized_n, eps_spent/eps_remaining, rounds/sec, SecAgg sum
+    # bits) at the decode-apply boundary, eval points, and wall-clock
+    # timing scopes through it. None = noop (zero overhead).
+    track: Optional[object] = None
     # Debug/test instrumentation (all engines): record each round's
     # aggregated encoded SecAgg sum on the host (trainer.round_sums)
     # — the observable the cross-engine "exact encoded-sum equality" tests

@@ -130,17 +130,26 @@ class HostEngine(Engine):
         return jnp.asarray(images), jnp.asarray(labels)
 
     def _fixed_round(self):
+        # the host loop's stages are separate dispatches, so it times the
+        # fine-grained telemetry scopes (stage/grads/encode/secure_sum/
+        # apply) the fused jitted engines cannot observe (docs/telemetry.md)
         tr, cfg = self.tr, self.tr.cfg
         ids = sample_clients(tr._rng, cfg.num_clients, cfg.clients_per_round)
-        grads = tr._client_grads(tr.flat, *self._stack(ids))
+        with tr.timings.scope("stage"):
+            images, labels = self._stack(ids)
+        with tr.timings.scope("grads"):
+            grads = tr._client_grads(tr.flat, images, labels)
         tr._key, sub = jax.random.split(tr._key)
         keys = jax.random.split(sub, cfg.clients_per_round)
-        z = tr._encode(grads, keys)  # (n, dim) int32 (or float for 'none')
-        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
-        g_hat = tr._decode(z_sum, cfg.clients_per_round)
-        tr.flat, tr.opt_state = tr.server_opt.update(
-            g_hat, tr.opt_state, tr.flat, cfg.lr
-        )
+        with tr.timings.scope("encode"):
+            z = tr._encode(grads, keys)  # (n, dim) int32 (float for 'none')
+        with tr.timings.scope("secure_sum"):
+            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)  # SecAgg sum emulation
+        with tr.timings.scope("apply"):
+            g_hat = tr._decode(z_sum, cfg.clients_per_round)
+            tr.flat, tr.opt_state = tr.server_opt.update(
+                g_hat, tr.opt_state, tr.flat, cfg.lr
+            )
         if cfg.collect_sums:
             tr.round_sums.append(np.asarray(z_sum))
         tr._account(1)
@@ -154,17 +163,23 @@ class HostEngine(Engine):
         tr, cfg = self.tr, self.tr.cfg
         tr._key, k_sample, k_enc, k_drop = jax.random.split(tr._key, 4)
         ids, valid = cohort.sample_slate(cfg, tr.slate, k_sample)
-        grads = tr._client_grads(tr.flat, *self._stack(np.asarray(ids)))
-        z = tr._quantize_batch(grads, k_enc)  # full slate, like the engines
+        with tr.timings.scope("stage"):
+            images, labels = self._stack(np.asarray(ids))
+        with tr.timings.scope("grads"):
+            grads = tr._client_grads(tr.flat, images, labels)
+        with tr.timings.scope("encode"):
+            z = tr._quantize_batch(grads, k_enc)  # full slate, like engines
         part = cohort.participation(cfg, valid, k_drop)
-        z = z * part.astype(z.dtype)[:, None]
-        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)
+        with tr.timings.scope("secure_sum"):
+            z = z * part.astype(z.dtype)[:, None]
+            z_sum = jnp.sum(z, axis=0, dtype=z.dtype)
         n_real = int(np.asarray(jnp.sum(part, dtype=jnp.int32)))
         if n_real > 0:
-            g_hat = tr._decode(z_sum, n_real)
-            tr.flat, tr.opt_state = tr.server_opt.update(
-                g_hat, tr.opt_state, tr.flat, cfg.lr
-            )
+            with tr.timings.scope("apply"):
+                g_hat = tr._decode(z_sum, n_real)
+                tr.flat, tr.opt_state = tr.server_opt.update(
+                    g_hat, tr.opt_state, tr.flat, cfg.lr
+                )
         if cfg.collect_sums:
             tr.round_sums.append(np.asarray(z_sum))
         tr._account_realized([n_real])
@@ -258,9 +273,10 @@ class ShardEngine(Engine):
         while done < n_rounds:
             step = min(cfg.scan_block, n_rounds - done)
             if cfg.staging == "stream":
-                images, labels, nbytes = staging.stage_stream_block(
-                    tr.partition, cfg, tr._mesh, tr.slate, tr._key, step
-                )
+                with tr.timings.scope("stage"):
+                    images, labels, nbytes = staging.stage_stream_block(
+                        tr.partition, cfg, tr._mesh, tr.slate, tr._key, step
+                    )
                 tr.staged_bytes_last_block = nbytes
                 tr.staged_bytes_total += nbytes
             else:

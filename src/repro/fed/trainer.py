@@ -31,10 +31,11 @@ from repro.fed.config import FedConfig, validate_config
 from repro.fed.engine import get_engine
 from repro.fed import engines as _engines  # noqa: F401  (registers the four)
 from repro.optim import make_optimizer
+from repro.telemetry import RoundEmitter, Timings, make_tracker
 
 
 class FedTrainer:
-    def __init__(self, mech: Mechanism, fed_cfg: FedConfig):
+    def __init__(self, mech: Mechanism, fed_cfg: FedConfig, tracker=None):
         engine_cls = get_engine(fed_cfg.engine)  # "unknown engine" first
         validate_config(fed_cfg)
         engine_cls.validate(fed_cfg, mech)
@@ -51,6 +52,15 @@ class FedTrainer:
         # realized size (trainer.realized_n).
         self._hetero = cohort.is_hetero(fed_cfg)
         self.slate = int(cohort.base_slate(fed_cfg))
+        # Telemetry (docs/telemetry.md): the tracker argument wins over
+        # the cfg.track spec; both accept make_tracker specs. The emitter
+        # is built once `flat` exists (it needs the dimension for the
+        # SecAgg sum-bits column) and run metadata is published at the
+        # end of __init__, when the engine has claimed its mesh.
+        self.tracker = make_tracker(
+            tracker if tracker is not None else fed_cfg.track
+        )
+        self.timings = Timings()
         # The engine may claim resources (shard: device mesh) and adjust
         # the slate before anything is staged or traced.
         self.engine = engine_cls(self)
@@ -104,9 +114,10 @@ class FedTrainer:
         ])
         self._eps_by_n = {fed_cfg.clients_per_round: self._per_round_eps}
         if self.engine.stages_population and fed_cfg.staging != "stream":
-            self.client_images, self.client_labels, nbytes = staging.stage_full(
-                self.partition, fed_cfg, self._mesh
-            )
+            with self.timings.scope("stage"):
+                self.client_images, self.client_labels, nbytes = (
+                    staging.stage_full(self.partition, fed_cfg, self._mesh)
+                )
             self.staged_bytes_total += nbytes
         self._build_shared_jits()
         self.engine.build()
@@ -115,6 +126,63 @@ class FedTrainer:
             # the first donated block call then compiles with the same
             # input shardings every later call has — one compile, not two.
             self._commit_to_mesh()
+        self._emitter = RoundEmitter(
+            self.tracker, engine=fed_cfg.engine, mechanism=mech,
+            alphas=fed_cfg.accountant_alphas, delta=fed_cfg.budget_delta,
+            budget_eps=fed_cfg.budget_eps, dim=int(self.flat.size),
+        )
+        self.tracker.run_started(self._run_meta())
+
+    # -- telemetry (docs/telemetry.md) --------------------------------------
+    def _run_meta(self) -> dict:
+        """Run-level tracker metadata: the trajectory fingerprint (same
+        sha256 the checkpoints carry), mechanism + engine identity, and
+        mesh geometry."""
+        cfg = self.cfg
+        mesh = None
+        if self._mesh is not None:
+            mesh = {"axes": {str(k): int(v)
+                             for k, v in self._mesh.shape.items()},
+                    "devices": len(self._mesh.devices.ravel())}
+        return {
+            "kind": "fed_train",
+            "fingerprint": bytes(checkpointing.fingerprint(self)).hex(),
+            "engine": cfg.engine,
+            "mechanism": self.mech.describe(),
+            "mechanism_spec": self.mech.spec(),
+            "num_clients": cfg.num_clients,
+            "clients_per_round": cfg.clients_per_round,
+            "subsampling": cfg.subsampling,
+            "dropout": cfg.dropout,
+            "server_opt": cfg.server_opt,
+            "budget_eps": cfg.budget_eps,
+            "budget_delta": cfg.budget_delta,
+            "accountant_alphas": list(cfg.accountant_alphas),
+            "dim": int(self.flat.size),
+            "shards": self.shards,
+            "mesh": mesh,
+            "backend": jax.default_backend(),
+        }
+
+    def _advance_tracked(self, n_rounds: int):
+        """THE decode-apply-boundary hook: every engine's rounds flow
+        through here (round() and run_block() both do), so one advance ==
+        one timed scope and one batch of per-round tracker records whose
+        eps/realized_n series mirror the accountant bit-identically."""
+        t0 = time.perf_counter()
+        with self.timings.scope("round_block"):
+            self.engine.advance(n_rounds)
+        if self._emitter.enabled:
+            # jax dispatch is async: without blocking, a "round" is just
+            # its enqueue and rounds_per_sec would be fantasy. Only the
+            # tracked path pays this sync — noop tracking stays free.
+            jax.block_until_ready(self.flat)
+            self._emitter.emit(
+                self.accountant.history, self.realized_n,
+                time.perf_counter() - t0,
+            )
+        else:
+            self._emitter.emitted = self.accountant.rounds
 
     # -- shared jits (host engine pieces + eval, every engine) ---------------
     def _build_shared_jits(self):
@@ -231,7 +299,7 @@ class FedTrainer:
     def round(self, t: int = 0):
         """Advance one round (any engine; for blocked engines this is a
         1-round block)."""
-        self.engine.advance(1)
+        self._advance_tracked(1)
 
     def run_block(self, n_rounds: int):
         """Advance ``n_rounds`` rounds inside jitted blocks (blocked
@@ -243,7 +311,7 @@ class FedTrainer:
                 f"run_block requires a blocked engine ('scan' or 'shard'), "
                 f"got {self.cfg.engine!r}"
             )
-        self.engine.advance(n_rounds)
+        self._advance_tracked(n_rounds)
 
     def evaluate(self):
         flat = self.flat
@@ -286,6 +354,7 @@ class FedTrainer:
                 msg += (f" eps_spent={spent:.3f}/{budget:g} "
                         f"(delta={cfg.budget_delta:g})")
             history.append(m)
+            self.tracker.log_eval(dict(m))
             log(msg)
 
         def affordable(want: int) -> int:
@@ -351,4 +420,6 @@ class FedTrainer:
                 f"{budget:g} at delta={cfg.budget_delta:g}; halting")
             if not history or history[-1]["round"] != self.accountant.rounds:
                 record(self.accountant.rounds)
+        self.tracker.log_timings(self.timings.summary())
+        self.tracker.flush()
         return history

@@ -37,6 +37,7 @@ from repro.models import model as model_lib
 from repro.models.common import ParallelCtx
 from repro.optim import make_optimizer
 from repro.optim.schedules import warmup_cosine
+from repro.telemetry import NoopTracker, Timings, make_tracker
 
 
 def main():
@@ -86,6 +87,11 @@ def main():
                          "uninterrupted run)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--track", default=None,
+                    help="tracker spec (make_mechanism-style): "
+                         "'json:runs/lm.json', 'csv:runs/lm.csv', or a "
+                         "'+'-joined composite; one record per step "
+                         "(docs/telemetry.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -144,6 +150,14 @@ def main():
     lr_fn = warmup_cosine(args.lr, warmup=args.steps // 10 + 1, total_steps=args.steps)
     pipe = TokenPipeline(cfg, args.seq, args.batch, seed=args.seed)
     key = jax.random.key(args.seed)
+    tracker = make_tracker(args.track)
+    tracker.run_started({
+        "kind": "lm_train", "engine": "lm_step", "arch": args.arch,
+        "reduced": args.reduced, "mechanism": mech.describe(),
+        "steps": args.steps, "batch": args.batch, "seq": args.seq,
+        "server_opt": args.server_opt, "mesh": args.mesh_shape,
+        "per_step_eps_alpha8": eps, "backend": jax.default_backend(),
+    })
 
     if plan is not None:
         mesh = plan.mesh
@@ -170,7 +184,8 @@ def main():
                 args, params, opt_state, key, shardings
             )
             run_step = lambda p, o, s, b, k: step_fn(p, o, s, b, k)
-            _loop(args, cfg, pipe, run_step, params, opt_state, key, start)
+            _loop(args, cfg, pipe, run_step, params, opt_state, key, start,
+                  tracker=tracker, mech_desc=mech.describe())
     else:
         ctx = ParallelCtx()
         body = build_train_step_fn(
@@ -183,7 +198,8 @@ def main():
         params, opt_state, key, start = _maybe_resume(
             args, params, opt_state, key
         )
-        _loop(args, cfg, pipe, step_fn, params, opt_state, key, start)
+        _loop(args, cfg, pipe, step_fn, params, opt_state, key, start,
+              tracker=tracker, mech_desc=mech.describe())
 
 
 def _opt_fingerprint(server_opt: str) -> np.ndarray:
@@ -242,14 +258,36 @@ def _maybe_resume(args, params, opt_state, key, shardings=None):
     return params, opt_state, key, step0
 
 
-def _loop(args, cfg, pipe, step_fn, params, opt_state, key, start=0):
+def _loop(args, cfg, pipe, step_fn, params, opt_state, key, start=0,
+          tracker=None, mech_desc=""):
+    tracker = make_tracker(tracker)
+    tracked = not isinstance(tracker, NoopTracker)
+    timings = Timings()
     t0 = time.time()
     for step in range(start, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
-        key, sub = jax.random.split(key)
-        params, opt_state, metrics = step_fn(
-            params, opt_state, jnp.int32(step), batch, sub
-        )
+        ts = time.perf_counter()
+        with timings.scope("step"):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch(step).items()}
+            key, sub = jax.random.split(key)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, jnp.int32(step), batch, sub
+            )
+            if tracked:
+                # reading metrics blocks on the step: the tracked rate is
+                # the real step rate, not the async enqueue rate
+                metrics = {k: float(v) for k, v in metrics.items()}
+        if tracked:
+            elapsed = time.perf_counter() - ts
+            tracker.log_round({
+                "round": step + 1, "engine": "lm_step",
+                "mechanism": mech_desc, "loss": metrics["loss"],
+                "rounds_per_sec": 1.0 / max(elapsed, 1e-9),
+                "extra": {
+                    "ce_loss": metrics["ce_loss"],
+                    "tokens_per_sec": args.batch * args.seq / max(elapsed,
+                                                                  1e-9),
+                },
+            })
         if (step + 1) % args.log_every == 0 or step == start:
             m = {k: float(v) for k, v in metrics.items()}
             rate = (step + 1 - start) * args.batch * args.seq / (time.time() - t0)
@@ -260,6 +298,9 @@ def _loop(args, cfg, pipe, step_fn, params, opt_state, key, start=0):
                  {"params": params, "opt": opt_state,
                   "key": jax.random.key_data(key),
                   "server_opt_fp": _opt_fingerprint(args.server_opt)})
+    if tracked:
+        tracker.log_timings(timings.summary())
+    tracker.close()
     print(f"done in {time.time()-t0:.1f}s")
 
 

@@ -1,0 +1,222 @@
+"""AggregatorServer: streamed intake drains into aggregated rounds,
+bounded-queue backpressure, the exact budget halt (the crossing round is
+never applied), health snapshots, and checkpoint/resume continuing the
+tracked series without gaps (launch/aggregator.py; docs/telemetry.md).
+"""
+import json
+import queue
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mechanisms import make_mechanism
+from repro.core.renyi import RenyiAccountant
+from repro.launch.aggregator import AggregatorServer, simulate_client_batch
+from repro.telemetry import JsonTracker
+
+DIM = 64
+SPEC = "rqm:c=0.05,m=16,q=0.42"
+
+
+def make_server(**overrides):
+    opts = dict(cohort=4, queue_limit=8, lr=0.5)
+    opts.update(overrides)
+    return AggregatorServer(make_mechanism(SPEC), DIM, **opts)
+
+
+def feed(server, batches, batch_size=4, seed=0, block=False):
+    key = jax.random.key(seed)
+    accepted = 0
+    for _ in range(batches):
+        key, sub = jax.random.split(key)
+        batch = simulate_client_batch(server.mech, DIM, sub, batch_size)
+        accepted += server.submit(batch, block=block)
+    return accepted
+
+
+def budget_for_rounds(server, k):
+    """A budget that exactly affords k rounds at the server's cohort:
+    strictly above the k-round spend, strictly below the (k+1)-round."""
+    acc = RenyiAccountant(alphas=server.accountant.alphas)
+    vec = server._eps_vector(server.cohort)
+    spend = []
+    for _ in range(k + 1):
+        acc.step(vec)
+        spend.append(acc.dp_epsilon(server.budget_delta)[0])
+    return (spend[k - 1] + spend[k]) / 2
+
+
+def test_drain_smoke():
+    server = make_server()
+    assert feed(server, batches=3) == 3
+    before = np.asarray(server.flat).copy()
+    assert server.drain() == 3
+    snap = server.snapshot()
+    assert snap["rounds_served"] == 3
+    assert snap["updates_aggregated"] == 12
+    assert snap["queue_depth"] == 0 and snap["pending_updates"] == 0
+    assert server.realized_n == [4, 4, 4]
+    assert not np.array_equal(np.asarray(server.flat), before)
+
+
+def test_partial_cohort_waits():
+    server = make_server(cohort=8)
+    feed(server, batches=1, batch_size=4)  # half a cohort
+    assert server.step() is False
+    assert server.snapshot()["pending_updates"] == 4
+    feed(server, batches=1, batch_size=4, seed=1)
+    assert server.step() is True
+
+
+def test_backpressure_rejects_when_full():
+    server = make_server(queue_limit=2)
+    assert feed(server, batches=2) == 2
+    batch = np.zeros((4, DIM), np.int32)
+    assert server.submit(batch, block=False) is False
+    assert server.submit(batch, block=True, timeout=0.05) is False
+    assert server.batches_rejected == 2
+    assert server.snapshot()["batches_rejected"] == 2
+    # draining frees the queue; intake recovers
+    assert server.drain() == 2
+    assert server.submit(batch, block=False) is True
+
+
+def test_submit_validates_shape():
+    server = make_server()
+    with pytest.raises(ValueError, match="updates must be"):
+        server.submit(np.zeros((4, DIM + 1), np.int32))
+    with pytest.raises(ValueError, match="updates must be"):
+        server.submit(np.zeros(DIM, np.int32))
+
+
+def test_budget_halts_exactly(tmp_path):
+    path = tmp_path / "agg.json"
+    probe = make_server()
+    budget = budget_for_rounds(probe, k=3)
+    server = make_server(budget_eps=budget, tracker=f"json:{path}")
+    feed(server, batches=6)
+    assert server.drain() == 3  # round 4 would cross: never aggregated
+    assert server.halted
+    snap = server.snapshot()
+    assert snap["rounds_served"] == 3
+    assert snap["eps_spent"] <= budget
+    assert snap["eps_remaining"] > 0  # halted BEFORE exhaustion, not past
+    # a halted server refuses intake entirely
+    assert server.submit(np.zeros((4, DIM), np.int32), block=False) is False
+    server.shutdown()
+    doc = json.loads(path.read_text())
+    assert [r["round"] for r in doc["rounds"]] == [1, 2, 3]
+    assert doc["snapshots"][-1]["halted"] is True
+    assert doc["rounds"][-1]["eps_spent"] == snap["eps_spent"]
+
+
+def test_eps_series_bit_identical(tmp_path):
+    path = tmp_path / "agg.json"
+    server = make_server(tracker=f"json:{path}")
+    feed(server, batches=4)
+    server.drain()
+    server.shutdown()
+    doc = json.loads(path.read_text())
+    acc = RenyiAccountant(alphas=server.accountant.alphas)
+    want = []
+    for vec in server.accountant.history:
+        acc.step(vec)
+        want.append(acc.dp_epsilon(server.budget_delta)[0])
+    assert [r["eps_spent"] for r in doc["rounds"]] == want
+    assert [r["realized_n"] for r in doc["rounds"]] == [4, 4, 4, 4]
+    assert doc["meta"]["kind"] == "aggregator"
+    assert doc["meta"]["engine"] == "aggregator"
+
+
+def test_serve_thread_drains():
+    server = make_server()
+    server.start(poll=0.001)
+    try:
+        assert feed(server, batches=3, block=True) == 3
+        deadline = 50
+        while server.snapshot()["rounds_served"] < 3 and deadline:
+            deadline -= 1
+            time.sleep(0.05)
+        assert server.snapshot()["rounds_served"] == 3
+    finally:
+        server.shutdown()
+
+
+def test_checkpoint_resume_continues_series(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    path = tmp_path / "agg.json"
+
+    first = make_server(ckpt_dir=ckpt, ckpt_every=2, tracker=f"json:{path}")
+    feed(first, batches=4)
+    assert first.drain() == 4
+    first.tracker.flush()  # the "crash" leaves json + checkpoints behind
+    hist_first = [v.copy() for v in first.accountant.history]
+    flat_at_4 = np.asarray(first.flat).copy()
+    del first
+
+    resumed = make_server(ckpt_dir=ckpt, ckpt_every=2,
+                          tracker=JsonTracker(str(path), append=True))
+    assert resumed.resume() == 4
+    np.testing.assert_array_equal(np.asarray(resumed.flat), flat_at_4)
+    assert resumed.realized_n == [4, 4, 4, 4]
+    for a, b in zip(hist_first, resumed.accountant.history):
+        np.testing.assert_array_equal(a, b)
+
+    feed(resumed, batches=2, seed=7)
+    assert resumed.drain() == 2
+    resumed.shutdown()
+    doc = json.loads(path.read_text())
+    assert [r["round"] for r in doc["rounds"]] == [1, 2, 3, 4, 5, 6]
+
+
+def test_resume_truncates_unckpted_rounds(tmp_path):
+    """Rounds served after the last checkpoint are rolled back by resume:
+    the tracker series must be truncated to the restored round too."""
+    ckpt = str(tmp_path / "ckpt")
+    path = tmp_path / "agg.json"
+    first = make_server(ckpt_dir=ckpt, ckpt_every=2, tracker=f"json:{path}")
+    feed(first, batches=5)
+    assert first.drain() == 5  # checkpoints at 2 and 4; round 5 unsaved
+    first.tracker.flush()
+    del first
+
+    resumed = make_server(ckpt_dir=ckpt,
+                          tracker=JsonTracker(str(path), append=True))
+    assert resumed.resume() == 4
+    assert resumed.rounds_served == 4
+    resumed.tracker.flush()
+    doc = json.loads(path.read_text())
+    assert [r["round"] for r in doc["rounds"]] == [1, 2, 3, 4]
+
+
+def test_resume_fingerprint_mismatch(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    first = make_server(ckpt_dir=ckpt, ckpt_every=2)
+    feed(first, batches=2)
+    first.drain()
+    other = AggregatorServer(make_mechanism("pbm:c=0.05,m=16,theta=0.25"),
+                             DIM, cohort=4, ckpt_dir=ckpt)
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.resume()
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="cohort"):
+        make_server(cohort=0)
+    with pytest.raises(ValueError, match="queue_limit"):
+        make_server(queue_limit=0)
+    with pytest.raises(ValueError, match="ckpt_every requires"):
+        make_server(ckpt_every=2)
+    with pytest.raises(ValueError, match="init_flat"):
+        make_server(init_flat=np.zeros(DIM + 1, np.float32))
+    server = make_server()
+    with pytest.raises((ValueError, FileNotFoundError)):
+        server.resume()
+
+
+def test_queue_is_bounded():
+    server = make_server(queue_limit=3)
+    assert isinstance(server.queue, queue.Queue)
+    assert server.queue.maxsize == 3

@@ -1,0 +1,284 @@
+"""Telemetry subsystem: registry round-trip, spec parsing, the golden
+JSON/CSV schemas, composite fan-out, and the acceptance contract — every
+engine's tracked per-round series is bit-identical in eps/realized_n to
+the accountant's history, and continues without duplicate or missing
+round indices across checkpoint/resume (docs/telemetry.md).
+"""
+import csv
+import json
+import math
+
+import numpy as np
+import pytest
+
+from conftest import SMALL_FED, small_trainer
+from repro.core.mechanisms import make_mechanism
+from repro.core.renyi import RenyiAccountant, rdp_to_dp
+from repro.fed.loop import FedConfig, FedTrainer
+from repro.telemetry import (
+    CSV_COLUMNS,
+    ROUND_FIELDS,
+    SCHEMA_VERSION,
+    CompositeTracker,
+    CsvTracker,
+    JsonTracker,
+    NoopTracker,
+    Tracker,
+    get_tracker,
+    make_tracker,
+    parse_tracker_spec,
+    register_tracker,
+    tracker_names,
+    write_bench_json,
+)
+
+QUIET = dict(eval_every=2, log=lambda *_: None)
+
+
+def tracked_run(tracker, engine="scan", rounds=4, **overrides):
+    tr = small_trainer(engine, track=tracker, **overrides)
+    tr.train(rounds=rounds, **QUIET)
+    return tr
+
+
+def replay_eps_series(trainer):
+    """eps_spent after each round, queried from a replayed accountant —
+    the ground truth the tracked series must equal bit-for-bit."""
+    acc = RenyiAccountant(alphas=trainer.cfg.accountant_alphas)
+    out = []
+    for vec in trainer.accountant.history:
+        acc.step(vec)
+        out.append(acc.dp_epsilon(trainer.cfg.budget_delta)[0])
+    return out
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_registry_round_trip():
+    names = tracker_names()
+    for name in ("noop", "json", "csv", "composite"):
+        assert name in names
+        assert get_tracker(name).name == name
+    assert get_tracker("noop") is NoopTracker
+    assert get_tracker("json") is JsonTracker
+
+
+def test_registry_unknown_and_collision():
+    with pytest.raises(ValueError, match="unknown tracker"):
+        get_tracker("carrier-pigeon")
+    with pytest.raises(ValueError, match="already registered"):
+        @register_tracker("json")
+        class Impostor(Tracker):
+            pass
+    with pytest.raises(TypeError, match="must subclass Tracker"):
+        @register_tracker("rogue")
+        class NotATracker:
+            pass
+
+
+def test_reregistering_same_class_is_idempotent():
+    assert register_tracker("json")(JsonTracker) is JsonTracker
+
+
+# -- spec parsing / construction ----------------------------------------------
+
+def test_parse_spec_path_sugar_and_options():
+    assert parse_tracker_spec("json:runs/a.json") == (
+        "json", {"path": "runs/a.json"})
+    name, opts = parse_tracker_spec("json:runs/a.json,append=true,indent=0")
+    assert name == "json"
+    assert opts == {"path": "runs/a.json", "append": True, "indent": 0}
+    with pytest.raises(ValueError, match="malformed"):
+        parse_tracker_spec("json:a.json,b.json")
+
+
+def test_make_tracker_shapes(tmp_path):
+    assert isinstance(make_tracker(None), NoopTracker)
+    assert isinstance(make_tracker("noop"), NoopTracker)
+    t = JsonTracker(str(tmp_path / "x.json"))
+    assert make_tracker(t) is t
+    comp = make_tracker(f"json:{tmp_path}/a.json+csv:{tmp_path}/a.csv")
+    assert isinstance(comp, CompositeTracker)
+    assert [type(c) for c in comp.trackers] == [JsonTracker, CsvTracker]
+    comp2 = make_tracker([f"json:{tmp_path}/b.json", "noop"])
+    assert [type(c) for c in comp2.trackers] == [JsonTracker, NoopTracker]
+
+
+def test_make_tracker_rejects_unknown_options(tmp_path):
+    with pytest.raises(ValueError, match="does not accept option"):
+        make_tracker(f"json:{tmp_path}/a.json,compression=9")
+    with pytest.raises(TypeError, match="tracker spec"):
+        make_tracker(42)
+
+
+# -- golden schemas -----------------------------------------------------------
+
+def test_json_golden_schema(tmp_path):
+    path = tmp_path / "run.json"
+    tr = tracked_run(f"json:{path}")
+    doc = json.loads(path.read_text())
+    assert sorted(doc) == sorted(
+        ["schema", "meta", "rounds", "evals", "timings", "snapshots",
+         "payloads"])
+    assert doc["schema"] == SCHEMA_VERSION
+    meta = doc["meta"]
+    assert meta["kind"] == "fed_train"
+    assert meta["engine"] == "scan"
+    assert meta["mechanism_spec"] == tr.mech.spec()
+    assert len(meta["fingerprint"]) == 64  # sha256 hex
+    assert meta["dim"] == int(tr.flat.size)
+    assert [r["round"] for r in doc["rounds"]] == [1, 2, 3, 4]
+    for row in doc["rounds"]:
+        assert list(row)[: len(ROUND_FIELDS)] == list(ROUND_FIELDS)
+        assert row["engine"] == "scan"
+        assert row["rounds_per_sec"] > 0
+    assert [e["round"] for e in doc["evals"]] == [2, 4]
+    assert {"loss", "accuracy"} <= set(doc["evals"][0])
+    assert "round_block" in doc["timings"]
+    assert doc["timings"]["round_block"]["count"] >= 1
+
+
+def test_csv_golden_schema(tmp_path):
+    path = tmp_path / "run.csv"
+    tracked_run(f"csv:{path}")
+    rows = list(csv.reader(path.open()))
+    assert tuple(rows[0]) == CSV_COLUMNS  # the pinned header
+    kinds = [r[0] for r in rows[1:]]
+    assert kinds[0] == "meta"
+    assert kinds.count("round") == 4
+    assert kinds.count("eval") == 2
+    assert "timings" in kinds
+    round_col = 1 + ROUND_FIELDS.index("round")
+    got = [int(r[round_col]) for r in rows[1:] if r[0] == "round"]
+    assert got == [1, 2, 3, 4]
+
+
+def test_composite_fans_out(tmp_path):
+    jpath, cpath = tmp_path / "run.json", tmp_path / "run.csv"
+    tracked_run(f"json:{jpath}+csv:{cpath}", rounds=3)
+    doc = json.loads(jpath.read_text())
+    rows = list(csv.reader(cpath.open()))
+    assert len(doc["rounds"]) == 3
+    assert sum(r[0] == "round" for r in rows[1:]) == 3
+
+
+def test_write_bench_json(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    doc = write_bench_json(str(path), {"benchmark": "x"},
+                           {"engines": {"scan": {"rounds_per_s": 9.0}}})
+    on_disk = json.loads(path.read_text())
+    assert on_disk == doc
+    assert on_disk["meta"]["benchmark"] == "x"
+    assert on_disk["payloads"]["engines"]["scan"]["rounds_per_s"] == 9.0
+    assert on_disk["rounds"] == []
+
+
+# -- the acceptance contract: bit-identity with the accountant ----------------
+
+@pytest.mark.parametrize("engine", ["scan", "perround", "host", "shard"])
+def test_eps_series_bit_identical_per_engine(engine, tmp_path):
+    path = tmp_path / f"{engine}.json"
+    tr = tracked_run(f"json:{path}", engine=engine, rounds=4)
+    doc = json.loads(path.read_text())
+    assert [r["realized_n"] for r in doc["rounds"]] == tr.realized_n
+    got = [r["eps_spent"] for r in doc["rounds"]]
+    assert got == replay_eps_series(tr)  # ==, not allclose: bit-identical
+
+
+def test_eps_series_bit_identical_hetero(tmp_path):
+    path = tmp_path / "hetero.json"
+    tr = tracked_run(f"json:{path}", engine="perround", rounds=4,
+                     subsampling="poisson", dropout=0.3)
+    doc = json.loads(path.read_text())
+    assert [r["realized_n"] for r in doc["rounds"]] == tr.realized_n
+    assert [r["eps_spent"] for r in doc["rounds"]] == replay_eps_series(tr)
+
+
+def test_eps_remaining_tracks_budget(tmp_path):
+    path = tmp_path / "budget.json"
+    tr = tracked_run(f"json:{path}", rounds=4, budget_eps=500.0)
+    doc = json.loads(path.read_text())
+    for row in doc["rounds"]:
+        assert row["eps_remaining"] == max(0.0, 500.0 - row["eps_spent"])
+    spent, remaining = tr.budget_spent()
+    assert doc["rounds"][-1]["eps_spent"] == spent
+    assert doc["rounds"][-1]["eps_remaining"] == remaining
+
+
+def test_secagg_sum_bits(tmp_path):
+    path = tmp_path / "bits.json"
+    tr = tracked_run(f"json:{path}", rounds=2)
+    doc = json.loads(path.read_text())
+    n = SMALL_FED["clients_per_round"]
+    lane = math.ceil(math.log2(tr.mech.sum_bound(n) + 1))
+    assert doc["rounds"][0]["secagg_sum_bits"] == int(tr.flat.size) * lane
+
+
+def test_host_engine_fine_grained_timings(tmp_path):
+    path = tmp_path / "host.json"
+    tracked_run(f"json:{path}", engine="host", rounds=2)
+    doc = json.loads(path.read_text())
+    assert {"stage", "grads", "encode", "secure_sum",
+            "apply", "round_block"} <= set(doc["timings"])
+
+
+# -- resume continues the series ----------------------------------------------
+
+def test_resume_continues_series(tmp_path):
+    """Round indices 1..6 with no duplicates or gaps across a checkpoint
+    restore, and the continued eps series equals the uninterrupted run's
+    bit-for-bit."""
+    mech = lambda: make_mechanism("rqm", c=0.05)
+    cfg = dict(SMALL_FED, rounds=6, ckpt_dir=str(tmp_path / "ckpt"),
+               ckpt_every=3)
+
+    ref_path = tmp_path / "ref.json"
+    ref = FedTrainer(mech(), FedConfig(**dict(SMALL_FED, rounds=6)),
+                     tracker=f"json:{ref_path}")
+    ref.train(rounds=6, **QUIET)
+
+    part_path = tmp_path / "resumed.json"
+    killed = FedTrainer(mech(), FedConfig(**cfg), tracker=f"json:{part_path}")
+    killed.train(rounds=3, **QUIET)  # dies here; checkpoint + json survive
+    del killed
+
+    resumed = FedTrainer(mech(), FedConfig(**cfg),
+                         tracker=f"json:{part_path},append=true")
+    assert resumed.restore_checkpoint() == 3
+    resumed.train(rounds=3, **QUIET)
+
+    got = json.loads(part_path.read_text())
+    want = json.loads(ref_path.read_text())
+    assert [r["round"] for r in got["rounds"]] == [1, 2, 3, 4, 5, 6]
+    assert ([r["eps_spent"] for r in got["rounds"]]
+            == [r["eps_spent"] for r in want["rounds"]])
+    assert ([r["realized_n"] for r in got["rounds"]]
+            == [r["realized_n"] for r in want["rounds"]])
+
+
+def test_on_resume_truncates_overhang(tmp_path):
+    """A crash can land after an emit but before its checkpoint: the
+    restored tracker must drop the rounds past the restore point."""
+    jt = JsonTracker(str(tmp_path / "a.json"))
+    ct = CsvTracker(str(tmp_path / "a.csv"))
+    for t in (jt, ct):
+        t.run_started({"engine": "scan"})
+        for i in range(1, 6):
+            t.log_round({"round": i, "eps_spent": float(i)})
+        t.log_eval({"round": 4, "loss": 0.5})
+        t.on_resume(3)
+    assert [r["round"] for r in jt.doc["rounds"]] == [1, 2, 3]
+    assert jt.doc["evals"] == []
+    ct.close()
+    rows = list(csv.reader((tmp_path / "a.csv").open()))
+    round_col = 1 + ROUND_FIELDS.index("round")
+    assert [r[round_col] for r in rows[1:] if r[0] == "round"] == [
+        "1", "2", "3"]
+    assert not any(r[0] == "eval" for r in rows[1:])
+
+
+def test_noop_is_free_and_default():
+    tr = small_trainer("scan")
+    assert isinstance(tr.tracker, NoopTracker)
+    tr.round(0)
+    assert tr._emitter.emitted == tr.accountant.rounds
