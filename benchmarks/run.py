@@ -19,8 +19,8 @@ sys.path.insert(0, REPO_ROOT)
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig45,fig3,budget,kernels,qopt,"
-                         "roofline")
+                    help="comma list: fig2,fig45,fig3,budget,kernels,async,"
+                         "qopt,roofline")
     ap.add_argument("--fl-rounds", type=int, default=None,
                     help="fig3 round budget (default: the benchmark's own "
                          "full/smoke default; an explicit value wins even "
@@ -102,6 +102,17 @@ def main() -> None:
                 targets=fig_budget.SMOKE_TARGETS,
                 rounds=fig_budget.SMOKE_ROUNDS,
                 fed=fig_budget.SMOKE_FED))
+    if want("async"):
+        import tempfile
+
+        from benchmarks import fig_async
+
+        # the async bench is tracker-instrumented end to end: without a
+        # json dir it still runs, the artifact just lands in a tempdir
+        path = (json_path("BENCH_async.json") if json_dir else
+                os.path.join(tempfile.mkdtemp(), "BENCH_async.json"))
+        attempt("async", lambda: fig_async.bench_json(path,
+                                                      smoke=args.smoke))
     if want("qopt"):
         from benchmarks import beyond_qopt
 

@@ -162,14 +162,18 @@ def main():
                          "'name:k=v,...' spec string; the flags above act "
                          "as defaults for whatever the spec leaves unset")
     ap.add_argument("--engine", default="scan",
-                    choices=list(engine_names()),
-                    help="round engine (any registered engine, "
-                         "docs/engines.md): 'scan' = device-resident "
-                         "jitted blocks (fastest on one device), 'shard' "
-                         "= scan blocks sharded over all visible devices "
-                         "with encoded-domain cross-shard aggregation "
-                         "(see docs/scaling.md), 'perround' = same step "
-                         "driven per round, 'host' = legacy host loop")
+                    help="round engine: a registered name "
+                         f"({', '.join(engine_names())}) or a "
+                         "'name:k=v,...' spec string, e.g. "
+                         "'async:cadence=16,max_staleness=4' "
+                         "(docs/engines.md, docs/async.md): 'scan' = "
+                         "device-resident jitted blocks (fastest on one "
+                         "device), 'shard' = scan blocks sharded over all "
+                         "visible devices with encoded-domain cross-shard "
+                         "aggregation (docs/scaling.md), 'perround' = "
+                         "same step driven per round, 'host' = legacy "
+                         "host loop, 'async' = traffic-shaped buffered "
+                         "aggregation")
     ap.add_argument("--server-opt", default="sgd",
                     help="server optimizer at the decode-then-apply "
                          "boundary: 'sgd' (the paper's w - lr*g_hat), "

@@ -7,8 +7,9 @@ scripts/make_baselines.py) exposes its per-round ``rounds_per_sec``
 series; the bench-suite artifacts (BENCH_fig3.json) expose per-engine
 rounds/sec under ``payloads.engines``. Metrics are matched by name —
 ``<engine>`` for tracked runs, ``fig3/<engine>`` for the fig3 suite —
-and only names present on BOTH sides are compared, so partial artifact
-sets never fail spuriously.
+and names present on BOTH sides are compared; a baseline metric with no
+fresh counterpart is reported as MISSING (a bench silently dropped from
+the suite is itself a regression — it fails under ``--strict``).
 
 Default mode only warns (CI containers are noisy neighbors; the push
 lane prints the comparison next to the uploaded artifacts for a human
@@ -82,6 +83,14 @@ def main():
         print(f"[bench-check] no shared metrics between {args.baselines} "
               f"({sorted(base)}) and {args.current} ({sorted(cur)})")
         return 0
+    # a baseline metric the fresh artifacts no longer produce is itself a
+    # finding (a bench silently dropped from the suite, a renamed metric,
+    # a crashed run whose artifact never landed) — never skip it silently
+    missing = sorted(set(base) - set(cur))
+    for name in missing:
+        print(f"[bench-check] {name}: baseline {base[name]:.2f} rounds/s "
+              f"has NO fresh counterpart in {args.current} — MISSING",
+              file=sys.stderr)
 
     regressions = []
     for name in shared:
@@ -97,6 +106,8 @@ def main():
               f"drop on {', '.join(regressions)} — compare artifacts "
               f"before trusting (containers are noisy; see "
               f"scripts/make_baselines.py)", file=sys.stderr)
+        return 1 if args.strict else 0
+    if missing:
         return 1 if args.strict else 0
     print(f"[bench-check] all {len(shared)} shared metrics within "
           f"{args.threshold:.0%} of baseline")

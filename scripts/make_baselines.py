@@ -4,7 +4,9 @@ One smoke-scale FedTrainer run per registered round engine (scan,
 perround, host, shard), each emitting its per-round series through the
 JSON tracker into ``benchmarks/baselines/BENCH_<engine>.json`` — the
 SAME document schema every tracked run and BENCH artifact uses
-(docs/telemetry.md). The committed files serve two jobs:
+(docs/telemetry.md). The async engine's baseline comes from its
+population-scale bench instead (benchmarks/fig_async.py — streamed
+staging at N=1e6 simulated clients), same artifact shape. The committed files serve two jobs:
 
   * golden schema anchors: tests and readers see a real tracked series
     for every engine, not a synthetic example;
@@ -25,7 +27,7 @@ from repro.core.mechanisms import make_mechanism
 from repro.fed import FedConfig, FedTrainer
 from repro.telemetry import JsonTracker
 
-ENGINES = ("scan", "perround", "host", "shard")
+ENGINES = ("scan", "perround", "host", "shard", "async")
 SPEC = "rqm:c=0.02,m=16,q=0.42"
 ROUNDS = 8
 FED = dict(num_clients=48, clients_per_round=8, lr=1.0, eval_size=64,
@@ -34,6 +36,18 @@ FED = dict(num_clients=48, clients_per_round=8, lr=1.0, eval_size=64,
 
 def run_engine(engine: str, out_dir: str, rounds: int = ROUNDS) -> str:
     path = os.path.join(out_dir, f"BENCH_{engine}.json")
+    if engine == "async":
+        # the async baseline is the population-scale traffic-shaped bench
+        # (streamed staging at N=1e6), not a tracked smoke run — the same
+        # artifact the CI bench lane regenerates via `run.py --only async`
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        from benchmarks import fig_async
+
+        summary = fig_async.bench_json(path, smoke=True)
+        print(f"wrote {path} (peak {summary['rounds_per_sec_peak']:.2f} "
+              f"rounds/s at N={summary['population']})")
+        return path
     tracker = JsonTracker(path)
     tr = FedTrainer(make_mechanism(SPEC),
                     FedConfig(engine=engine, rounds=rounds, **FED),

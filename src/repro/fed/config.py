@@ -36,7 +36,12 @@ class FedConfig:
     # quantity is still one [-c,c]^f vector per client per round).
     local_steps: int = 1
     local_lr: float = 0.1
-    engine: str = "scan"  # any registered engine: scan|perround|host|shard
+    # Any registered engine name (scan|perround|host|shard|async) or an
+    # engine SPEC STRING ("async:cadence=64,max_staleness=8") — resolved
+    # through fed.engine.make_engine, which validates the options against
+    # the engine's declared spec_options and normalizes this field to the
+    # bare name with the namespaced fields below set.
+    engine: str = "scan"
     # Server optimizer (Algorithm 1 line 11 generalized): the decode-then-
     # apply boundary of EVERY engine routes the decoded aggregate g_hat
     # through a repro.optim.Optimizer — "sgd" (the paper's w - lr*g_hat,
@@ -75,6 +80,29 @@ class FedConfig:
     shards: Optional[int] = None
     staging: str = "full"
     shard_packed: Optional[bool] = None
+    # async engine (engine="async"; docs/async.md): FedBuff-style
+    # buffered aggregation under a seeded arrival process. async_cadence
+    # is how many buffered updates the server drains per aggregation
+    # (None = clients_per_round); async_max_staleness bounds how many
+    # versions old a buffered update's parameters may be (0 = every
+    # client computes on the current version — with no timeout and full
+    # staging this reduces bit-identically to the synchronous engines);
+    # async_staleness_weight scales the DECODED aggregate ("uniform" or
+    # "poly:<a>" — post-processing, never touches accounting);
+    # async_arrivals is an arrival-process spec (fed/arrivals.py:
+    # "poisson", "diurnal", "diurnal:period=24,amplitude=0.5");
+    # async_rate is arrivals per unit sim time (None = cadence, i.e.
+    # ~one aggregation per unit); async_latency is the mean exponential
+    # client compute latency; with async_timeout set, clients slower
+    # than it become stragglers — masked out of the SecAgg sum, the
+    # aggregation accounted at the realized surviving count.
+    async_cadence: Optional[int] = None
+    async_max_staleness: int = 0
+    async_staleness_weight: str = "uniform"
+    async_arrivals: str = "poisson"
+    async_rate: Optional[float] = None
+    async_latency: float = 1.0
+    async_timeout: Optional[float] = None
     # Cohort realization (all engines; see docs/privacy.md).
     # subsampling="fixed" (default) samples exactly clients_per_round
     # clients without replacement — every round has the same cohort size.

@@ -24,7 +24,8 @@ See docs/engines.md for the worked example and the trainer-side contract
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Callable, ClassVar, Dict, Type
+import dataclasses
+from typing import TYPE_CHECKING, Callable, ClassVar, Dict, Tuple, Type
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.mechanisms import Mechanism
@@ -65,6 +66,80 @@ def get_engine(name: str) -> Type["Engine"]:
     return cls
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """A parsed engine spec: the registered name + validated overrides.
+
+    ``overrides`` maps FedConfig FIELD names (already translated from
+    the engine's spec option names) to values; ``apply(cfg)`` returns a
+    config copy with ``engine`` normalized to the bare name and the
+    overrides set — the caller's config object is never mutated.
+    """
+
+    name: str
+    options: Tuple[Tuple[str, object], ...] = ()
+    overrides: Tuple[Tuple[str, object], ...] = ()
+
+    def apply(self, cfg: "FedConfig") -> "FedConfig":
+        return dataclasses.replace(
+            cfg, engine=self.name, **dict(self.overrides)
+        )
+
+    def spec(self) -> str:
+        """Canonical spec string: ``make_engine(es.spec())`` parses back
+        to an equal EngineSpec (the round-trip the tests pin)."""
+        if not self.options:
+            return self.name
+        body = ",".join(f"{k}={v}" for k, v in self.options)
+        return f"{self.name}:{body}"
+
+
+def parse_engine_spec(spec: str) -> tuple:
+    """Normalize an engine spec to ``(name, explicit_options)`` — the
+    same ``"name:k=v,k=v"`` grammar as mechanism and tracker specs
+    (``core.mechanisms.parse_mechanism_spec``)."""
+    from repro.core.mechanisms import parse_mechanism_spec
+
+    if not isinstance(spec, str):
+        raise TypeError(f"engine spec must be a str, got {type(spec)}")
+    name, opts = parse_mechanism_spec(spec)
+    if not name:
+        raise ValueError(f"empty engine name in spec {spec!r}")
+    return name, opts
+
+
+def make_engine(spec) -> EngineSpec:
+    """Resolve an engine spec string (or bare name, or EngineSpec) to an
+    ``EngineSpec`` — mirroring ``make_mechanism``/``make_tracker``, except
+    an engine cannot be INSTANTIATED without a trainer, so the product is
+    the validated (name, config-overrides) pair ``FedTrainer`` applies:
+
+        make_engine("async:cadence=64,max_staleness=8")
+
+    Explicit options are validated against the registered engine's
+    declared ``spec_options`` (option name -> FedConfig field); unknown
+    options raise with the accepted set.
+    """
+    if isinstance(spec, EngineSpec):
+        get_engine(spec.name)  # unknown-name check even when prebuilt
+        return spec
+    name, opts = parse_engine_spec(spec)
+    cls = get_engine(name)
+    unknown = set(opts) - set(cls.spec_options)
+    if unknown:
+        accepted = sorted(cls.spec_options)
+        raise ValueError(
+            f"engine {name!r} does not accept option(s) {sorted(unknown)}; "
+            f"accepted: {accepted if accepted else '(none)'}"
+        )
+    overrides = tuple(
+        (cls.spec_options[k], v) for k, v in sorted(opts.items())
+    )
+    return EngineSpec(
+        name=name, options=tuple(sorted(opts.items())), overrides=overrides
+    )
+
+
 class Engine:
     """One way of running Algorithm-1 rounds for a FedTrainer.
 
@@ -93,6 +168,10 @@ class Engine:
     blocked: ClassVar[bool] = False
     stages_population: ClassVar[bool] = True
     supports_streaming: ClassVar[bool] = False
+    # Engine spec-string surface (``make_engine("name:k=v,...")``): maps
+    # each accepted spec option to the FedConfig FIELD it sets. Engines
+    # with no spec options accept only their bare name.
+    spec_options: ClassVar[Dict[str, str]] = {}
 
     def __init__(self, trainer: "FedTrainer"):
         self.tr = trainer

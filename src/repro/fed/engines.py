@@ -1,4 +1,7 @@
-"""The four registered round engines: scan, perround, host, shard.
+"""The synchronous registered round engines: scan, perround, host, shard.
+(The fifth, buffered-asynchronous ``"async"``, lives in
+``fed/async_engine.py`` and registers itself via the import at the
+bottom of this module, keeping registration order stable.)
 
 Same Algorithm-1 semantics under every engine (see the package docstring
 in ``repro/fed/__init__.py`` and docs/engines.md); what differs is HOW
@@ -38,6 +41,7 @@ class ScanEngine(Engine):
     transfers and zero dispatch per round."""
 
     blocked = True
+    spec_options = {"block": "scan_block", "unroll": "scan_unroll"}
 
     def build(self):
         tr = self.tr
@@ -198,6 +202,9 @@ class ShardEngine(Engine):
 
     blocked = True
     supports_streaming = True
+    spec_options = {
+        "shards": "shards", "staging": "staging", "packed": "shard_packed"
+    }
 
     def __init__(self, trainer):
         super().__init__(trainer)
@@ -288,3 +295,8 @@ class ShardEngine(Engine):
             done += step
         if not tr._hetero:
             tr._account(n_rounds)
+
+
+# Fifth engine, registered LAST so engine_names() order stays
+# (scan, perround, host, shard, async) — the order the registry tests pin.
+from repro.fed import async_engine as _async_engine  # noqa: E402,F401

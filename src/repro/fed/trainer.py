@@ -28,7 +28,7 @@ from repro.data.federated import FederatedPartition
 from repro.fed import checkpointing, cohort, rounds, staging
 from repro.fed.cnn import cnn_accuracy, cnn_init, cnn_loss
 from repro.fed.config import FedConfig, validate_config
-from repro.fed.engine import get_engine
+from repro.fed.engine import get_engine, make_engine
 from repro.fed import engines as _engines  # noqa: F401  (registers the four)
 from repro.optim import make_optimizer
 from repro.telemetry import RoundEmitter, Timings, make_tracker
@@ -36,7 +36,14 @@ from repro.telemetry import RoundEmitter, Timings, make_tracker
 
 class FedTrainer:
     def __init__(self, mech: Mechanism, fed_cfg: FedConfig, tracker=None):
-        engine_cls = get_engine(fed_cfg.engine)  # "unknown engine" first
+        # cfg.engine is a bare registered name OR a spec string
+        # ("async:cadence=64,max_staleness=8"): make_engine parses and
+        # validates it ("unknown engine" first), apply() normalizes the
+        # field to the bare name with the spec's config overrides set —
+        # on a COPY, never mutating the caller's config object.
+        espec = make_engine(fed_cfg.engine)
+        fed_cfg = espec.apply(fed_cfg)
+        engine_cls = get_engine(espec.name)
         validate_config(fed_cfg)
         engine_cls.validate(fed_cfg, mech)
         self.mech = mech
@@ -71,6 +78,10 @@ class FedTrainer:
         # realized cohort size per round (every engine appends here; for
         # fixed cohorts without dropout it is constantly clients_per_round)
         self.realized_n: list = []
+        # per-round tracker extras (engines may append one dict per round
+        # — e.g. the async engine's staleness/arrival stats — folded into
+        # the round records' "extra" column, schema untouched)
+        self.round_extras: list = []
         self.partition = FederatedPartition(
             num_clients=fed_cfg.num_clients,
             samples_per_client=fed_cfg.samples_per_client,
@@ -179,7 +190,7 @@ class FedTrainer:
             jax.block_until_ready(self.flat)
             self._emitter.emit(
                 self.accountant.history, self.realized_n,
-                time.perf_counter() - t0,
+                time.perf_counter() - t0, extras=self.round_extras,
             )
         else:
             self._emitter.emitted = self.accountant.rounds

@@ -3,7 +3,7 @@ in, privately-aggregated rounds out, health through the metrics plane.
 
 ``AggregatorServer`` is the service-shaped counterpart of ``FedTrainer``:
 instead of synthesizing its own cohorts it ACCEPTS already-encoded client
-update batches (``submit``), continuous-batching style like
+updates (``submit``), continuous-batching style like
 examples/serve_demo.py — a bounded queue applies backpressure (blocking
 ``submit`` waits for room; non-blocking submits are rejected and
 counted), and an aggregation loop drains the queue on a cadence: every
@@ -12,6 +12,19 @@ integer domain, ``mech.decode_sum`` at the REALIZED count, one server-
 optimizer step — accounted by the same exact Renyi accountant the
 trainer uses and emitted through the same telemetry RoundEmitter, so a
 service round's record is schema-identical to a training round's.
+
+Intake is TYPED (``fed/updates.py``): ``submit`` takes ``ClientUpdate``
+objects (client id, the model version fetched, {0,1} participation
+weight, integer payload) — shape/dtype validation lives on the
+dataclass, and the legacy bare ``(k, dim)`` array form still works
+behind a ``DeprecationWarning`` shim. With ``engine="async:..."`` the
+server runs the async engine's buffered-aggregation policy over the
+real stream (docs/async.md): updates staler than ``max_staleness``
+model versions are discarded (a remote client cannot be made to
+refetch), weight-0 stragglers are masked out of the SecAgg sum with the
+round accounted at the realized surviving count, and the staleness-
+weight policy discounts the DECODED aggregate (post-processing of the
+privatized release — the accounting is untouched).
 
 The privacy budget is enforced BEFORE a round applies: the projected
 (eps, delta)-DP spend of the candidate round is checked against
@@ -39,6 +52,7 @@ import json
 import queue
 import threading
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -48,8 +62,50 @@ import numpy as np
 from repro.checkpoint import store
 from repro.core.mechanisms import Mechanism, make_mechanism
 from repro.core.renyi import RenyiAccountant
+from repro.fed.engine import make_engine
+from repro.fed.updates import (ClientUpdate, StalenessPolicy, UpdateBuffer,
+                               as_updates)
 from repro.optim import make_optimizer
 from repro.telemetry import RoundEmitter, Timings, make_tracker
+
+# the aggregation-policy knobs an "async:..." engine spec may set here:
+# the rest of the async surface (arrival process, latency, timeout) is
+# SIMULATION — this server receives real traffic and real lateness.
+_POLICY_OPTIONS = ("cadence", "max_staleness", "staleness_weight")
+
+
+def _resolve_policy(engine: Optional[str], cohort: int):
+    """(engine_label, StalenessPolicy, cohort) for an engine spec.
+
+    ``None`` (or "aggregator") keeps the legacy synchronous-cadence
+    behavior: admit everything, no discount. An ``"async[:...]"`` spec
+    adopts the async engine's buffered-aggregation policy, with
+    ``cadence`` overriding the ``cohort`` constructor argument."""
+    if engine is None or engine == "aggregator":
+        return "aggregator", StalenessPolicy(), cohort
+    espec = make_engine(engine)
+    if espec.name != "async":
+        raise ValueError(
+            f"AggregatorServer aggregation policy must be 'async' (or "
+            f"None for the legacy cadence), got engine {espec.name!r}"
+        )
+    opts = dict(espec.options)
+    unknown = set(opts) - set(_POLICY_OPTIONS)
+    if unknown:
+        raise ValueError(
+            f"aggregator engine spec accepts only {_POLICY_OPTIONS} "
+            f"(arrival/latency/timeout options describe SIMULATED "
+            f"traffic; this server receives real traffic), got "
+            f"{sorted(unknown)}"
+        )
+    cohort = int(opts.get("cadence", cohort))
+    max_staleness = opts.get("max_staleness")
+    policy = StalenessPolicy(
+        max_staleness=(int(max_staleness)
+                       if max_staleness is not None else None),
+        weight=str(opts.get("staleness_weight", "uniform")),
+    )
+    return "async", policy, cohort
 
 
 class AggregatorServer:
@@ -63,7 +119,9 @@ class AggregatorServer:
                  budget_delta: float = 1e-5,
                  alphas: tuple = (2.0, 4.0, 8.0, 16.0, 32.0),
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
-                 tracker=None, init_flat=None):
+                 tracker=None, init_flat=None,
+                 engine: Optional[str] = None):
+        self.engine, self.policy, cohort = _resolve_policy(engine, cohort)
         if cohort < 1:
             raise ValueError(f"cohort must be >= 1, got {cohort}")
         if queue_limit < 1:
@@ -93,12 +151,16 @@ class AggregatorServer:
         # for the aggregation loop to make room, a non-blocking one is
         # refused (and counted) — producers never grow server memory
         self.queue: queue.Queue = queue.Queue(maxsize=queue_limit)
-        self._pending: list = []  # drained rows awaiting a full cohort
+        # drained updates awaiting a full cohort: a staleness-aware FIFO
+        # of typed ClientUpdates (fed/updates.py) — the same buffer/policy
+        # semantics as the async engine's simulated aggregations
+        self.buffer = UpdateBuffer(self.policy)
         self._queued_updates = 0  # rows still inside the queue
         self.rounds_served = 0
         self.updates_aggregated = 0
         self.batches_accepted = 0
         self.batches_rejected = 0
+        self.round_extras: list = []  # per-round staleness stats (tracker)
         self.halted = False
         self._eps_by_n: dict = {}
         self._t0 = time.time()
@@ -108,7 +170,7 @@ class AggregatorServer:
         self.timings = Timings()
         self.tracker = make_tracker(tracker)
         self._emitter = RoundEmitter(
-            self.tracker, engine="aggregator", mechanism=mech,
+            self.tracker, engine=self.engine, mechanism=mech,
             alphas=self.accountant.alphas, delta=self.budget_delta,
             budget_eps=budget_eps, dim=self.dim,
         )
@@ -122,7 +184,8 @@ class AggregatorServer:
         return {
             "kind": "aggregator",
             "fingerprint": bytes(self._fingerprint()).hex(),
-            "engine": "aggregator",
+            "engine": self.engine,
+            "staleness_policy": self.policy.describe(),
             "mechanism": self.mech.describe(),
             "mechanism_spec": self.mech.spec(),
             "dim": self.dim,
@@ -148,19 +211,32 @@ class AggregatorServer:
         return np.frombuffer(hashlib.sha256(blob.encode()).digest(), np.uint8)
 
     # -- intake --------------------------------------------------------------
+    def current_version(self) -> int:
+        """The model version a fetching client should stamp into its
+        ``ClientUpdate.round_tag`` — one version per aggregation served."""
+        return self.rounds_served
+
     def submit(self, updates, block: bool = True,
                timeout: Optional[float] = None) -> bool:
-        """Enqueue one batch of already-encoded client updates
-        ((k, dim), the mechanism's encode/encode_batch output). Returns
-        True when accepted. With ``block=True`` a full queue WAITS
-        (backpressure) up to ``timeout``; otherwise the batch is refused
-        immediately. A halted (budget-exhausted) server refuses
+        """Enqueue one batch of already-encoded client updates: a
+        ``ClientUpdate``, a sequence of them, or (DEPRECATED) a bare
+        ``(k, dim)`` array — one row per client, upgraded to unversioned
+        ``ClientUpdate``s behind a ``DeprecationWarning``. Shape/dtype
+        validation lives on the dataclass (``ClientUpdate.validate``).
+        Returns True when accepted. With ``block=True`` a full queue
+        WAITS (backpressure) up to ``timeout``; otherwise the batch is
+        refused immediately. A halted (budget-exhausted) server refuses
         everything."""
-        updates = np.asarray(updates)
-        if updates.ndim != 2 or updates.shape[1] != self.dim:
-            raise ValueError(
-                f"updates must be (k, {self.dim}), got {updates.shape}"
+        if not (isinstance(updates, ClientUpdate)
+                or (isinstance(updates, (list, tuple)) and updates
+                    and all(isinstance(u, ClientUpdate) for u in updates))):
+            warnings.warn(
+                "bare-array AggregatorServer.submit() is deprecated; "
+                "pass ClientUpdate objects (repro.fed.updates) so the "
+                "server knows the model version each client fetched",
+                DeprecationWarning, stacklevel=2,
             )
+        updates = [u.validate(self.dim) for u in as_updates(updates)]
         if self.halted:
             self.batches_rejected += 1
             return False
@@ -182,17 +258,23 @@ class AggregatorServer:
                 batch = self.queue.get_nowait()
             except queue.Empty:
                 return
-            self._pending.extend(np.asarray(batch))
+            self.buffer.extend(batch)
             self._queued_updates -= len(batch)
 
     # -- accounting ----------------------------------------------------------
     def _eps_vector(self, n: int) -> np.ndarray:
         n = int(n)
         if n not in self._eps_by_n:
-            self._eps_by_n[n] = np.asarray([
-                self.mech.per_round_epsilon(n, a)
-                for a in self.accountant.alphas
-            ])
+            if n <= 0:
+                # all-straggler aggregation: the all-zero SecAgg sum is
+                # data-independent — nothing released, nothing spent
+                v = np.zeros(len(self.accountant.alphas))
+            else:
+                v = np.asarray([
+                    self.mech.per_round_epsilon(n, a)
+                    for a in self.accountant.alphas
+                ])
+            self._eps_by_n[n] = v
         return self._eps_by_n[n]
 
     def budget_spent(self) -> tuple:
@@ -205,7 +287,7 @@ class AggregatorServer:
     def buffered_updates(self) -> int:
         """Client updates accepted but not yet aggregated (queued rows
         plus the drained partial cohort)."""
-        return self._queued_updates + len(self._pending)
+        return self._queued_updates + len(self.buffer)
 
     # -- the aggregation cadence ---------------------------------------------
     def step(self) -> bool:
@@ -219,11 +301,18 @@ class AggregatorServer:
             if self.halted:
                 return False
             self._drain_queue()
-            if len(self._pending) < self.cohort:
+            version = self.current_version()
+            # the staleness policy prunes first (updates staler than
+            # max_staleness model versions are discarded — a remote
+            # client cannot be made to refetch), then the candidate
+            # cohort is PEEKED so the budget check sees its realized
+            # size before anything is committed
+            candidates = self.buffer.peek(self.cohort, version)
+            if len(candidates) < self.cohort:
                 return False
-            n = self.cohort
-            vec = self._eps_vector(n)
-            if self.budget_eps is not None:
+            n_real = sum(u.weight for u in candidates)
+            vec = self._eps_vector(n_real)
+            if self.budget_eps is not None and n_real > 0:
                 projected, _ = self.accountant.projected_dp_epsilon(
                     self.budget_delta, vec, rounds=1
                 )
@@ -233,24 +322,48 @@ class AggregatorServer:
                     self.publish_snapshot()
                     self.tracker.flush()
                     return False
-            take = self._pending[:n]
-            del self._pending[:n]
+            take = self.buffer.take(self.cohort, version)
             t0 = time.perf_counter()
             with self.timings.scope("secure_sum"):
-                z = np.stack(take)
-                z_sum = jnp.asarray(z.sum(axis=0))  # SecAgg sum emulation
-            with self.timings.scope("apply"):
-                g_hat = self._decode(z_sum, n)
-                self.flat, self.opt_state = self.server_opt.update(
-                    g_hat, self.opt_state, self.flat, self.lr
-                )
-                jax.block_until_ready(self.flat)
-            self.realized_n.append(n)
+                # weight-0 stragglers are masked OUT of the SecAgg sum
+                # ({0,1} weights only — fed/updates.py); the round is
+                # accounted at the surviving count
+                z = np.stack([u.payload for u in take])
+                w = np.asarray([u.weight for u in take], z.dtype)
+                z_sum = jnp.asarray((z * w[:, None]).sum(axis=0))
+            if n_real > 0:
+                with self.timings.scope("apply"):
+                    g_hat = self._decode(z_sum, n_real)
+                    disc = self.policy.discount(
+                        [u.staleness for u in take if u.weight]
+                    )
+                    if disc != 1.0:
+                        # scalar staleness discount: post-processing of
+                        # the privatized release, accounting untouched
+                        g_hat = g_hat * disc
+                    self.flat, self.opt_state = self.server_opt.update(
+                        g_hat, self.opt_state, self.flat, self.lr
+                    )
+                    jax.block_until_ready(self.flat)
+            else:
+                disc = 1.0
+            self.realized_n.append(n_real)
             self.accountant.step(vec)
             self.rounds_served += 1
-            self.updates_aggregated += n
+            self.updates_aggregated += n_real
+            stal = [u.staleness for u in take]
+            self.round_extras.append({
+                "arrived": len(take),
+                "delivered": n_real,
+                "staleness_mean": float(np.mean(stal)) if stal else 0.0,
+                "staleness_max": int(np.max(stal)) if stal else 0,
+                "updates_discarded": self.buffer.discarded,
+                **({"staleness_discount": float(disc)}
+                   if self.engine == "async" else {}),
+            })
             self._emitter.emit(self.accountant.history, self.realized_n,
-                               time.perf_counter() - t0)
+                               time.perf_counter() - t0,
+                               extras=self.round_extras)
             if (self.ckpt_dir and self.ckpt_every
                     and self.rounds_served % self.ckpt_every == 0):
                 self.save_checkpoint()
@@ -309,8 +422,11 @@ class AggregatorServer:
         rounds served (plus intake counters and uptime)."""
         spent, remaining = self.budget_spent()
         return {
+            "engine": self.engine,
+            "staleness_policy": self.policy.describe(),
             "rounds_served": self.rounds_served,
             "updates_aggregated": self.updates_aggregated,
+            "updates_discarded": self.buffer.discarded,
             "queue_depth": self.queue.qsize(),
             "queue_limit": self.queue.maxsize,
             "pending_updates": self.buffered_updates(),
@@ -396,6 +512,19 @@ def simulate_client_batch(mech: Mechanism, dim: int, key, k: int):
     return np.asarray(mech.encode_batch(grads, k_e))
 
 
+def simulate_client_updates(mech: Mechanism, dim: int, key, k: int, *,
+                            round_tag: int, first_id: int = 0) -> list:
+    """The typed form of the simulated stream: the same encoded bytes,
+    wrapped as ``ClientUpdate``s stamped with the model version the
+    clients fetched — what a real (versioned) client deployment submits."""
+    rows = simulate_client_batch(mech, dim, key, k)
+    return [
+        ClientUpdate(payload=row, client_id=first_id + i,
+                     round_tag=round_tag)
+        for i, row in enumerate(rows)
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="Long-lived aggregator round-server over a simulated "
@@ -405,6 +534,11 @@ def main():
     ap.add_argument("--dim", type=int, default=512)
     ap.add_argument("--cohort", type=int, default=8,
                     help="updates aggregated per round")
+    ap.add_argument("--engine", default=None,
+                    help="aggregation policy: None = legacy synchronous "
+                         "cadence; an async engine spec adopts buffered-"
+                         "async semantics, e.g. "
+                         "'async:max_staleness=4,staleness_weight=poly:0.5'")
     ap.add_argument("--batch", type=int, default=4,
                     help="client updates per submitted batch")
     ap.add_argument("--batches", type=int, default=16,
@@ -442,7 +576,7 @@ def main():
         server_opt=args.server_opt, queue_limit=args.queue_limit,
         budget_eps=args.budget_eps, budget_delta=args.budget_delta,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        tracker=args.track,
+        tracker=args.track, engine=args.engine,
     )
     if args.resume:
         step = server.resume()
@@ -452,7 +586,14 @@ def main():
         key = jax.random.key(0)
         for i in range(args.batches):
             key, sub = jax.random.split(key)
-            batch = simulate_client_batch(mech, args.dim, sub, args.batch)
+            # typed intake: each simulated client stamps the model
+            # version it fetched (the aggregation policy prunes/weights
+            # by realized staleness)
+            batch = simulate_client_updates(
+                mech, args.dim, sub, args.batch,
+                round_tag=server.current_version(),
+                first_id=i * args.batch,
+            )
             t0 = time.time()
             accepted = server.submit(batch, block=True, timeout=10.0)
             waited = time.time() - t0

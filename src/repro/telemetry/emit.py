@@ -64,11 +64,16 @@ class RoundEmitter:
             self._sum_bits_by_n[n] = int(self.dim * lane)
         return self._sum_bits_by_n[n]
 
-    def emit(self, history, realized_n, elapsed: float) -> int:
+    def emit(self, history, realized_n, elapsed: float,
+             extras=None) -> int:
         """Emit one record per not-yet-emitted round in ``history`` (the
         accountant's per-round eps vectors) / ``realized_n``, stamping
-        each with the advance's aggregate rounds/sec. Returns the number
-        of records emitted."""
+        each with the advance's aggregate rounds/sec. ``extras`` is an
+        optional per-round list of dicts (indexed like ``history``) whose
+        keys ride each record — the tracker folds unknown keys into the
+        schema's trailing "extra" column, so engine-specific stats (the
+        async engine's staleness/arrival columns) never perturb the
+        pinned schema. Returns the number of records emitted."""
         total = len(history)
         new = total - self.emitted
         if new <= 0:
@@ -92,6 +97,9 @@ class RoundEmitter:
                 "rounds_per_sec": rps,
                 "secagg_sum_bits": self.secagg_sum_bits(n),
             }
+            if extras is not None and i < len(extras) and extras[i]:
+                for k, v in extras[i].items():
+                    rec.setdefault(k, v)
             self.tracker.log_round(rec)
         self.emitted = total
         return new

@@ -13,7 +13,9 @@ import pytest
 
 from repro.core.mechanisms import make_mechanism
 from repro.core.renyi import RenyiAccountant
-from repro.launch.aggregator import AggregatorServer, simulate_client_batch
+from repro.fed.updates import ClientUpdate
+from repro.launch.aggregator import (AggregatorServer, simulate_client_batch,
+                                     simulate_client_updates)
 from repro.telemetry import JsonTracker
 
 DIM = 64
@@ -84,8 +86,10 @@ def test_backpressure_rejects_when_full():
 
 
 def test_submit_validates_shape():
+    # shape/dtype validation lives on the ClientUpdate dataclass now
+    # (fed/updates.py); the bare-array shim still routes through it
     server = make_server()
-    with pytest.raises(ValueError, match="updates must be"):
+    with pytest.raises(ValueError, match="payload must be"):
         server.submit(np.zeros((4, DIM + 1), np.int32))
     with pytest.raises(ValueError, match="updates must be"):
         server.submit(np.zeros(DIM, np.int32))
@@ -220,3 +224,171 @@ def test_queue_is_bounded():
     server = make_server(queue_limit=3)
     assert isinstance(server.queue, queue.Queue)
     assert server.queue.maxsize == 3
+
+
+# -- the typed client-update intake (fed/updates.py) -------------------------
+
+def feed_typed(server, batches, batch_size=4, seed=0):
+    key = jax.random.key(seed)
+    for i in range(batches):
+        key, sub = jax.random.split(key)
+        batch = simulate_client_updates(
+            server.mech, DIM, sub, batch_size,
+            round_tag=server.current_version(), first_id=i * batch_size,
+        )
+        assert server.submit(batch) is True
+
+
+def test_typed_submit_is_the_first_class_form(recwarn):
+    server = make_server()
+    feed_typed(server, batches=3)
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+    assert server.drain() == 3
+    assert server.realized_n == [4, 4, 4]
+
+
+def test_bare_array_shim_warns_and_still_works():
+    server = make_server()
+    key = jax.random.key(0)
+    with pytest.warns(DeprecationWarning, match="ClientUpdate"):
+        server.submit(simulate_client_batch(server.mech, DIM, key, 4))
+    assert server.drain() == 1
+    assert server.realized_n == [4]
+
+
+def test_typed_and_bare_forms_aggregate_identically():
+    """The shim is a wrapper, not a second code path: the same encoded
+    rows land in the same SecAgg sum either way."""
+    key = jax.random.key(3)
+    rows = simulate_client_batch(make_server().mech, DIM, key, 4)
+    a, b = make_server(), make_server()
+    with pytest.warns(DeprecationWarning):
+        a.submit(rows)
+    b.submit([ClientUpdate(payload=r, round_tag=0) for r in rows])
+    assert a.drain() == b.drain() == 1
+    np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+
+
+def test_single_update_submit():
+    server = make_server(cohort=1)
+    key = jax.random.key(1)
+    (update,) = simulate_client_updates(server.mech, DIM, key, 1,
+                                        round_tag=0)
+    assert server.submit(update) is True
+    assert server.drain() == 1
+
+
+# -- the async aggregation policy (engine="async:...") -----------------------
+
+def test_async_policy_resolves_from_engine_spec():
+    server = make_server(
+        engine="async:cadence=2,max_staleness=1,staleness_weight=poly:0.5"
+    )
+    assert server.engine == "async"
+    assert server.cohort == 2  # cadence overrides the cohort argument
+    snap = server.snapshot()
+    assert snap["engine"] == "async"
+    assert snap["staleness_policy"] == "staleness <=1, weight poly:0.5"
+
+
+def test_legacy_default_admits_everything():
+    server = make_server()
+    assert server.engine == "aggregator"
+    assert server.policy.max_staleness is None
+    assert server.snapshot()["staleness_policy"] == (
+        "staleness unbounded, weight uniform")
+
+
+def test_simulation_only_options_rejected():
+    with pytest.raises(ValueError, match="SIMULATED"):
+        make_server(engine="async:timeout=2.0")
+    with pytest.raises(ValueError, match="must be 'async'"):
+        make_server(engine="scan")
+
+
+def test_stale_updates_discarded_not_aggregated():
+    """max_staleness=0: an update that missed its aggregation window is
+    pruned (a remote client cannot be made to refetch), counted in
+    updates_discarded, and never enters a SecAgg sum."""
+    server = make_server(engine="async:cadence=2,max_staleness=0")
+    key = jax.random.key(0)
+    server.submit(simulate_client_updates(server.mech, DIM, key, 4,
+                                          round_tag=0))
+    assert server.step() is True   # first 2: staleness 0, aggregated
+    assert server.step() is False  # remaining 2 now stale: pruned
+    assert server.buffer.discarded == 2
+    assert server.buffered_updates() == 0
+    snap = server.snapshot()
+    assert snap["rounds_served"] == 1
+    assert snap["updates_discarded"] == 2
+    assert server.round_extras[0]["updates_discarded"] == 0
+
+
+def test_straggler_weight_zero_accounts_surviving_count():
+    """Weight-0 members fill their buffer slot but are masked out of the
+    sum; the round is accounted at the SURVIVING count (fewer clients =>
+    strictly more eps, never less)."""
+    server = make_server()
+    key = jax.random.key(2)
+    updates = simulate_client_updates(server.mech, DIM, key, 4, round_tag=0)
+    import dataclasses as _dc
+    updates[0] = _dc.replace(updates[0], weight=0)
+    server.submit(updates)
+    assert server.step() is True
+    assert server.realized_n == [3]
+    np.testing.assert_array_equal(server.accountant.history[0],
+                                  server._eps_vector(3))
+    assert np.all(server._eps_vector(3) >= server._eps_vector(4))
+
+
+def test_all_stragglers_release_nothing():
+    server = make_server()
+    updates = [ClientUpdate(payload=np.zeros(DIM, np.int32), client_id=i,
+                            round_tag=0, weight=0) for i in range(4)]
+    before = np.asarray(server.flat).copy()
+    server.submit(updates)
+    assert server.step() is True  # the cohort slot count was met...
+    assert server.realized_n == [0]  # ...but nobody survived
+    np.testing.assert_array_equal(np.asarray(server.flat), before)
+    np.testing.assert_array_equal(server.accountant.history[0],
+                                  np.zeros_like(server.accountant.history[0]))
+
+
+def test_staleness_discount_rides_the_tracked_records(tmp_path):
+    path = tmp_path / "agg.json"
+    server = make_server(
+        engine="async:cadence=4,max_staleness=8,staleness_weight=poly:0.5",
+        tracker=f"json:{path}",
+    )
+    key = jax.random.key(5)
+    # tag everything at version 0, then serve 2 rounds: round 2's buffer
+    # aggregates at version 1 => realized staleness 1, discount < 1
+    server.submit(simulate_client_updates(server.mech, DIM, key, 8,
+                                          round_tag=0))
+    assert server.drain() == 2
+    server.shutdown()
+    doc = json.loads(path.read_text())
+    extras = [r["extra"] for r in doc["rounds"]]
+    assert extras[0]["staleness_discount"] == 1.0
+    assert extras[1]["staleness_discount"] == pytest.approx(2 ** -0.5)
+    assert extras[1]["staleness_mean"] == 1.0
+    assert doc["meta"]["engine"] == "async"
+    assert "staleness_policy" in doc["meta"]
+
+
+def test_eps_series_unchanged_by_async_policy(tmp_path):
+    """The policy shapes WHAT is aggregated, never the accounting: same
+    realized counts => bit-identical eps series, discount or not."""
+    a = make_server()
+    b = make_server(engine="async:max_staleness=8,staleness_weight=poly:1.0")
+    for server in (a, b):
+        key = jax.random.key(9)
+        server.submit(simulate_client_updates(server.mech, DIM, key, 8,
+                                              round_tag=0))
+        assert server.drain() == 2
+    assert a.realized_n == b.realized_n == [4, 4]
+    for x, y in zip(a.accountant.history, b.accountant.history):
+        np.testing.assert_array_equal(x, y)
+    # the poly:1.0 discount genuinely rescaled round 2's release
+    assert not np.array_equal(np.asarray(a.flat), np.asarray(b.flat))

@@ -1,0 +1,61 @@
+"""Distribution properties of the arrival processes (fed/arrivals.py),
+property-tested via hypothesis — a separate module (like
+test_privacy_properties.py) so the deterministic arrival tests in
+test_arrivals.py still run when hypothesis is absent.
+
+Contract:
+  * Poisson arrivals realize the configured mean rate over a long
+    window, for any (rate, seed);
+  * the diurnal sinusoid is real: peak half-periods out-arrive trough
+    half-periods by the analytic intensity-mass ratio; and the
+    Lewis-Shedler thinning envelope genuinely dominates the intensity
+    at every realized arrival time (thinning is only valid under a true
+    envelope).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; arrival-distribution "
+    "property tests are exercised where it is available"
+)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.fed.arrivals import DiurnalArrivals, PoissonArrivals  # noqa: E402
+
+
+@given(rate=st.floats(2.0, 50.0), seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_poisson_mean_rate(rate, seed):
+    """n arrivals at rate lambda land around t = n/lambda: the empirical
+    rate over a long window concentrates near the configured one."""
+    n = 4000
+    times = PoissonArrivals(rate=rate).sample(np.random.default_rng(seed), n)
+    assert n / times[-1] == pytest.approx(rate, rel=0.15)
+
+
+@given(amplitude=st.floats(0.2, 0.9), seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_diurnal_peak_beats_trough(amplitude, seed):
+    """The day/night shape is real: arrival counts in the sinusoid's
+    peak half-periods dominate the trough half-periods, at the analytic
+    intensity-mass ratio (1 + 2A/pi) / (1 - 2A/pi)."""
+    period = 10.0
+    proc = DiurnalArrivals(rate=40.0, period=period, amplitude=amplitude)
+    times = proc.sample(np.random.default_rng(seed), 4000)
+    phase = (times % period) / period
+    peak = np.sum(phase < 0.5)       # sin > 0 half-period
+    trough = np.sum(phase >= 0.5)    # sin < 0 half-period
+    assert peak > trough
+    expected = (1 + 2 * amplitude / np.pi) / (1 - 2 * amplitude / np.pi)
+    assert peak / max(trough, 1) == pytest.approx(expected, rel=0.35)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_diurnal_intensity_envelope_holds(seed):
+    """Every realized intensity evaluation sits under envelope()."""
+    proc = DiurnalArrivals(rate=20.0, period=6.0, amplitude=0.7)
+    times = proc.sample(np.random.default_rng(seed), 1000)
+    assert np.all(proc.intensity(times) <= proc.envelope() + 1e-12)

@@ -1,0 +1,147 @@
+"""The seeded arrival processes + the async dispatch model
+(fed/arrivals.py).
+
+Contract:
+  * a (spec, seed) pair replays the identical traffic trace — arrival
+    times, latencies, staleness, straggler masks — on any host;
+  * the registered processes have the distributions they claim: Poisson
+    arrivals at the configured mean rate, diurnal intensity following
+    the day/night sinusoid (property-tested via hypothesis, skipped
+    cleanly when hypothesis is absent);
+  * the dispatch model is sound: aggregation times are monotone,
+    realized staleness is bounded by min(max_staleness, buffer index)
+    and never negative, max_staleness=0 realizes an all-fresh buffer,
+    and a timeout marks exactly the over-latency members as stragglers.
+"""
+import numpy as np
+import pytest
+
+from repro.fed.arrivals import (ArrivalSimulator, DiurnalArrivals,
+                                PoissonArrivals, arrival_names,
+                                make_arrivals, parse_arrivals_spec)
+
+
+def sim(cadence=8, seed=0, **kw):
+    proc = kw.pop("process", None)
+    if proc is None:
+        proc = make_arrivals("poisson", rate=float(max(cadence, 1)))
+    return ArrivalSimulator(proc, cadence, seed=seed, **kw)
+
+
+class TestRegistryAndSpecs:
+    def test_builtin_processes_registered(self):
+        assert arrival_names() == ("poisson", "diurnal")
+
+    def test_spec_round_trip(self):
+        p = make_arrivals("diurnal:period=12,amplitude=0.5", rate=100.0)
+        assert isinstance(p, DiurnalArrivals)
+        assert (p.rate, p.period, p.amplitude) == (100.0, 12.0, 0.5)
+
+    def test_defaults_fill_unspecified_options(self):
+        p = make_arrivals("poisson", rate=7.0)
+        assert isinstance(p, PoissonArrivals) and p.rate == 7.0
+
+    def test_unknown_process_lists_registered(self):
+        with pytest.raises(ValueError, match="unknown arrival.*poisson"):
+            make_arrivals("bursty")
+
+    def test_unknown_option_rejected(self):
+        with pytest.raises(ValueError, match="unknown option.*amplitude"):
+            make_arrivals("poisson:amplitude=0.5")
+
+    def test_malformed_option_rejected(self):
+        with pytest.raises(ValueError, match="malformed arrival option"):
+            parse_arrivals_spec("poisson:rate")
+
+    def test_invalid_parameters_rejected(self):
+        with pytest.raises(ValueError, match="rate must be > 0"):
+            PoissonArrivals(rate=0.0)
+        with pytest.raises(ValueError, match="amplitude must be"):
+            DiurnalArrivals(rate=1.0, amplitude=1.0)
+        with pytest.raises(ValueError, match="period must be"):
+            DiurnalArrivals(rate=1.0, period=0.0)
+
+
+class TestSeededDeterminism:
+    @pytest.mark.parametrize("spec", ["poisson",
+                                      "diurnal:period=8,amplitude=0.6"])
+    def test_same_seed_same_trace(self, spec):
+        a = make_arrivals(spec, rate=16.0)
+        t1 = a.sample(np.random.default_rng(42), 500)
+        t2 = a.sample(np.random.default_rng(42), 500)
+        np.testing.assert_array_equal(t1, t2)
+
+    def test_different_seeds_differ(self):
+        a = make_arrivals("poisson", rate=16.0)
+        t1 = a.sample(np.random.default_rng(1), 100)
+        t2 = a.sample(np.random.default_rng(2), 100)
+        assert not np.array_equal(t1, t2)
+
+    def test_simulator_replays_identically(self):
+        mk = lambda: sim(cadence=6, seed=3, max_staleness=4,
+                         mean_latency=1.0, timeout=2.0)
+        s1, s2 = mk(), mk()
+        for _ in range(10):
+            b1, b2 = s1.next_buffer(), s2.next_buffer()
+            np.testing.assert_array_equal(b1.arrivals, b2.arrivals)
+            np.testing.assert_array_equal(b1.staleness, b2.staleness)
+            np.testing.assert_array_equal(b1.delivered, b2.delivered)
+            assert b1.time == b2.time
+
+
+class TestDispatchModel:
+    def test_arrival_times_sorted_and_positive(self):
+        b = sim().next_buffer()
+        assert np.all(b.arrivals > 0)
+        assert np.all(np.diff(b.arrivals) >= 0)
+
+    def test_aggregation_times_monotone(self):
+        s = sim(max_staleness=5, mean_latency=2.0)
+        times = [s.next_buffer().time for _ in range(20)]
+        assert all(b >= a for a, b in zip(times, times[1:]))
+
+    def test_staleness_bounded_and_nonnegative(self):
+        S = 3
+        s = sim(cadence=16, max_staleness=S, mean_latency=4.0)
+        for b in range(15):
+            sched = s.next_buffer()
+            assert sched.staleness.min() >= 0
+            assert sched.staleness.max() <= min(S, b)
+            # the clamp only ever LOWERS the raw model-version gap
+            assert np.all(sched.staleness <= sched.raw_staleness)
+
+    def test_zero_max_staleness_is_all_fresh(self):
+        s = sim(max_staleness=0, mean_latency=3.0)
+        for _ in range(8):
+            assert s.next_buffer().staleness.max() == 0
+
+    def test_no_timeout_delivers_everyone(self):
+        s = sim(mean_latency=5.0, timeout=None)
+        sched = s.next_buffer()
+        assert sched.delivered.all() and sched.realized == s.cadence
+
+    def test_timeout_marks_exactly_the_late(self):
+        # latency is exponential(mean=1): with timeout=1e-6 essentially
+        # everyone straggles; with timeout=1e6 nobody does
+        assert sim(seed=5, timeout=1e-6).next_buffer().realized == 0
+        assert sim(seed=5, timeout=1e6).next_buffer().realized == 8
+
+    def test_first_buffer_has_no_staleness(self):
+        # no aggregation has ever been published before buffer 0
+        s = sim(max_staleness=8, mean_latency=10.0)
+        assert s.next_buffer().staleness.max() == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="cadence must be > 0"):
+            sim(cadence=0, process=make_arrivals("poisson", rate=8.0))
+        with pytest.raises(ValueError, match="max_staleness must be"):
+            sim(max_staleness=-1)
+        with pytest.raises(ValueError, match="timeout must be > 0"):
+            sim(timeout=0.0)
+
+    def test_stats_summarize_trace(self):
+        s = sim()
+        assert s.stats() == {"aggregations": 0, "sim_time": 0.0}
+        b = s.next_buffer()
+        st = s.stats()
+        assert st["aggregations"] == 1 and st["sim_time"] == b.time

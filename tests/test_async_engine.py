@@ -1,0 +1,421 @@
+"""The async engine (fed/async_engine.py), the engine-spec API
+(fed/engine.py make_engine), and the typed client-update layer they share
+with the aggregator (fed/updates.py).
+
+Contract:
+  * ``make_engine("async:cadence=6,max_staleness=2")`` round-trips name,
+    options, and FedConfig overrides; ``FedConfig.engine`` accepts the
+    same spec strings with existing bare-name call sites untouched;
+  * the degenerate corner ``cadence == clients_per_round,
+    max_staleness=0`` is BIT-IDENTICAL to the synchronous ``perround``
+    engine — params, eps history, realized_n (it reuses the same traced
+    round step by construction);
+  * accounting parity: every aggregation is accounted at its REALIZED
+    buffer size, so the accountant history (and the tracked eps series)
+    equals a fresh-accountant replay of ``trainer.realized_n`` exactly;
+  * staleness shapes the round, never the accounting: a poly discount
+    changes the trajectory, the eps series only ever depends on the
+    realized counts;
+  * ``staging="stream"`` bounds staged bytes by the cadence — the same
+    bytes for a 24-client and a 4096-client population;
+  * ClientUpdate / StalenessPolicy / UpdateBuffer enforce the shared
+    intake semantics both the engine and the AggregatorServer rely on.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from conftest import SMALL_FED as SMALL
+from conftest import small_trainer as _trainer
+
+from repro.core.renyi import RenyiAccountant
+from repro.fed.async_engine import AsyncEngine
+from repro.fed.config import FedConfig
+from repro.fed.engine import EngineSpec, make_engine, parse_engine_spec
+from repro.fed.updates import (ClientUpdate, StalenessPolicy, UpdateBuffer,
+                               as_updates)
+
+
+def train(tr, rounds=None):
+    n = rounds or tr.cfg.rounds
+    tr.train(rounds=n, eval_every=n, log=lambda *_: None)
+    return tr
+
+
+def replay_eps(tr):
+    """A fresh accountant fed ONLY the realized buffer sizes — the
+    reference the engine's accounting must match bit-for-bit."""
+    acc = RenyiAccountant(alphas=tr.cfg.accountant_alphas)
+    alphas = tr.cfg.accountant_alphas
+    for n in tr.realized_n:
+        if n <= 0:
+            vec = np.zeros(len(alphas))
+        else:
+            vec = np.asarray([tr.mech.per_round_epsilon(n, a)
+                              for a in alphas])
+        acc.step(vec)
+    return acc
+
+
+class TestEngineSpecAPI:
+    def test_parse_and_round_trip(self):
+        spec = make_engine("async:cadence=6,max_staleness=2,"
+                           "staleness_weight=poly:0.5")
+        assert spec.name == "async"
+        assert dict(spec.options) == {"cadence": 6, "max_staleness": 2,
+                                      "staleness_weight": "poly:0.5"}
+        assert dict(spec.overrides) == {"async_cadence": 6,
+                                        "async_max_staleness": 2,
+                                        "async_staleness_weight": "poly:0.5"}
+        # canonical spec string -> same spec
+        again = make_engine(spec.spec())
+        assert again == spec
+
+    def test_bare_name_has_no_overrides(self):
+        for name in ("scan", "perround", "host", "shard", "async"):
+            spec = make_engine(name)
+            assert spec == EngineSpec(name=name)
+            assert spec.spec() == name
+
+    def test_apply_overrides_without_mutating_caller(self):
+        cfg = FedConfig(engine="async:cadence=4,timeout=2.5", **SMALL)
+        spec = make_engine(cfg.engine)
+        out = spec.apply(cfg)
+        assert out.engine == "async"
+        assert out.async_cadence == 4 and out.async_timeout == 2.5
+        assert cfg.engine == "async:cadence=4,timeout=2.5"  # untouched
+        assert cfg.async_cadence is None
+
+    def test_unknown_engine_and_option_rejected(self):
+        with pytest.raises(ValueError, match="unknown engine.*async"):
+            make_engine("warp:block=2")
+        with pytest.raises(ValueError,
+                           match="does not accept option.*cadence"):
+            make_engine("scan:cadence=4")
+        with pytest.raises(ValueError, match=r"accepted: \(none\)"):
+            make_engine("perround:block=2")
+
+    def test_malformed_spec_rejected(self):
+        with pytest.raises(ValueError, match="empty engine name"):
+            parse_engine_spec(":cadence=4")
+        with pytest.raises(TypeError, match="engine spec must be a str"):
+            make_engine(42)
+
+    def test_existing_engines_gain_spec_options(self):
+        scan = make_engine("scan:block=2,unroll=true")
+        assert dict(scan.overrides) == {"scan_block": 2, "scan_unroll": True}
+        shard = make_engine("shard:shards=2,staging=stream")
+        assert dict(shard.overrides) == {"shards": 2, "staging": "stream"}
+
+    def test_trainer_accepts_spec_string(self):
+        """FedConfig.engine carries a full spec; the trainer normalizes
+        it to the bare name and applies the overrides on ITS copy."""
+        tr = _trainer("async:cadence=4,max_staleness=2,latency=0.5")
+        assert isinstance(tr.engine, AsyncEngine)
+        assert tr.cfg.engine == "async"
+        assert tr.cfg.async_cadence == 4 and tr.cfg.async_max_staleness == 2
+        assert tr.engine.cadence == 4 and tr.slate == 4
+
+    def test_spec_equivalent_to_explicit_fields(self):
+        a = train(_trainer("async:max_staleness=2,latency=0.5", rounds=3))
+        b = train(_trainer("async", async_max_staleness=2,
+                           async_latency=0.5, rounds=3))
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        assert a.realized_n == b.realized_n
+
+
+class TestDegenerateParity:
+    """cadence == clients_per_round, max_staleness=0, no timeout: the
+    async engine IS the synchronous perround engine, bit for bit."""
+
+    def test_params_eps_and_counts_bit_identical(self):
+        a = train(_trainer("async"))
+        b = train(_trainer("perround"))
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        assert a.realized_n == b.realized_n == [SMALL["clients_per_round"]] * 5
+        assert len(a.accountant.history) == len(b.accountant.history)
+        for x, y in zip(a.accountant.history, b.accountant.history):
+            np.testing.assert_array_equal(x, y)
+        assert (a.accountant.dp_epsilon(1e-5)
+                == b.accountant.dp_epsilon(1e-5))
+
+    def test_fused_corner_matches_too(self):
+        a = train(_trainer("async", fused_rounds=True, rounds=3))
+        b = train(_trainer("perround", fused_rounds=True, rounds=3))
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+
+    def test_plain_corner_requires_exact_degeneracy(self):
+        # any of: staleness, timeout, or a different cadence leaves the
+        # verbatim-reuse corner (the general step decodes at realized n)
+        assert _trainer("async").engine._plain is True
+        assert _trainer("async:max_staleness=1").engine._plain is False
+        assert _trainer("async:timeout=5.0").engine._plain is False
+        assert _trainer("async:cadence=4").engine._plain is False
+
+
+class TestAccountingParity:
+    """The tracked eps series is the accountant, never a reimplementation:
+    replaying the realized buffer sizes through a fresh accountant
+    reproduces history and eps bit-for-bit."""
+
+    @pytest.mark.parametrize("engine_spec", [
+        "async",
+        "async:max_staleness=3,staleness_weight=poly:0.5,timeout=2.0",
+        "async:cadence=4,max_staleness=2,arrivals=diurnal,latency=2.0",
+    ])
+    def test_history_equals_realized_replay(self, engine_spec):
+        tr = train(_trainer(engine_spec, rounds=8))
+        assert len(tr.realized_n) == 8
+        ref = replay_eps(tr)
+        assert len(tr.accountant.history) == len(ref.history)
+        for got, want in zip(tr.accountant.history, ref.history):
+            np.testing.assert_array_equal(got, want)
+        assert tr.accountant.dp_epsilon(1e-5) == ref.dp_epsilon(1e-5)
+
+    def test_stragglers_shrink_realized_counts(self):
+        """A tight timeout realizes partial buffers — and each partial
+        aggregation composes at its SURVIVING count (more eps per round
+        than a full cohort, never less)."""
+        tr = train(_trainer("async:timeout=0.7", rounds=8))
+        k = SMALL["clients_per_round"]
+        assert min(tr.realized_n) < k  # stragglers actually realized
+        full = tr._eps_vector(k)
+        for n, vec in zip(tr.realized_n, tr.accountant.history):
+            assert 0 <= n <= k
+            if 0 < n < k:
+                assert np.all(vec >= full)  # fewer clients => more eps
+
+    def test_empty_aggregation_accounts_zero(self):
+        """A timeout so tight every member straggles: nothing is released,
+        nothing is spent, params hold still."""
+        tr = _trainer("async:timeout=0.0001", rounds=2)
+        before = np.asarray(tr.flat).copy()
+        train(tr, rounds=2)
+        assert tr.realized_n == [0, 0]
+        np.testing.assert_array_equal(np.asarray(tr.flat), before)
+        for vec in tr.accountant.history:
+            np.testing.assert_array_equal(vec, np.zeros_like(vec))
+
+    def test_tracked_series_mirrors_accountant(self, tmp_path):
+        from conftest import tiny_mechanism
+        from repro.fed.trainer import FedTrainer
+
+        path = tmp_path / "async.json"
+        cfg = FedConfig(engine="async:max_staleness=2,timeout=2.0",
+                        **{**SMALL, "rounds": 6})
+        tr = train(FedTrainer(tiny_mechanism(), cfg,
+                              tracker=f"json:{path}"))
+        tr.tracker.flush()
+        doc = json.loads(path.read_text())
+        acc = RenyiAccountant(alphas=tr.cfg.accountant_alphas)
+        want = []
+        for vec in tr.accountant.history:
+            acc.step(vec)
+            want.append(acc.dp_epsilon(tr.cfg.budget_delta)[0])
+        assert [r["eps_spent"] for r in doc["rounds"]] == want
+        assert [r["realized_n"] for r in doc["rounds"]] == tr.realized_n
+        # the engine's traffic extras ride the same records, folded into
+        # the schema's trailing "extra" column (ROUND_FIELDS untouched)
+        for rec in doc["rounds"]:
+            extra = rec["extra"]
+            assert extra["arrived"] == SMALL["clients_per_round"]
+            assert extra["delivered"] == rec["realized_n"]
+            assert extra["staleness_max"] <= 2
+            assert extra["sim_time"] > 0
+
+
+class TestStalenessSemantics:
+    def test_staleness_changes_trajectory_not_eps(self):
+        fresh = train(_trainer("async", async_latency=4.0, rounds=6))
+        stale = train(_trainer("async:max_staleness=4", async_latency=4.0,
+                               rounds=6))
+        # same traffic counts => identical eps series...
+        assert fresh.realized_n == stale.realized_n
+        for x, y in zip(fresh.accountant.history, stale.accountant.history):
+            np.testing.assert_array_equal(x, y)
+        # ...but stale gradients genuinely alter training
+        assert not np.array_equal(np.asarray(fresh.flat),
+                                  np.asarray(stale.flat))
+
+    def test_poly_discount_differs_from_uniform(self):
+        base = "async:max_staleness=3,latency=3.0"
+        uni = train(_trainer(base, rounds=6))
+        poly = train(_trainer(base + ",staleness_weight=poly:0.5", rounds=6))
+        assert uni.realized_n == poly.realized_n
+        assert not np.array_equal(np.asarray(uni.flat), np.asarray(poly.flat))
+
+    def test_buffer_metadata_is_typed(self):
+        tr = train(_trainer("async:max_staleness=2,timeout=2.0", rounds=4))
+        buf = tr.engine.last_buffer
+        assert len(buf) == SMALL["clients_per_round"]
+        version = tr.engine.sim._next_index - 1
+        for u in buf:
+            assert isinstance(u, ClientUpdate)
+            assert 0 <= u.client_id < SMALL["num_clients"]
+            assert u.weight in (0, 1)
+            assert 0 <= u.staleness <= 2
+            assert u.round_tag == version - u.staleness
+        assert sum(u.weight for u in buf) == tr.realized_n[-1]
+
+    def test_round_extras_expose_traffic(self):
+        tr = train(_trainer("async:max_staleness=2,"
+                            "staleness_weight=poly:0.5", rounds=4))
+        assert len(tr.round_extras) == 4
+        times = [e["sim_time"] for e in tr.round_extras]
+        assert times == sorted(times)  # monotone aggregation clock
+        for e in tr.round_extras:
+            assert e["arrived"] == SMALL["clients_per_round"]
+            assert 0 <= e["staleness_mean"] <= e["staleness_max"] <= 2
+            assert 0 < e["staleness_discount"] <= 1.0
+
+
+class TestStreaming:
+    def test_staged_bytes_bounded_by_cadence_not_population(self):
+        """The point of the streamed data plane: bytes staged per
+        aggregation depend on the cadence alone — a 4096-client
+        population stages exactly what a 24-client one does."""
+        small = train(_trainer("async:max_staleness=1", staging="stream",
+                               rounds=3))
+        big = train(_trainer("async:max_staleness=1", staging="stream",
+                             rounds=3, num_clients=4096))
+        assert small.staged_bytes_last_block > 0
+        assert small.staged_bytes_last_block == big.staged_bytes_last_block
+        per_round = small.staged_bytes_last_block
+        assert small.staged_bytes_total == 3 * per_round
+
+    def test_streamed_matches_full_staging(self):
+        """Staging is a data-plane choice, not a semantics choice."""
+        a = train(_trainer("async:max_staleness=2", rounds=4))
+        b = train(_trainer("async:max_staleness=2", staging="stream",
+                           rounds=4))
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        assert a.realized_n == b.realized_n
+
+    def test_data_cache_is_bounded(self):
+        tr = train(_trainer("async", staging="stream", rounds=3))
+        assert len(tr.engine._data_cache) <= tr.engine._cache_cap
+
+
+class TestAsyncValidation:
+    def test_rejections_name_their_knob(self):
+        with pytest.raises(ValueError, match="async_cadence.*num_clients"):
+            _trainer("async:cadence=999")
+        with pytest.raises(ValueError, match="subsampling='fixed'"):
+            _trainer("async", subsampling="poisson")
+        with pytest.raises(ValueError, match="async_timeout.*not.*dropout"):
+            _trainer("async", dropout=0.3)
+        with pytest.raises(ValueError, match="does not checkpoint"):
+            _trainer("async", ckpt_dir="/tmp/nope")
+        with pytest.raises(ValueError, match="async_rate must be > 0"):
+            _trainer("async:rate=0")
+        with pytest.raises(ValueError, match="unknown staleness weight"):
+            _trainer("async:staleness_weight=linear")
+        with pytest.raises(ValueError, match="unknown arrival process"):
+            _trainer("async:arrivals=bursty")
+
+
+class TestClientUpdate:
+    def test_weight_and_staleness_validated(self):
+        with pytest.raises(ValueError, match="weight must be 0 or 1"):
+            ClientUpdate(payload=np.zeros(4), weight=2)
+        with pytest.raises(ValueError, match="staleness must be >= 0"):
+            ClientUpdate(payload=np.zeros(4), staleness=-1)
+
+    def test_validate_checks_shape_and_dtype(self):
+        u = ClientUpdate(payload=np.zeros(8, np.int32))
+        assert u.validate(8) is u
+        with pytest.raises(ValueError, match="must be \\(8,\\)"):
+            ClientUpdate(payload=np.zeros(9, np.int32)).validate(8)
+        with pytest.raises(ValueError, match="must be numeric"):
+            ClientUpdate(payload=np.array(["a"] * 8)).validate(8)
+
+    def test_staleness_at_prefers_round_tag(self):
+        versioned = ClientUpdate(payload=np.zeros(2), round_tag=3)
+        assert versioned.staleness_at(5) == 2
+        assert versioned.staleness_at(2) == 0  # never negative
+        legacy = ClientUpdate(payload=np.zeros(2), staleness=4)
+        assert legacy.staleness_at(100) == 4  # unversioned: stamped value
+        stamped = versioned.stamped(5)
+        assert stamped.staleness == 2 and stamped.round_tag == 3
+
+    def test_as_updates_normalizes_all_forms(self):
+        one = ClientUpdate(payload=np.zeros(4))
+        assert as_updates(one) == [one]
+        assert as_updates([one, one]) == [one, one]
+        rows = as_updates(np.ones((3, 4), np.int32), round_tag=7)
+        assert [u.round_tag for u in rows] == [7, 7, 7]
+        with pytest.raises(ValueError, match="updates must be"):
+            as_updates(np.zeros(4))
+
+
+class TestStalenessPolicy:
+    def test_admit_bounds(self):
+        assert StalenessPolicy().admit(10**6)  # unbounded default
+        p = StalenessPolicy(max_staleness=2)
+        assert p.admit(2) and not p.admit(3)
+        with pytest.raises(ValueError, match="max_staleness"):
+            StalenessPolicy(max_staleness=-1)
+
+    def test_discount_values(self):
+        assert StalenessPolicy().discount([5, 9]) == 1.0
+        p = StalenessPolicy(weight="poly:0.5")
+        assert p.discount([]) == 1.0
+        assert p.discount([0]) == 1.0
+        assert p.discount([3]) == pytest.approx(0.5)  # (1+3)^-0.5
+        assert p.discount([0, 3]) == pytest.approx(0.75)
+
+    def test_weight_spec_validated(self):
+        with pytest.raises(ValueError, match="unknown staleness weight"):
+            StalenessPolicy(weight="exp")
+        with pytest.raises(ValueError, match="takes no argument"):
+            StalenessPolicy(weight="uniform:2")
+        with pytest.raises(ValueError, match="malformed staleness weight"):
+            StalenessPolicy(weight="poly:fast")
+        with pytest.raises(ValueError, match="exponent must be >= 0"):
+            StalenessPolicy(weight="poly:-1")
+        assert StalenessPolicy(weight="poly")._parse_weight() == ("poly", 0.5)
+
+    def test_describe(self):
+        assert StalenessPolicy().describe() == (
+            "staleness unbounded, weight uniform")
+        assert StalenessPolicy(max_staleness=4, weight="poly:0.5").describe(
+        ) == "staleness <=4, weight poly:0.5"
+
+
+class TestUpdateBuffer:
+    def mk(self, tags, **policy):
+        buf = UpdateBuffer(StalenessPolicy(**policy))
+        buf.extend(ClientUpdate(payload=np.zeros(2), client_id=i,
+                                round_tag=t) for i, t in enumerate(tags))
+        return buf
+
+    def test_take_is_fifo_and_stamps(self):
+        buf = self.mk([0, 1, 2, 3])
+        got = buf.take(2, version=3)
+        assert [u.client_id for u in got] == [0, 1]
+        assert [u.staleness for u in got] == [3, 2]
+        assert len(buf) == 2
+
+    def test_prune_discards_per_policy(self):
+        buf = self.mk([0, 4, 5], max_staleness=1)
+        assert buf.prune(version=5) == 1  # tag 0 died of staleness
+        assert buf.discarded == 1
+        assert [u.client_id for u in buf.take(8, version=5)] == [1, 2]
+
+    def test_peek_does_not_pop(self):
+        buf = self.mk([0, 1])
+        assert len(buf.peek(2, version=1)) == 2
+        assert len(buf) == 2  # still there
+        buf.take(2, version=1)
+        assert len(buf) == 0
+
+    def test_dim_validation_at_intake(self):
+        buf = UpdateBuffer(dim=4)
+        with pytest.raises(ValueError, match="payload must be"):
+            buf.add(ClientUpdate(payload=np.zeros(5)))
+
+    def test_frozen_updates(self):
+        u = ClientUpdate(payload=np.zeros(2))
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            u.staleness = 3

@@ -29,7 +29,8 @@ from repro.fed.engines import PerRoundEngine, ScanEngine
 
 class TestRegistry:
     def test_builtin_engines_registered_in_order(self):
-        assert engine_names() == ("scan", "perround", "host", "shard")
+        assert engine_names() == ("scan", "perround", "host", "shard",
+                                  "async")
 
     def test_round_trip(self):
         """Name -> class -> name, and the trainer instantiates exactly the
