@@ -20,7 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig45,fig3,budget,kernels,async,"
-                         "qopt,roofline")
+                         "lmfed,qopt,roofline")
     ap.add_argument("--fl-rounds", type=int, default=None,
                     help="fig3 round budget (default: the benchmark's own "
                          "full/smoke default; an explicit value wins even "
@@ -112,6 +112,17 @@ def main() -> None:
         path = (json_path("BENCH_async.json") if json_dir else
                 os.path.join(tempfile.mkdtemp(), "BENCH_async.json"))
         attempt("async", lambda: fig_async.bench_json(path,
+                                                      smoke=args.smoke))
+    if want("lmfed"):
+        import tempfile
+
+        from benchmarks import fig_lmfed
+
+        # tracker-instrumented end to end, like the async bench: without
+        # a json dir the artifact lands in a tempdir
+        path = (json_path("BENCH_lmfed.json") if json_dir else
+                os.path.join(tempfile.mkdtemp(), "BENCH_lmfed.json"))
+        attempt("lmfed", lambda: fig_lmfed.bench_json(path,
                                                       smoke=args.smoke))
     if want("qopt"):
         from benchmarks import beyond_qopt

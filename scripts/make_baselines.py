@@ -6,7 +6,9 @@ JSON tracker into ``benchmarks/baselines/BENCH_<engine>.json`` — the
 SAME document schema every tracked run and BENCH artifact uses
 (docs/telemetry.md). The async engine's baseline comes from its
 population-scale bench instead (benchmarks/fig_async.py — streamed
-staging at N=1e6 simulated clients), same artifact shape. The committed files serve two jobs:
+staging at N=1e6 simulated clients), and the federated-LM lane's from
+benchmarks/fig_lmfed.py (keyed ``lmfed``), same artifact shape. The
+committed files serve two jobs:
 
   * golden schema anchors: tests and readers see a real tracked series
     for every engine, not a synthetic example;
@@ -27,7 +29,7 @@ from repro.core.mechanisms import make_mechanism
 from repro.fed import FedConfig, FedTrainer
 from repro.telemetry import JsonTracker
 
-ENGINES = ("scan", "perround", "host", "shard", "async")
+ENGINES = ("scan", "perround", "host", "shard", "async", "lmfed")
 SPEC = "rqm:c=0.02,m=16,q=0.42"
 ROUNDS = 8
 FED = dict(num_clients=48, clients_per_round=8, lr=1.0, eval_size=64,
@@ -36,17 +38,20 @@ FED = dict(num_clients=48, clients_per_round=8, lr=1.0, eval_size=64,
 
 def run_engine(engine: str, out_dir: str, rounds: int = ROUNDS) -> str:
     path = os.path.join(out_dir, f"BENCH_{engine}.json")
-    if engine == "async":
-        # the async baseline is the population-scale traffic-shaped bench
-        # (streamed staging at N=1e6), not a tracked smoke run — the same
-        # artifact the CI bench lane regenerates via `run.py --only async`
+    if engine in ("async", "lmfed"):
+        # these two baselines come from their dedicated benches, not a
+        # tracked smoke run: async is the population-scale traffic-shaped
+        # bench (streamed staging at N=1e6), lmfed the federated LM
+        # fine-tuning bench — the same artifacts the CI bench lane
+        # regenerates via `run.py --only async,lmfed`
         sys.path.insert(0, os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))))
-        from benchmarks import fig_async
+        from benchmarks import fig_async, fig_lmfed
 
-        summary = fig_async.bench_json(path, smoke=True)
+        bench = fig_async if engine == "async" else fig_lmfed
+        summary = bench.bench_json(path, smoke=True)
         print(f"wrote {path} (peak {summary['rounds_per_sec_peak']:.2f} "
-              f"rounds/s at N={summary['population']})")
+              f"rounds/s)")
         return path
     tracker = JsonTracker(path)
     tr = FedTrainer(make_mechanism(SPEC),

@@ -1,0 +1,78 @@
+"""Capture emnist_cnn trajectory digests on every fed engine.
+
+The client-task refactor (fed/tasks.py) must not move a single bit of
+the default EMNIST-CNN trajectory: these digests were captured at the
+last pre-refactor commit and tests/test_fed_tasks.py asserts that every
+engine still lands on them. Regenerate (only when a digest-moving change
+is INTENDED and documented) with:
+
+    PYTHONPATH=src python scripts/make_task_digests.py \
+        --out tests/golden/fed_trajectories.json
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+
+import numpy as np
+
+from repro.core.mechanisms import make_mechanism
+from repro.fed.loop import FedConfig, FedTrainer
+
+# keep in lockstep with tests/conftest.py SMALL_FED / TINY_CLIP: the
+# digests then pin the same tiny problem the engine parity suites run
+FED = dict(num_clients=24, clients_per_round=6, rounds=5, lr=1.0,
+           eval_size=64, samples_per_client=8)
+CLIP = 0.05
+ROUNDS = 5
+
+# engine spec -> FedConfig overrides; one digest per (case, engine)
+CASES = {
+    "scan": ("scan", {}),
+    "perround": ("perround", {}),
+    "host": ("host", {}),
+    "shard1": ("shard", {"shards": 1}),
+    "shard1-stream": ("shard", {"shards": 1, "staging": "stream"}),
+    "async": ("async:max_staleness=2,timeout=3.0", {}),
+    "scan-hetero": ("scan", {"subsampling": "poisson", "dropout": 0.3}),
+    "scan-momentum": ("scan", {"server_opt": "momentum"}),
+    "scan-fedavg": ("scan", {"local_steps": 3, "local_lr": 0.3}),
+}
+
+
+def digest_case(engine, overrides):
+    mech = make_mechanism("rqm", c=CLIP)
+    tr = FedTrainer(mech, FedConfig(engine=engine, **{**FED, **overrides}))
+    tr.train(rounds=ROUNDS, eval_every=ROUNDS, log=lambda *_: None)
+    flat = np.asarray(tr.flat, dtype=np.float32)
+    eps = np.concatenate([np.asarray(h, np.float64).ravel()
+                          for h in tr.accountant.history])
+    return {
+        "engine": engine,
+        "overrides": overrides,
+        "rounds": ROUNDS,
+        "params_sha256": hashlib.sha256(flat.tobytes()).hexdigest(),
+        "params_l2": float(np.linalg.norm(flat)),
+        "eps_sha256": hashlib.sha256(eps.tobytes()).hexdigest(),
+        "realized_n": [int(n) for n in tr.realized_n],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="tests/golden/fed_trajectories.json")
+    args = ap.parse_args()
+    doc = {"fed": FED, "clip": CLIP, "task": "emnist_cnn", "cases": {}}
+    for name, (engine, overrides) in CASES.items():
+        doc["cases"][name] = digest_case(engine, overrides)
+        print(f"{name}: params={doc['cases'][name]['params_sha256'][:16]} "
+              f"l2={doc['cases'][name]['params_l2']:.6f}")
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

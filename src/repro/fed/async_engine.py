@@ -110,12 +110,6 @@ class AsyncEngine(Engine):
                 "(arrival-latency timeouts), not i.i.d. dropout; set "
                 "dropout=0"
             )
-        if cfg.ckpt_dir:
-            raise ValueError(
-                "engine 'async' does not checkpoint yet: the parameter-"
-                "version history ring and the arrival trace are not in "
-                "the checkpoint schema; run without ckpt_dir"
-            )
         if cfg.async_rate is not None and cfg.async_rate <= 0:
             raise ValueError(
                 f"async_rate must be > 0, got {cfg.async_rate}"
@@ -207,25 +201,25 @@ class AsyncEngine(Engine):
         # apply exactly like the heterogeneous engines do
         apply = rounds.make_server_apply(opt, cfg, hetero=True)
 
-        def round_step(hist, opt_state, key, images, labels, stale,
+        def round_step(hist, opt_state, key, data, stale,
                        delivered, discount=None):
             # identical key evolution to the synchronous engines (3
             # splits/round) — the streamed stager replays it on the host
             key, k_sample, k_enc, _ = cohort.split_round_keys(cfg, key)
             if streamed:
-                local_im, local_lb = images, labels  # staged in slate order
+                batch = data  # staged in slate order
             else:
                 ids, _ = cohort.sample_slate(cfg, slate, k_sample)
-                local_im, local_lb = images[ids], labels[ids]
+                batch = rounds.index_batch(data, ids)
             if S == 0:
-                grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
-                    hist[0], local_im, local_lb
+                grads = jax.vmap(client_grad, in_axes=(None, 0))(
+                    hist[0], batch
                 )
             else:
                 # each buffer member computed against the version it
                 # fetched: gather per-row parameters from the ring
-                grads = jax.vmap(client_grad, in_axes=(0, 0, 0))(
-                    hist[stale], local_im, local_lb
+                grads = jax.vmap(client_grad, in_axes=(0, 0))(
+                    hist[stale], batch
                 )
             part = delivered
             if fused:
@@ -251,13 +245,52 @@ class AsyncEngine(Engine):
 
         return round_step
 
+    # -- checkpoint state (fed/checkpointing.py engine hooks) ----------------
+    # The async trajectory depends on state beyond (flat, opt_state, key):
+    # the arrival simulator's RNG + aggregation-time trace (staleness is
+    # computed by searchsorted against past aggregation times) and, when
+    # staleness is live, the parameter-version ring. Serializing exactly
+    # that makes a resumed run bit-identical to the uninterrupted one
+    # (tests/test_fed_tasks.py::test_async_checkpoint_resume).
+
+    def state(self):
+        from repro.fed.checkpointing import pack_host_rng
+
+        tree = {
+            "sim_rng": pack_host_rng(self.sim._rng),
+            "sim_times": np.asarray(self.sim._agg_times, np.float64),
+        }
+        if not self._plain:
+            tree["hist"] = self._hist
+        return tree
+
+    def state_template(self, steps_done: int):
+        # one aggregation time per accounted round: checkpoints land on
+        # round boundaries, so len(_agg_times) == steps_done
+        tree = {
+            "sim_rng": np.zeros(6, np.uint64),
+            "sim_times": np.zeros(steps_done, np.float64),
+        }
+        if not self._plain:
+            tree["hist"] = self._hist
+        return tree
+
+    def load_state(self, tree) -> None:
+        from repro.fed.checkpointing import unpack_host_rng
+
+        self.sim._rng = unpack_host_rng(tree["sim_rng"])
+        self.sim._agg_times = [float(t) for t in tree["sim_times"]]
+        self.sim._next_index = len(self.sim._agg_times)
+        if not self._plain:
+            self._hist = jnp.asarray(tree["hist"])
+
     # -- streamed data plane ------------------------------------------------
     def _client_data_cached(self, cid: int):
         cache = self._data_cache
         if cid in cache:
             cache.move_to_end(cid)
             return cache[cid]
-        data = self.tr.partition.client_data(cid)
+        data = self.tr.task.client_batch(cid)
         cache[cid] = data
         if len(cache) > self._cache_cap:
             cache.popitem(last=False)
@@ -271,17 +304,24 @@ class AsyncEngine(Engine):
         tr, cfg = self.tr, self.tr.cfg
         _, k_sample, _, _ = cohort.split_round_keys(cfg, tr._key)
         ids = np.asarray(cohort.sample_slate(cfg, tr.slate, k_sample)[0])
-        imgs = lbls = None
+        leaves = treedef = None
         for u, cid in enumerate(ids):
-            im, lb = self._client_data_cached(int(cid))
-            if imgs is None:
-                imgs = np.empty((tr.slate,) + im.shape, im.dtype)
-                lbls = np.empty((tr.slate,) + lb.shape, lb.dtype)
-            imgs[u], lbls[u] = im, lb
-        nbytes = imgs.nbytes + lbls.nbytes
+            cl, cdef = jax.tree_util.tree_flatten(
+                self._client_data_cached(int(cid))
+            )
+            if leaves is None:
+                treedef = cdef
+                leaves = [np.empty((tr.slate,) + l.shape, l.dtype)
+                          for l in cl]
+            for buf, l in zip(leaves, cl):
+                buf[u] = l
+        nbytes = sum(buf.nbytes for buf in leaves)
         tr.staged_bytes_last_block = nbytes
         tr.staged_bytes_total += nbytes
-        return jnp.asarray(imgs), jnp.asarray(lbls), ids
+        data = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(buf) for buf in leaves]
+        )
+        return data, ids
 
     # -- the loop -----------------------------------------------------------
     def advance(self, n_rounds: int):
@@ -291,9 +331,9 @@ class AsyncEngine(Engine):
             ids = None
             if self._streamed:
                 with tr.timings.scope("stage"):
-                    images, labels, ids = self._stage_cohort()
+                    data, ids = self._stage_cohort()
             else:
-                images, labels = tr.client_images, tr.client_labels
+                data = tr.client_data
                 if not self._plain:
                     # replay the slate ids for the buffer metadata (the
                     # plain corner skips this: zero overhead vs perround)
@@ -303,13 +343,12 @@ class AsyncEngine(Engine):
                     )
             if self._plain:
                 tr.flat, tr.opt_state, tr._key, z_sum, n_real = (
-                    self._round_jit(tr.flat, tr.opt_state, tr._key,
-                                    images, labels)
+                    self._round_jit(tr.flat, tr.opt_state, tr._key, data)
                 )
             else:
                 stale = jnp.asarray(sched.staleness)
                 delivered = jnp.asarray(sched.delivered)
-                args = (self._hist, tr.opt_state, tr._key, images, labels,
+                args = (self._hist, tr.opt_state, tr._key, data,
                         stale, delivered)
                 disc = 1.0
                 if self._discounted:

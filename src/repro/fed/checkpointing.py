@@ -48,17 +48,49 @@ _FINGERPRINT_FIELDS = (
 
 
 def fingerprint(trainer) -> np.ndarray:
-    """sha256 of (mechanism spec, trajectory-defining config) as a (32,)
-    uint8 array — fixed shape, so it rides the npz checkpoint tree."""
+    """sha256 of (mechanism spec, task spec, trajectory-defining config)
+    as a (32,) uint8 array — fixed shape, so it rides the npz checkpoint
+    tree.
+
+    CANONICALIZATION: FedTrainer normalizes ``cfg.engine`` through
+    ``make_engine(...).apply()`` at init, so a spec string
+    (``engine="async:cadence=64"``) and the equivalent expanded FedConfig
+    fields reach this function as the SAME config and fingerprint
+    identically. The async family additionally fingerprints its
+    normalized trajectory-defining fields (cadence and rate resolved
+    from their None defaults), so the two spellings of a default —
+    ``cadence=None`` vs ``cadence=clients_per_round`` — coincide while
+    genuinely different arrival traffic is still rejected."""
     cfg = trainer.cfg
     fields = {f: getattr(cfg, f) for f in _FINGERPRINT_FIELDS}
     # None and {} build the identical optimizer — normalize so the two
     # spellings (CLIs pass None, programmatic configs often {}) can never
     # cause a spurious mismatch
     fields["server_opt_options"] = fields["server_opt_options"] or {}
+    # what the round trains (fed/tasks.py) — canonical spec string
+    fields["task"] = trainer.task.spec()
     # host vs device sampling streams are different trajectories (module
-    # docstring); engine NAME within the device family is not fingerprinted
-    fields["trajectory"] = "host" if cfg.engine == "host" else "device"
+    # docstring); engine NAME within the device family is not
+    # fingerprinted. The async engine is its own family: its trajectory
+    # additionally depends on the arrival trace and the staleness ring.
+    if cfg.engine == "host":
+        fields["trajectory"] = "host"
+    elif cfg.engine == "async":
+        fields["trajectory"] = "async"
+        cadence = int(cfg.async_cadence or cfg.clients_per_round)
+        fields["async"] = {
+            "cadence": cadence,
+            "max_staleness": int(cfg.async_max_staleness),
+            "staleness_weight": str(cfg.async_staleness_weight),
+            "arrivals": str(cfg.async_arrivals),
+            "rate": (float(cfg.async_rate) if cfg.async_rate is not None
+                     else float(cadence)),
+            "latency": float(cfg.async_latency),
+            "timeout": (None if cfg.async_timeout is None
+                        else float(cfg.async_timeout)),
+        }
+    else:
+        fields["trajectory"] = "device"
     blob = json.dumps(
         {"mechanism": trainer.mech.spec(), "config": fields},
         sort_keys=True, default=repr,
@@ -91,7 +123,7 @@ def _like(trainer, steps_done: int):
     """The reference tree restore validates against: device leaves restore
     as jnp arrays, host-side leaves (numpy refs) as numpy — exact float64
     for the eps history regardless of jax's x64 mode."""
-    return {
+    tree = {
         "flat": trainer.flat,
         "opt": trainer.opt_state,
         "key": jax.random.key_data(trainer._key),
@@ -102,6 +134,10 @@ def _like(trainer, steps_done: int):
         "realized_n": np.zeros(steps_done, np.int64),
         "fingerprint": np.zeros(32, np.uint8),
     }
+    est = trainer.engine.state_template(steps_done)
+    if est is not None:
+        tree["engine"] = est
+    return tree
 
 
 def save_checkpoint(trainer) -> str:
@@ -120,6 +156,9 @@ def save_checkpoint(trainer) -> str:
         "realized_n": np.asarray(trainer.realized_n, np.int64),
         "fingerprint": fingerprint(trainer),
     }
+    est = trainer.engine.state()
+    if est is not None:
+        tree["engine"] = est
     return store.save(trainer.cfg.ckpt_dir, trainer.accountant.rounds, tree)
 
 
@@ -150,6 +189,8 @@ def restore_checkpoint(trainer, step=None) -> int:
             f"checkpoint directory."
         )
     data = store.restore(cfg.ckpt_dir, step, _like(trainer, step))
+    if "engine" in data:
+        trainer.engine.load_state(data["engine"])
     trainer.flat = data["flat"]
     trainer.opt_state = data["opt"]
     trainer._key = jax.random.wrap_key_data(data["key"])
@@ -160,6 +201,10 @@ def restore_checkpoint(trainer, step=None) -> int:
         trainer.realized_n.append(int(n))
         trainer.accountant.step(vec)
     trainer.round_sums = []
+    # per-round extras are indexed by ABSOLUTE round (the emitter lines
+    # them up with the accountant history): pad the replayed prefix so
+    # post-resume engine extras land on the right records
+    trainer.round_extras = [{}] * step
     # telemetry continues the SAME series: the emitter's cumulative RDP
     # mirror re-anchors to the replayed accountant and the tracker drops
     # any rounds past the restored step (a crash can land after an emit

@@ -42,6 +42,14 @@ class FedConfig:
     # the engine's declared spec_options and normalizes this field to the
     # bare name with the namespaced fields below set.
     engine: str = "scan"
+    # The client TASK — what each federated round trains (fed/tasks.py):
+    # a registered task name or a "name:k=v,..." spec string.
+    # "emnist_cnn" (default) is the paper's EMNIST setup; "lm" fine-tunes
+    # a reduced model-zoo LM on per-client token streams
+    # ("lm:model=mamba2-370m,seq_len=64"). The task owns init_params,
+    # the per-client loss over an opaque batch pytree, client data, and
+    # evaluation; the engines never look inside a batch.
+    task: str = "emnist_cnn"
     # Server optimizer (Algorithm 1 line 11 generalized): the decode-then-
     # apply boundary of EVERY engine routes the decoded aggregate g_hat
     # through a repro.optim.Optimizer — "sgd" (the paper's w - lr*g_hat,
@@ -80,6 +88,14 @@ class FedConfig:
     shards: Optional[int] = None
     staging: str = "full"
     shard_packed: Optional[bool] = None
+    # model_shards > 1 extends the shard engine's client mesh to a 2-D
+    # ("shard", "model") mesh: each client's gradient runs TENSOR-PARALLEL
+    # over the model axis (per-layer psums inside the task's loss), while
+    # the cross-client SecAgg boundary still carries only integer level
+    # indices over the "shard" axis (docs/lm_federated.md). Requires a
+    # task with supports_model_axis (the "lm" task); needs
+    # shards * model_shards visible devices.
+    model_shards: int = 1
     # async engine (engine="async"; docs/async.md): FedBuff-style
     # buffered aggregation under a seeded arrival process. async_cadence
     # is how many buffered updates the server drains per aggregation
@@ -170,6 +186,15 @@ def validate_config(cfg: FedConfig) -> None:
         )
     if not 0.0 <= cfg.dropout < 1.0:
         raise ValueError(f"dropout must be in [0, 1), got {cfg.dropout}")
+    if cfg.model_shards < 1:
+        raise ValueError(
+            f"model_shards must be >= 1, got {cfg.model_shards}"
+        )
+    if cfg.model_shards > 1 and cfg.engine != "shard":
+        raise ValueError(
+            "model_shards > 1 (the 2-D client x model mesh) requires "
+            f"engine='shard', got engine={cfg.engine!r}"
+        )
     if cfg.max_cohort is not None and cfg.subsampling != "poisson":
         raise ValueError("max_cohort only applies to subsampling='poisson'")
     if cfg.clients_per_round > cfg.num_clients:

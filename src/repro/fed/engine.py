@@ -191,3 +191,24 @@ class Engine:
 
     def advance(self, rounds: int) -> None:
         raise NotImplementedError
+
+    # -- engine-private checkpoint state (fed/checkpointing.py) -------------
+    # Engines whose trajectory depends on state OUTSIDE (flat, opt_state,
+    # key, host_rng) — e.g. the async engine's parameter-version ring and
+    # arrival-simulator trace — serialize it through these three hooks.
+    # state() returns a pytree of fixed-shape arrays (or None: nothing to
+    # checkpoint); state_template(steps_done) returns the same-structure
+    # reference tree restore validates against; load_state(tree) installs
+    # a restored tree. The tree rides the checkpoint under the "engine"
+    # key, so engines with no state keep the legacy checkpoint schema.
+
+    def state(self):
+        return None
+
+    def state_template(self, steps_done: int):
+        return None
+
+    def load_state(self, tree) -> None:
+        raise NotImplementedError(
+            f"engine {self.name!r} has no checkpoint state"
+        )

@@ -31,7 +31,8 @@ from repro.data.federated import sample_clients
 from repro.distributed.step import MeshPlan, compat_shard_map
 from repro.fed import cohort, rounds, staging
 from repro.fed.engine import Engine, register_engine
-from repro.launch.mesh import make_shard_mesh
+from repro.launch.mesh import make_fed_mesh, make_shard_mesh
+from repro.models.common import ParallelCtx
 
 
 @register_engine("scan")
@@ -50,7 +51,7 @@ class ScanEngine(Engine):
         )
         block = rounds.make_block(step, tr.cfg)
         self._block_jit = jax.jit(
-            block, static_argnums=(5,), donate_argnums=(0, 1)
+            block, static_argnums=(4,), donate_argnums=(0, 1)
         )
 
     def advance(self, n_rounds: int):
@@ -59,8 +60,7 @@ class ScanEngine(Engine):
         while done < n_rounds:
             step = min(tr.cfg.scan_block, n_rounds - done)
             out = self._block_jit(
-                tr.flat, tr.opt_state, tr._key,
-                tr.client_images, tr.client_labels, step,
+                tr.flat, tr.opt_state, tr._key, tr.client_data, step,
             )
             tr._finish_block(out)
             done += step
@@ -85,8 +85,7 @@ class PerRoundEngine(Engine):
         tr = self.tr
         for _ in range(n_rounds):
             tr.flat, tr.opt_state, tr._key, z_sum, n_real = self._round_jit(
-                tr.flat, tr.opt_state, tr._key,
-                tr.client_images, tr.client_labels,
+                tr.flat, tr.opt_state, tr._key, tr.client_data,
             )
             if tr.cfg.collect_sums:
                 tr.round_sums.append(np.asarray(z_sum))
@@ -125,13 +124,13 @@ class HostEngine(Engine):
                 self._fixed_round()
 
     def _stack(self, ids):
-        # one client_data call per id (it re-synthesizes deterministically
+        # one client_batch call per id (it re-synthesizes deterministically
         # on every call — the monolith's two-comprehension stacking
-        # generated every cohort dataset twice per round)
-        data = [self.tr.partition.client_data(int(i)) for i in ids]
-        images = np.stack([im for im, _ in data])
-        labels = np.stack([lb for _, lb in data])
-        return jnp.asarray(images), jnp.asarray(labels)
+        # generated every cohort dataset twice per round); stack each leaf
+        # of the task's opaque batch pytree along a leading cohort axis
+        batches = [self.tr.task.client_batch(int(i)) for i in ids]
+        data = jax.tree_util.tree_map(lambda *ls: np.stack(ls), *batches)
+        return jax.tree_util.tree_map(jnp.asarray, data)
 
     def _fixed_round(self):
         # the host loop's stages are separate dispatches, so it times the
@@ -140,9 +139,9 @@ class HostEngine(Engine):
         tr, cfg = self.tr, self.tr.cfg
         ids = sample_clients(tr._rng, cfg.num_clients, cfg.clients_per_round)
         with tr.timings.scope("stage"):
-            images, labels = self._stack(ids)
+            data = self._stack(ids)
         with tr.timings.scope("grads"):
-            grads = tr._client_grads(tr.flat, images, labels)
+            grads = tr._client_grads(tr.flat, data)
         tr._key, sub = jax.random.split(tr._key)
         keys = jax.random.split(sub, cfg.clients_per_round)
         with tr.timings.scope("encode"):
@@ -168,9 +167,9 @@ class HostEngine(Engine):
         tr._key, k_sample, k_enc, k_drop = jax.random.split(tr._key, 4)
         ids, valid = cohort.sample_slate(cfg, tr.slate, k_sample)
         with tr.timings.scope("stage"):
-            images, labels = self._stack(np.asarray(ids))
+            data = self._stack(np.asarray(ids))
         with tr.timings.scope("grads"):
-            grads = tr._client_grads(tr.flat, images, labels)
+            grads = tr._client_grads(tr.flat, data)
         with tr.timings.scope("encode"):
             z = tr._quantize_batch(grads, k_enc)  # full slate, like engines
         part = cohort.participation(cfg, valid, k_drop)
@@ -203,13 +202,20 @@ class ShardEngine(Engine):
     blocked = True
     supports_streaming = True
     spec_options = {
-        "shards": "shards", "staging": "staging", "packed": "shard_packed"
+        "shards": "shards", "staging": "staging", "packed": "shard_packed",
+        "model": "model_shards",
     }
 
     def __init__(self, trainer):
         super().__init__(trainer)
         tr, cfg, mech = trainer, trainer.cfg, trainer.mech
-        self.shards = cfg.shards or jax.device_count()
+        self.model_shards = int(cfg.model_shards or 1)
+        if cfg.shards:
+            self.shards = cfg.shards
+        else:
+            # span every visible device with whatever the model axis
+            # doesn't claim
+            self.shards = max(1, jax.device_count() // self.model_shards)
         tr.shards = self.shards
         if cfg.subsampling == "poisson":
             # round the slate up so it splits evenly across shards
@@ -235,11 +241,33 @@ class ShardEngine(Engine):
                 f">= 2^{secagg.LANE_BITS} (or mechanism is not "
                 f"integer-coded)"
             )
-        tr._mesh = make_shard_mesh(self.shards)
-        # pure client-parallel plan: every shard a whole client group
-        tr._plan = MeshPlan(mesh=tr._mesh, client_axes=("shard",),
-                            model_axis=None)
-        assert tr._plan.tp == 1 and tr._plan.n_clients == self.shards
+        if self.model_shards > 1:
+            # 2-D client x model mesh: the 'shard' axis still carries
+            # ONLY integer SecAgg traffic; per-layer tensor-parallel
+            # psums run over the 'model' axis inside each client's loss.
+            if not tr.task.supports_model_axis:
+                raise ValueError(
+                    f"model_shards={self.model_shards} needs a task with "
+                    f"supports_model_axis; task "
+                    f"{tr.task.name!r} is single-shard only"
+                )
+            tr._mesh = make_fed_mesh(self.shards, self.model_shards)
+            tr._plan = MeshPlan(mesh=tr._mesh, client_axes=("shard",),
+                                model_axis="model")
+            assert tr._plan.tp == self.model_shards
+            # no client axes on the task ctx: a client's loss must stay
+            # local to its shard (client_grad is vmapped over the cohort
+            # slice WITHIN a shard — cross-client collectives would sum
+            # across cohort members)
+            tr._task_ctx = ParallelCtx(model_axis="model",
+                                       tp=self.model_shards)
+            tr.task.bind_model_axis(tr._task_ctx, tr._mesh)
+        else:
+            tr._mesh = make_shard_mesh(self.shards)
+            # pure client-parallel plan: every shard a whole client group
+            tr._plan = MeshPlan(mesh=tr._mesh, client_axes=("shard",),
+                                model_axis=None)
+            assert tr._plan.tp == 1 and tr._plan.n_clients == self.shards
 
     def build(self):
         tr = self.tr
@@ -253,15 +281,19 @@ class ShardEngine(Engine):
         def make_block_jit(length):
             block = rounds.make_block(step, tr.cfg, streamed=streamed)
 
-            def block_l(flat, opt_state, key, images, labels):
-                return block(flat, opt_state, key, images, labels, length)
+            def block_l(flat, opt_state, key, data):
+                return block(flat, opt_state, key, data, length)
 
             # P() entries covering the None (not collected) outputs map no
-            # leaves — harmless placeholders keeping the spec tree aligned
+            # leaves — harmless placeholders keeping the spec tree aligned.
+            # data_spec broadcasts over the batch pytree's leaves. On the
+            # 2-D mesh both specs leave the model axis unmentioned: data
+            # and carried state are replicated across model shards (the
+            # tensor-parallel slicing happens INSIDE client_grad).
             mapped = compat_shard_map(
                 block_l,
                 mesh=tr._mesh,
-                in_specs=(P(), P(), P(), data_spec, data_spec),
+                in_specs=(P(), P(), P(), data_spec),
                 out_specs=(P(), P(), P(), P(), P()),
             )
             return jax.jit(mapped, donate_argnums=(0, 1))
@@ -281,15 +313,15 @@ class ShardEngine(Engine):
             step = min(cfg.scan_block, n_rounds - done)
             if cfg.staging == "stream":
                 with tr.timings.scope("stage"):
-                    images, labels, nbytes = staging.stage_stream_block(
-                        tr.partition, cfg, tr._mesh, tr.slate, tr._key, step
+                    data, nbytes = staging.stage_stream_block(
+                        tr.task, cfg, tr._mesh, tr.slate, tr._key, step
                     )
                 tr.staged_bytes_last_block = nbytes
                 tr.staged_bytes_total += nbytes
             else:
-                images, labels = tr.client_images, tr.client_labels
+                data = tr.client_data
             out = self._block_jit(step)(
-                tr.flat, tr.opt_state, tr._key, images, labels
+                tr.flat, tr.opt_state, tr._key, data
             )
             tr._finish_block(out)
             done += step

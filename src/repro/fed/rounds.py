@@ -36,8 +36,15 @@ import jax.numpy as jnp
 from repro.core import secagg
 from repro.core.grid import GridGeometry
 from repro.fed import cohort
-from repro.fed.cnn import cnn_loss
 from repro.kernels.decode_apply_kernel import decode_apply_sum
+
+
+def index_batch(data, ids):
+    """Select client rows out of a staged data pytree: every leaf has the
+    clients axis leading, so a round's cohort batch is one gather per
+    leaf. The engines treat batches as OPAQUE — only the task looks
+    inside (fed/tasks.py)."""
+    return jax.tree_util.tree_map(lambda a: a[ids], data)
 
 
 def use_fused_apply(mech, cfg) -> bool:
@@ -52,26 +59,43 @@ def use_fused_apply(mech, cfg) -> bool:
             and isinstance(getattr(mech, "params", None), GridGeometry))
 
 
-def make_client_grad(mech, unravel, cfg):
+def make_client_grad(mech, unravel, cfg, task, ctx=None):
     """Per-client release: the clipped gradient (local_steps=1, Algorithm
     1 exactly) or the clipped NEGATIVE model delta of several local SGD
     steps (FedAvg-RQM — the server's w - lr*g_hat then moves toward the
     clients' local optima). Same DP accounting either way: one [-c,c]^f
-    vector per client per round."""
-    local_steps, local_lr = cfg.local_steps, cfg.local_lr
+    vector per client per round.
 
-    def client_grad(flat_params, images, labels):
-        if local_steps <= 1:
-            params = unravel(flat_params)
-            g = jax.grad(cnn_loss)(params, images, labels)
+    The objective comes from the TASK (fed/tasks.py): ``task.loss`` over
+    an opaque batch pytree. When ``ctx`` carries a model axis (the shard
+    engine's 2-D mesh, tp > 1), the gradient runs tensor-parallel —
+    shard the global params, take the local grad of the task's 1/tp-
+    corrected loss, then sync + all-gather back to the GLOBAL layout so
+    the clipped vector (and hence the encode integers) is identical on
+    every model shard."""
+    local_steps, local_lr = cfg.local_steps, cfg.local_lr
+    tp = int(getattr(ctx, "tp", 1) or 1) if ctx is not None else 1
+
+    if tp > 1:
+        def flat_grad(flat_params, batch):
+            local = task.shard_params(unravel(flat_params), ctx)
+            g_local = jax.grad(task.local_loss)(local, batch, ctx)
+            g = task.gather_grads(g_local, ctx)
             gflat, _ = jax.flatten_util.ravel_pytree(g)
-            return jnp.clip(gflat, -mech.clip, mech.clip)
+            return gflat
+    else:
+        def flat_grad(flat_params, batch):
+            g = jax.grad(task.loss)(unravel(flat_params), batch)
+            gflat, _ = jax.flatten_util.ravel_pytree(g)
+            return gflat
+
+    def client_grad(flat_params, batch):
+        if local_steps <= 1:
+            return jnp.clip(flat_grad(flat_params, batch),
+                            -mech.clip, mech.clip)
 
         def body(flat, _):
-            params = unravel(flat)
-            g = jax.grad(cnn_loss)(params, images, labels)
-            gflat, _ = jax.flatten_util.ravel_pytree(g)
-            return flat - local_lr * gflat, None
+            return flat - local_lr * flat_grad(flat, batch), None
 
         flat_new, _ = jax.lax.scan(body, flat_params, None, length=local_steps)
         delta = flat_params - flat_new
@@ -110,11 +134,11 @@ def make_round_step(mech, cfg, opt, slate, client_grad):
     fused = cfg.fused_rounds
     fused_apply = use_fused_apply(mech, cfg)
 
-    def round_step(flat, opt_state, key, images, labels):
+    def round_step(flat, opt_state, key, data):
         key, k_sample, k_enc, k_drop = cohort.split_round_keys(cfg, key)
         ids, valid = cohort.sample_slate(cfg, slate, k_sample)
-        grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
-            flat, images[ids], labels[ids]
+        grads = jax.vmap(client_grad, in_axes=(None, 0))(
+            flat, index_batch(data, ids)
         )
         # Shared clip->encode dispatch (clip is idempotent on the
         # already-clipped grads): one fused kernel call over the whole
@@ -165,19 +189,19 @@ def make_block(round_step, cfg, *, streamed: bool = False):
     ``streamed`` staging the per-round cohort data rides the scan xs
     (leading axis = rounds); otherwise the staged population is closed
     over as a scan-invariant. Returns
-    ``block(flat, opt_state, key, images, labels, length)``."""
+    ``block(flat, opt_state, key, data, length)``."""
     hetero = cohort.is_hetero(cfg)
     collect = cfg.collect_sums
 
-    def block(flat, opt_state, key, images, labels, length):
+    def block(flat, opt_state, key, data, length):
         def body(carry, xs):
             f, s, k = carry
-            im, lb = xs if streamed else (images, labels)
-            f, s, k, z_sum, n_real = round_step(f, s, k, im, lb)
+            b = xs if streamed else data
+            f, s, k, z_sum, n_real = round_step(f, s, k, b)
             return (f, s, k), (z_sum if collect else None,
                                n_real if hetero else None)
 
-        xs = (images, labels) if streamed else None
+        xs = data if streamed else None
         (flat, opt_state, key), (sums, ns) = jax.lax.scan(
             body, (flat, opt_state, key), xs, length=length,
             unroll=pick_unroll(cfg, length),
@@ -216,7 +240,7 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
     streamed = cfg.staging == "stream"
     multi = shards > 1
 
-    def round_step(flat, opt_state, key, images, labels):
+    def round_step(flat, opt_state, key, data):
         key, k_sample, k_enc, k_drop = cohort.split_round_keys(cfg, key)
         j = jax.lax.axis_index("shard") if multi else 0
         valid = None
@@ -225,17 +249,15 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
             # sampled order and sharded it over the mesh; the device
             # re-derives only the (replicated) validity mask from the
             # same k_sample the host replayed.
-            local_im, local_lb = images, labels
+            batch = data
             if hetero:
                 _, valid = cohort.sample_slate(cfg, slate, k_sample)
         else:
             ids, valid = cohort.sample_slate(cfg, slate, k_sample)
             if multi:
                 ids = jax.lax.dynamic_slice_in_dim(ids, j * n_per, n_per)
-            local_im, local_lb = images[ids], labels[ids]
-        grads = jax.vmap(client_grad, in_axes=(None, 0, 0))(
-            flat, local_im, local_lb
-        )
+            batch = index_batch(data, ids)
+        grads = jax.vmap(client_grad, in_axes=(None, 0))(flat, batch)
         local = None
         if hetero:
             # replicated full-slate participation; each shard masks its

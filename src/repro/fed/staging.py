@@ -7,8 +7,12 @@ stack-and-ship. ``stage_stream_block`` (the "shard" engine's
 ``staging="stream"``) materializes ONLY the next block's sampled cohorts
 by replaying the device key stream on the host, so simulated populations
 of 1e5-1e6 clients never exist in memory at once (docs/scaling.md).
-Both return ``(images, labels, nbytes)``; the trainer keeps the staging
-byte counters the memory tests assert on.
+
+Client data is an OPAQUE pytree owned by the task (fed/tasks.py): every
+client's ``task.client_batch(cid)`` must share leaf shapes/dtypes, and
+staging stacks each leaf along a leading clients axis (or, streamed,
+(rounds, slate) axes). Both entry points return ``(data, nbytes)``; the
+trainer keeps the staging byte counters the memory tests assert on.
 """
 from __future__ import annotations
 
@@ -22,54 +26,61 @@ from repro.fed import cohort
 from repro.fed.config import FedConfig
 
 
-def stage_full(partition, cfg: FedConfig, mesh=None):
-    """Stage the whole population on device: (N, s, 28, 28) images +
-    (N, s) labels. At the paper's scale (N=3400, s=20) this is ~210 MB.
-    On a shard mesh the population is replicated on every shard (sampling
-    is global, so any shard may need any client); ``stage_stream_block``
-    is the memory-bounded alternative."""
-    imgs, lbls = [], []
-    for i in range(cfg.num_clients):
-        im, lb = partition.client_data(i)
-        imgs.append(im)
-        lbls.append(lb)
-    images = jnp.asarray(np.stack(imgs))
-    labels = jnp.asarray(np.stack(lbls))
+def _stack_batches(batches):
+    """Stack a list of client pytrees leaf-wise along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *ls: np.stack(ls), *batches)
+
+
+def stage_full(task, cfg: FedConfig, mesh=None):
+    """Stage the whole population on device: every leaf gets a leading
+    (num_clients,) axis. At the paper's EMNIST scale (N=3400, s=20) this
+    is ~210 MB. On a shard mesh the population is replicated on every
+    shard (sampling is global, so any shard may need any client);
+    ``stage_stream_block`` is the memory-bounded alternative."""
+    data = _stack_batches([task.client_batch(i)
+                           for i in range(cfg.num_clients)])
+    data = jax.tree_util.tree_map(jnp.asarray, data)
     if mesh is not None:
         repl = NamedSharding(mesh, P())
-        images = jax.device_put(images, repl)
-        labels = jax.device_put(labels, repl)
-    return images, labels, images.nbytes + labels.nbytes
+        data = jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, repl), data)
+    nbytes = sum(a.nbytes for a in jax.tree_util.tree_leaves(data))
+    return data, nbytes
 
 
-def stage_stream_block(partition, cfg: FedConfig, mesh, slate: int,
+def stage_stream_block(task, cfg: FedConfig, mesh, slate: int,
                        key: jax.Array, length: int):
     """Streaming-cohort staging: materialize ONLY the next ``length``
     rounds' sampled cohorts (replaying the device key stream on the
     host — jax.random is deterministic in or out of jit) and ship them
-    sharded over the mesh. Host + device footprint per block is
-    O(length * slate) client datasets, independent of num_clients."""
+    sharded over the mesh's client axis. Host + device footprint per
+    block is O(length * slate) client datasets, independent of
+    num_clients."""
     ids_rounds = np.empty((length, slate), np.int64)
     for t in range(length):
         # replay exactly the device key evolution (3 splits per round,
         # 4 when heterogeneous cohorts draw a dropout key)
         key, k_sample, _, _drop = cohort.split_round_keys(cfg, key)
         ids_rounds[t] = np.asarray(cohort.sample_slate(cfg, slate, k_sample)[0])
-    imgs = lbls = None
+    leaves = treedef = None
     cache: dict = {}  # client data is deterministic — dedup within block
     for t in range(length):
         for u, cid in enumerate(ids_rounds[t]):
             cid = int(cid)
             if cid not in cache:
-                cache[cid] = partition.client_data(cid)
-            im, lb = cache[cid]
-            if imgs is None:
+                cache[cid] = task.client_batch(cid)
+            cl, cdef = jax.tree_util.tree_flatten(cache[cid])
+            if leaves is None:
                 # geometry/dtype come from the data pipeline itself, so
                 # streamed staging can never drift from stage_full
-                imgs = np.empty((length, slate) + im.shape, im.dtype)
-                lbls = np.empty((length, slate) + lb.shape, lb.dtype)
-            imgs[t, u], lbls[t, u] = im, lb
-    nbytes = imgs.nbytes + lbls.nbytes
+                treedef = cdef
+                leaves = [np.empty((length, slate) + l.shape, l.dtype)
+                          for l in cl]
+            for buf, l in zip(leaves, cl):
+                buf[t, u] = l
+    nbytes = sum(buf.nbytes for buf in leaves)
     shard = NamedSharding(mesh, P(None, "shard"))
-    return (jax.device_put(jnp.asarray(imgs), shard),
-            jax.device_put(jnp.asarray(lbls), shard), nbytes)
+    data = jax.tree_util.tree_unflatten(
+        treedef,
+        [jax.device_put(jnp.asarray(buf), shard) for buf in leaves])
+    return data, nbytes

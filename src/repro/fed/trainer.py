@@ -24,12 +24,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.mechanisms import Mechanism
 from repro.core.renyi import RenyiAccountant
-from repro.data.federated import FederatedPartition
 from repro.fed import checkpointing, cohort, rounds, staging
-from repro.fed.cnn import cnn_accuracy, cnn_init, cnn_loss
 from repro.fed.config import FedConfig, validate_config
 from repro.fed.engine import get_engine, make_engine
 from repro.fed import engines as _engines  # noqa: F401  (registers the four)
+from repro.fed.tasks import make_task
 from repro.optim import make_optimizer
 from repro.telemetry import RoundEmitter, Timings, make_tracker
 
@@ -50,6 +49,7 @@ class FedTrainer:
         self.cfg = fed_cfg
         self._mesh = None
         self._plan = None
+        self._task_ctx = None  # set by the shard engine on a 2-D mesh
         self.shards = 1
         # Heterogeneous cohorts (docs/privacy.md): Poisson subsampling and/or
         # dropout make the realized cohort size a per-round random variable.
@@ -68,6 +68,11 @@ class FedTrainer:
             tracker if tracker is not None else fed_cfg.track
         )
         self.timings = Timings()
+        # The TASK — what a round trains (fed/tasks.py): model init, the
+        # per-client loss over an opaque batch pytree, client data, eval.
+        # Built before the engine so the engine can bind a model axis
+        # (the shard engine's 2-D client x model mesh) onto it.
+        self.task = make_task(fed_cfg.task, fed_cfg)
         # The engine may claim resources (shard: device mesh) and adjust
         # the slate before anything is staged or traced.
         self.engine = engine_cls(self)
@@ -82,15 +87,8 @@ class FedTrainer:
         # — e.g. the async engine's staleness/arrival stats — folded into
         # the round records' "extra" column, schema untouched)
         self.round_extras: list = []
-        self.partition = FederatedPartition(
-            num_clients=fed_cfg.num_clients,
-            samples_per_client=fed_cfg.samples_per_client,
-            seed=fed_cfg.seed,
-            deform=fed_cfg.data_deform,
-            noise=fed_cfg.data_noise,
-        )
         key = jax.random.key(fed_cfg.seed)
-        self.params = cnn_init(key)
+        self.params = self.task.init_params(key)
         self.flat, self.unravel = jax.flatten_util.ravel_pytree(self.params)
         # The pluggable server optimizer (decode-then-apply boundary of
         # every engine). "sgd" is the paper's w - lr*g_hat, bit-identical
@@ -99,11 +97,6 @@ class FedTrainer:
             fed_cfg.server_opt, **(fed_cfg.server_opt_options or {})
         )
         self.opt_state = self.server_opt.init(self.flat)
-        ev_im, ev_lb = self.partition.gen.make_split(
-            seed=10_000 + fed_cfg.seed, size=fed_cfg.eval_size
-        )
-        self.eval_images = jnp.asarray(ev_im)
-        self.eval_labels = jnp.asarray(ev_lb)
         self._rng = np.random.default_rng(fed_cfg.seed + 7)  # host engine only
         self._key = jax.random.key(fed_cfg.seed + 11)
         self.accountant = RenyiAccountant(alphas=fed_cfg.accountant_alphas)
@@ -126,8 +119,8 @@ class FedTrainer:
         self._eps_by_n = {fed_cfg.clients_per_round: self._per_round_eps}
         if self.engine.stages_population and fed_cfg.staging != "stream":
             with self.timings.scope("stage"):
-                self.client_images, self.client_labels, nbytes = (
-                    staging.stage_full(self.partition, fed_cfg, self._mesh)
+                self.client_data, nbytes = staging.stage_full(
+                    self.task, fed_cfg, self._mesh
                 )
             self.staged_bytes_total += nbytes
         self._build_shared_jits()
@@ -159,6 +152,7 @@ class FedTrainer:
             "kind": "fed_train",
             "fingerprint": bytes(checkpointing.fingerprint(self)).hex(),
             "engine": cfg.engine,
+            "task": self.task.spec(),
             "mechanism": self.mech.describe(),
             "mechanism_spec": self.mech.spec(),
             "num_clients": cfg.num_clients,
@@ -195,22 +189,25 @@ class FedTrainer:
         else:
             self._emitter.emitted = self.accountant.rounds
 
-    # -- shared jits (host engine pieces + eval, every engine) ---------------
+    # -- shared jits (host engine pieces, every engine) ----------------------
     def _build_shared_jits(self):
         mech, unravel = self.mech, self.unravel
-        self._client_grad = rounds.make_client_grad(mech, unravel, self.cfg)
-        self._client_grads = jax.jit(
-            jax.vmap(self._client_grad, in_axes=(None, 0, 0))
+        # ctx carries the model axis ONLY on the shard engine's 2-D mesh:
+        # the tensor-parallel client_grad contains model-axis collectives
+        # and is valid only inside that engine's shard_map. Every other
+        # engine (and the host-side _client_grads jit) gets the plain
+        # single-shard gradient.
+        ctx = self._task_ctx
+        self._client_grad = rounds.make_client_grad(
+            mech, unravel, self.cfg, self.task, ctx=ctx
         )
+        if ctx is None:
+            self._client_grads = jax.jit(
+                jax.vmap(self._client_grad, in_axes=(None, 0))
+            )
         self._encode = jax.jit(jax.vmap(mech.encode, in_axes=(0, 0)))
         self._quantize_batch = jax.jit(lambda g, k: mech.quantize_batch(g, k))
         self._decode = jax.jit(lambda zsum, n: mech.decode_sum(zsum, n))
-        self._eval = jax.jit(
-            lambda flat, im, lb: cnn_accuracy(unravel(flat), im, lb)
-        )
-        self._eval_loss = jax.jit(
-            lambda flat, im, lb: cnn_loss(unravel(flat), im, lb)
-        )
 
     def _commit_to_mesh(self):
         repl = NamedSharding(self._mesh, P())
@@ -325,15 +322,18 @@ class FedTrainer:
         self._advance_tracked(n_rounds)
 
     def evaluate(self):
+        """Held-out metrics from the task; always reports "loss"."""
         flat = self.flat
-        if self._mesh is not None:
+        if self._mesh is not None and (
+            self._plan is None or self._plan.model_axis is None
+        ):
             # the shard engine leaves flat committed (replicated) on the
             # mesh; evaluate on an uncommitted host copy so the eval jit
             # never mixes device sets with the single-device eval arrays.
+            # (With a model axis the task evaluates ON the mesh instead —
+            # tensor-parallel eval needs the axis collectives.)
             flat = jnp.asarray(np.asarray(flat))
-        acc = float(self._eval(flat, self.eval_images, self.eval_labels))
-        loss = float(self._eval_loss(flat, self.eval_images, self.eval_labels))
-        return {"accuracy": acc, "loss": loss}
+        return self.task.evaluate(flat, self.unravel)
 
     def train(self, rounds: Optional[int] = None, eval_every: int = 25,
               log=print):
@@ -358,7 +358,11 @@ class FedTrainer:
             m = self.evaluate()
             m.update(round=done, seconds=round(time.time() - t0, 1))
             msg = (f"[{self.mech.name}] round {done:4d} "
-                   f"loss={m['loss']:.4f} acc={m['accuracy']:.4f}")
+                   f"loss={m['loss']:.4f}")
+            if "accuracy" in m:
+                msg += f" acc={m['accuracy']:.4f}"
+            if "ppl" in m:
+                msg += f" ppl={m['ppl']:.2f}"
             if budget is not None:
                 spent, remaining = self.budget_spent()
                 m.update(eps_spent=spent, eps_remaining=remaining)

@@ -66,5 +66,22 @@ def make_shard_mesh(shards: int = None):
     return compat_make_mesh((shards,), ("shard",))
 
 
+def make_fed_mesh(shards: int, model_shards: int):
+    """2-D ('shard', 'model') mesh for the federated shard engine with
+    tensor-parallel clients (FedConfig.model_shards > 1): the 'shard'
+    axis carries the cross-client integer SecAgg sum, the 'model' axis
+    Megatron-style tensor parallelism INSIDE each client's gradient
+    (docs/lm_federated.md). Needs shards * model_shards devices."""
+    want = shards * model_shards
+    if want > jax.device_count():
+        raise ValueError(
+            f"fed mesh wants {shards}x{model_shards}={want} devices, have "
+            f"{jax.device_count()} (on CPU export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={want} before "
+            f"importing jax)"
+        )
+    return compat_make_mesh((shards, model_shards), ("shard", "model"))
+
+
 def client_axes_of(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")

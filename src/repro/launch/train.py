@@ -1,6 +1,6 @@
 """Training launcher.
 
-Two modes:
+Three modes:
   * real run (CPU-feasible): reduced configs / small meshes — actually
     initializes params, streams synthetic LM batches, applies the chosen
     DP mechanism, logs loss, checkpoints.
@@ -9,6 +9,15 @@ Two modes:
   * mesh run: pass --mesh-shape to run sharded (requires that many
     devices; on CPU export XLA_FLAGS=--xla_force_host_platform_device_count=N
     before launch — the dry-run module does this for the production meshes).
+  * federated run: pass --fed-lm to train the SAME reduced config as a
+    federated private fine-tuning problem (the "lm" client task,
+    docs/lm_federated.md) — per-client token batches, clipped gradients,
+    integer randomized quantization, SecAgg-sum rounds on any registered
+    round engine. --steps becomes the round budget; --fed-shards /
+    --model-shards select the shard engine's 1-D or 2-D
+    ("shard", "model") mesh.
+      PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m \\
+          --reduced --fed-lm --steps 20 --batch 2 --seq 64
 """
 from __future__ import annotations
 
@@ -92,7 +101,28 @@ def main():
                          "'json:runs/lm.json', 'csv:runs/lm.csv', or a "
                          "'+'-joined composite; one record per step "
                          "(docs/telemetry.md)")
+    ap.add_argument("--fed-lm", action="store_true",
+                    help="federated private LM fine-tuning: run --arch as "
+                         "the 'lm' client task through a FedTrainer "
+                         "(docs/lm_federated.md); --steps is the round "
+                         "budget, --batch/--seq the PER-CLIENT batch")
+    ap.add_argument("--fed-engine", default="scan",
+                    help="round engine spec for --fed-lm (scan | perround "
+                         "| host | shard[:shards=..] | async[:..])")
+    ap.add_argument("--clients", type=int, default=64,
+                    help="--fed-lm population size")
+    ap.add_argument("--cohort", type=int, default=8,
+                    help="--fed-lm clients per round")
+    ap.add_argument("--fed-shards", type=int, default=None,
+                    help="--fed-lm shard-engine client shards")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="--fed-lm tensor-parallel model shards: > 1 "
+                         "extends the shard engine to the 2-D "
+                         "('shard', 'model') mesh (needs fed-shards * "
+                         "model-shards devices)")
     args = ap.parse_args()
+    if args.fed_lm:
+        return _fed_lm(args, ap)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     shape = InputShape("cli", args.seq, args.batch, "train")
@@ -200,6 +230,52 @@ def main():
         )
         _loop(args, cfg, pipe, step_fn, params, opt_state, key, start,
               tracker=tracker, mech_desc=mech.describe())
+
+
+def _fed_lm(args, ap):
+    """--fed-lm: the federated counterpart of the per-step LM run — the
+    'lm' client task (fed/tasks.py) on any registered round engine, with
+    the full FedTrainer surface (privacy accounting, checkpoints on
+    round boundaries, tracker records per round)."""
+    from repro.fed import FedConfig, FedTrainer
+
+    if args.target_eps is not None:
+        ap.error("--fed-lm does not take --target-eps yet: calibrate the "
+                 "mechanism against the cohort with repro.privacy.calibrate "
+                 "and pass the resulting spec via --mechanism")
+    if args.mesh_shape:
+        ap.error("--fed-lm meshes come from the round engine: use "
+                 "--fed-engine shard with --fed-shards/--model-shards "
+                 "instead of --mesh-shape")
+    if not args.reduced:
+        ap.error("--fed-lm requires --reduced (federated fine-tuning of "
+                 "the full-size configs is not CPU-feasible)")
+    mech = make_mechanism(
+        args.mechanism, c=args.clip, m=args.m, q=args.q,
+        delta_ratio=args.delta_ratio,
+    )
+    task = (f"lm:model={args.arch},seq_len={args.seq},"
+            f"batch={args.batch}")
+    cfg = FedConfig(
+        engine=args.fed_engine, task=task, rounds=args.steps,
+        num_clients=args.clients, clients_per_round=args.cohort,
+        lr=args.lr, seed=args.seed, server_opt=args.server_opt,
+        shards=args.fed_shards, model_shards=args.model_shards,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    tr = FedTrainer(mech, cfg, tracker=make_tracker(args.track))
+    eps = tr._per_round_eps[0] if len(tr._per_round_eps) else float("nan")
+    print(f"[fed-lm] task={tr.task.spec()} engine={cfg.engine} "
+          f"dim={int(tr.flat.size)} cohort={args.cohort}/{args.clients} "
+          f"per-round eps(alpha={cfg.accountant_alphas[0]:g})={eps:.4f}")
+    start = 0
+    if args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("--resume requires --ckpt-dir")
+        start = tr.restore_checkpoint()
+        print(f"[resume] restored round {start} from {args.ckpt_dir}")
+    tr.train(rounds=args.steps - start,
+             eval_every=max(args.log_every, 1))
 
 
 def _opt_fingerprint(server_opt: str) -> np.ndarray:

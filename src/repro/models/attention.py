@@ -121,7 +121,12 @@ def _attend_chunk(q_blk, k, v, q_pos, k_pos, spec: AttentionSpec):
     """q_blk: (B, C, kvl, qpg, hd); k/v: (B, Sk, kvl, hd). Causal + window."""
     scores = jnp.einsum("bckgh,bskh->bkgcs", q_blk, k).astype(jnp.float32)
     scores = scores * spec.scale
-    causal = q_pos[:, None] >= k_pos[None, :]  # (C, Sk)
+    # k_pos >= 0 masks the windowed path's front padding: a query at
+    # q_pos < window otherwise ATTENDS the zero-vector padding keys
+    # (score 0 is not -inf — it survives the softmax and dilutes the
+    # distribution), which made the chunked forward disagree with the
+    # un-padded decode path for every position before the window fills.
+    causal = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] >= 0)
     if spec.window is not None:
         causal &= k_pos[None, :] > q_pos[:, None] - spec.window
     scores = jnp.where(causal[None, None, None], scores, NEG_INF)

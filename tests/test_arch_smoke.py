@@ -124,15 +124,12 @@ class TestDecodeConsistency:
         ref = model_lib.lm_head_argmax(params, CTX, h[:, -1])
         np.testing.assert_array_equal(np.asarray(nxt), np.asarray(ref))
 
-    # gemma3-4b decode/teacher-forced mismatch is a pre-existing seed
-    # failure (documented in CHANGES.md). xfail(strict=False) keeps local
-    # pytest and CI in agreement without a CI-side deselect list, and a
-    # surprise fix shows up as XPASS instead of silence.
+    # gemma3-4b decode vs teacher-forced forward: fixed — the chunked
+    # sliding-window forward let queries before the window filled attend
+    # the zero-vector front-padding keys (attention._attend_chunk now
+    # masks k_pos < 0); the decode path had been correct all along.
     @pytest.mark.parametrize("arch", [
-        pytest.param("gemma3-4b", marks=pytest.mark.xfail(
-            strict=False,
-            reason="pre-existing seed failure: gemma3 incremental decode "
-                   "disagrees with the teacher-forced forward")),
+        "gemma3-4b",
         "mamba2-370m",
         "zamba2-1.2b",
     ])

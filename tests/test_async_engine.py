@@ -305,8 +305,6 @@ class TestAsyncValidation:
             _trainer("async", subsampling="poisson")
         with pytest.raises(ValueError, match="async_timeout.*not.*dropout"):
             _trainer("async", dropout=0.3)
-        with pytest.raises(ValueError, match="does not checkpoint"):
-            _trainer("async", ckpt_dir="/tmp/nope")
         with pytest.raises(ValueError, match="async_rate must be > 0"):
             _trainer("async:rate=0")
         with pytest.raises(ValueError, match="unknown staleness weight"):

@@ -1,0 +1,304 @@
+"""The client-task registry (fed/tasks.py, ISSUE 9).
+
+Three contracts:
+
+  1. BIT-IDENTITY OF THE DEFAULT TASK: the registry refactor must not
+     move a single bit of the EMNIST-CNN trajectory on ANY engine. The
+     golden digests in tests/golden/fed_trajectories.json were captured
+     at the last pre-registry commit (scripts/make_task_digests.py);
+     every engine/config case must still land exactly on them.
+  2. THE "lm" TASK IS A FIRST-CLASS ROUND WORKLOAD: the engine parity
+     guarantees (scan == perround == 1-shard shard, bit for bit) hold
+     for federated LM fine-tuning too — the engines never look inside
+     a batch pytree, so parity cannot depend on the task. (The 2-D
+     ("shard", "model") mesh properties run in a subprocess with 4 fake
+     CPU devices — tests/fed_lm_2d_checks.py.)
+  3. ENGINE CHECKPOINT STATE (ISSUE-9 satellites): the async engine's
+     arrival trace + parameter-version ring ride the checkpoint, so
+     async resume is bit-identical; and fingerprints canonicalize spec
+     strings (engine="async:cadence=6" == the expanded config) while
+     still rejecting genuinely different trajectories.
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from conftest import SMALL_FED, TINY_CLIP
+from conftest import small_trainer as _trainer
+
+from repro.fed.checkpointing import fingerprint
+from repro.fed.config import FedConfig, validate_config
+from repro.fed.tasks import (
+    ClientTask, get_task, make_task, task_names, tree_nbytes,
+)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+with open(os.path.join(HERE, "golden", "fed_trajectories.json")) as f:
+    GOLDEN = json.load(f)
+
+# a tiny federated LM problem: a shrunk mamba2-370m over 8 clients
+LM_TASK = "lm:model=mamba2-370m,seq_len=16,batch=1"
+LM_FED = dict(num_clients=8, clients_per_round=4, rounds=3, lr=0.5,
+              samples_per_client=8, task=LM_TASK)
+
+
+def _quiet_train(tr, rounds):
+    return tr.train(rounds=rounds, eval_every=rounds, log=lambda *_: None)
+
+
+class TestGoldenDigests:
+    """Contract 1: pre-refactor trajectories, bit for bit, per engine."""
+
+    def test_golden_problem_matches_suite_constants(self):
+        # the digests pin the SAME tiny problem conftest defines — if
+        # either drifts, every digest case would chase the wrong config
+        assert GOLDEN["fed"] == SMALL_FED
+        assert GOLDEN["clip"] == TINY_CLIP
+        assert GOLDEN["task"] == "emnist_cnn"
+
+    @pytest.mark.parametrize("case", sorted(GOLDEN["cases"]))
+    def test_trajectory_digest(self, case):
+        info = GOLDEN["cases"][case]
+        tr = _trainer(info["engine"], **info["overrides"])
+        _quiet_train(tr, info["rounds"])
+        flat = np.asarray(tr.flat, dtype=np.float32)
+        assert hashlib.sha256(flat.tobytes()).hexdigest() == \
+            info["params_sha256"], f"{case}: parameter trajectory moved"
+        np.testing.assert_allclose(float(np.linalg.norm(flat)),
+                                   info["params_l2"], rtol=1e-6)
+        eps = np.concatenate([np.asarray(h, np.float64).ravel()
+                              for h in tr.accountant.history])
+        assert hashlib.sha256(eps.tobytes()).hexdigest() == \
+            info["eps_sha256"], f"{case}: accounted eps history moved"
+        assert [int(n) for n in tr.realized_n] == info["realized_n"]
+
+
+class TestTaskRegistry:
+    def test_registered_names_in_order(self):
+        assert task_names() == ("emnist_cnn", "lm")
+
+    def test_unknown_task_rejected(self):
+        with pytest.raises(ValueError, match="unknown task"):
+            get_task("gan")
+        with pytest.raises(ValueError, match="unknown task"):
+            _trainer("scan", task="gan")
+
+    def test_unknown_option_rejected_with_accepted_set(self):
+        with pytest.raises(ValueError, match="does not accept.*accepted"):
+            make_task("lm:window=9", FedConfig(**SMALL_FED))
+        # emnist_cnn takes ONLY the shared FedConfig (no spec options)
+        with pytest.raises(ValueError, match="does not accept"):
+            make_task("emnist_cnn:batch=4", FedConfig(**SMALL_FED))
+
+    def test_spec_round_trips_canonically(self):
+        cfg = FedConfig(**SMALL_FED)
+        t = make_task("lm:seq_len=32,batch=1", cfg)
+        assert t.spec() == "lm:batch=1,seq_len=32"  # sorted, canonical
+        t2 = make_task(t.spec(), cfg)
+        assert t2.spec() == t.spec()
+        assert make_task("emnist_cnn", cfg).spec() == "emnist_cnn"
+
+    def test_prebuilt_task_passes_through(self):
+        cfg = FedConfig(**SMALL_FED)
+        t = make_task("emnist_cnn", cfg)
+        assert make_task(t, cfg) is t
+
+    def test_base_class_rejects_model_axis(self):
+        t = make_task("emnist_cnn", FedConfig(**SMALL_FED))
+        assert not t.supports_model_axis
+        with pytest.raises(ValueError, match="model axis"):
+            t.bind_model_axis(None)
+
+    def test_emnist_batch_pytree_shape(self):
+        t = make_task("emnist_cnn", FedConfig(**SMALL_FED))
+        b = t.client_batch(0)
+        assert set(b) == {"images", "labels"}
+        s = SMALL_FED["samples_per_client"]
+        assert b["images"].shape == (s, 28, 28)
+        assert b["labels"].shape == (s,)
+        assert tree_nbytes(b) == s * (28 * 28 * 4 + 4)
+
+    def test_model_shards_validation(self):
+        with pytest.raises(ValueError, match="model_shards"):
+            validate_config(FedConfig(model_shards=0, **SMALL_FED))
+        # a 2-D client x model mesh only exists on the shard engine
+        with pytest.raises(ValueError, match="engine"):
+            validate_config(
+                FedConfig(engine="scan", model_shards=2, **SMALL_FED)
+            )
+
+    def test_single_shard_task_rejected_on_model_axis(self):
+        # the task capability is checked BEFORE the mesh is built, so
+        # this fails fast even on a single-device host
+        with pytest.raises(ValueError, match="supports_model_axis"):
+            _trainer("shard", shards=1, model_shards=2)
+
+
+class TestLmTask:
+    """Contract 2: engine parity is task-independent."""
+
+    def test_scan_equals_perround_bit_for_bit(self):
+        a = _trainer("scan", **LM_FED)
+        b = _trainer("perround", **LM_FED)
+        _quiet_train(a, 3)
+        _quiet_train(b, 3)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+        assert a.realized_n == b.realized_n
+
+    def test_one_shard_shard_equals_scan(self):
+        a = _trainer("scan", **LM_FED)
+        b = _trainer("shard", shards=1, **LM_FED)
+        _quiet_train(a, 3)
+        _quiet_train(b, 3)
+        np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+
+    def test_client_batches_are_deterministic_token_pytrees(self):
+        t = make_task(LM_TASK, FedConfig(**LM_FED))
+        b0, b0again, b1 = t.client_batch(0), t.client_batch(0), t.client_batch(1)
+        assert set(b0) == {"tokens", "labels"}
+        assert b0["tokens"].shape == (1, 16)
+        for k in b0:
+            np.testing.assert_array_equal(b0[k], b0again[k])
+        assert any(not np.array_equal(b0[k], b1[k]) for k in b0)
+
+    def test_train_reports_loss_and_ppl(self):
+        tr = _trainer("scan", **LM_FED)
+        hist = _quiet_train(tr, 3)
+        ev = hist[-1]
+        assert np.isfinite(ev["loss"]) and ev["ppl"] > 1.0
+        assert "accuracy" not in ev  # LM eval has no accuracy metric
+        np.testing.assert_allclose(ev["ppl"], np.exp(ev["loss"]), rtol=1e-6)
+
+    def test_training_moves_parameters(self):
+        tr = _trainer("scan", **LM_FED)
+        before = np.asarray(tr.flat).copy()
+        _quiet_train(tr, 2)
+        after = np.asarray(tr.flat)
+        assert np.isfinite(after).all()
+        assert not np.array_equal(before, after)
+
+
+class TestAsyncCheckpointResume:
+    """Contract 3a (ISSUE-9 satellite): the async engine's trajectory
+    state — arrival-simulator RNG + aggregation-time trace + the
+    parameter-version ring — rides the checkpoint, so a resumed async
+    run is bit-identical to the uninterrupted one."""
+
+    ROUNDS, MID = 6, 3
+
+    def _resume_case(self, tmp_path, engine, **overrides):
+        ckpt = str(tmp_path / "async")
+        ref = _trainer(engine, rounds=self.ROUNDS, **overrides)
+        _quiet_train(ref, self.ROUNDS)
+        full = _trainer(engine, rounds=self.ROUNDS, ckpt_dir=ckpt,
+                        ckpt_every=self.MID, **overrides)
+        _quiet_train(full, self.ROUNDS)
+        res = _trainer(engine, rounds=self.ROUNDS, ckpt_dir=ckpt,
+                       ckpt_every=self.MID, **overrides)
+        assert res.restore_checkpoint(step=self.MID) == self.MID
+        _quiet_train(res, self.ROUNDS - self.MID)
+        return ref, res
+
+    def test_async_checkpoint_resume(self, tmp_path):
+        ref, res = self._resume_case(
+            tmp_path, "async:max_staleness=2,timeout=3.0"
+        )
+        np.testing.assert_array_equal(np.asarray(ref.flat),
+                                      np.asarray(res.flat))
+        # the staleness ring itself round-tripped
+        np.testing.assert_array_equal(np.asarray(ref.engine._hist),
+                                      np.asarray(res.engine._hist))
+        assert res.realized_n == ref.realized_n
+        for t, (x, y) in enumerate(zip(ref.accountant.history,
+                                       res.accountant.history)):
+            np.testing.assert_array_equal(x, y, err_msg=f"round {t}")
+        # the simulated clock and arrival RNG continued, not restarted
+        assert res.engine.sim._agg_times == ref.engine.sim._agg_times
+        assert (res.engine.sim._rng.bit_generator.state
+                == ref.engine.sim._rng.bit_generator.state)
+
+    def test_plain_corner_checkpoint_resume(self, tmp_path):
+        """The synchronous degenerate corner has no ring (its round step
+        IS perround's) but still checkpoints its arrival trace."""
+        ref, res = self._resume_case(tmp_path, "async")
+        assert res.engine._plain
+        np.testing.assert_array_equal(np.asarray(ref.flat),
+                                      np.asarray(res.flat))
+        assert res.engine.sim._agg_times == ref.engine.sim._agg_times
+
+
+class TestFingerprintCanonicalization:
+    """Contract 3b (ISSUE-9 satellite): spec strings and expanded config
+    fields fingerprint identically; different trajectories never do."""
+
+    def test_spec_string_equals_expanded_fields(self):
+        # cadence's None default resolves to clients_per_round (6 here):
+        # all three spellings are the SAME arrival trajectory
+        a = _trainer("async")
+        b = _trainer("async:cadence=6")
+        c = _trainer("async", async_cadence=6)
+        assert np.array_equal(fingerprint(a), fingerprint(b))
+        assert np.array_equal(fingerprint(a), fingerprint(c))
+
+    def test_task_spec_is_fingerprinted(self):
+        a = _trainer("scan")
+        b = _trainer("scan", **LM_FED)
+        assert not np.array_equal(fingerprint(a), fingerprint(b))
+
+    def test_different_async_trajectory_differs(self):
+        a = _trainer("async")
+        for spec in ("async:max_staleness=2", "async:rate=20.0",
+                     "async:latency=2.5", "async:arrivals=diurnal"):
+            assert not np.array_equal(fingerprint(a),
+                                      fingerprint(_trainer(spec))), spec
+
+    def test_async_and_device_families_do_not_cross_resume(self, tmp_path):
+        ckpt = str(tmp_path / "family")
+        a = _trainer("async", rounds=4, ckpt_dir=ckpt)
+        _quiet_train(a, 2)
+        a.save_checkpoint()
+        # an async checkpoint must not restore into a device-family
+        # trainer (different arrival trajectory) ...
+        with pytest.raises(ValueError, match="fingerprint"):
+            _trainer("scan", rounds=4, ckpt_dir=ckpt).restore_checkpoint()
+        # ... nor into an async trainer with different arrival traffic
+        with pytest.raises(ValueError, match="fingerprint"):
+            _trainer("async:max_staleness=2", rounds=4,
+                     ckpt_dir=ckpt).restore_checkpoint()
+        # the same spelling restores fine
+        same = _trainer("async", rounds=4, ckpt_dir=ckpt)
+        assert same.restore_checkpoint() == 2
+
+    def test_device_checkpoint_rejected_by_async(self, tmp_path):
+        ckpt = str(tmp_path / "dev")
+        a = _trainer("scan", rounds=4, ckpt_dir=ckpt)
+        _quiet_train(a, 2)
+        a.save_checkpoint()
+        with pytest.raises(ValueError, match="fingerprint"):
+            _trainer("async", rounds=4, ckpt_dir=ckpt).restore_checkpoint()
+
+
+@pytest.mark.slow
+def test_lm_2d_mesh_checks_subprocess():
+    """2-D ("shard", "model") mesh properties for the lm task (see
+    tests/fed_lm_2d_checks.py), in a subprocess with 4 fake CPU devices
+    so the main process keeps the default single device."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, os.path.join(HERE, "fed_lm_2d_checks.py")],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    if "NEEDS 4 DEVICES" in p.stdout:
+        pytest.skip("subprocess could not materialize 4 fake CPU devices: "
+                    f"{p.stdout.strip().splitlines()[-1]}")
+    assert p.returncode == 0, (
+        f"STDOUT:\n{p.stdout[-3000:]}\nSTDERR:\n{p.stderr[-3000:]}"
+    )
+    assert "ALL LM 2-D MESH CHECKS PASS" in p.stdout
