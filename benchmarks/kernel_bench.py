@@ -4,6 +4,14 @@ Times the fused-jnp production path (what the train step lowers on this
 container), the Pallas interpret-mode kernel (correctness runtime), and the
 (m+1)-uniforms reference — the memory-traffic argument for the in-kernel
 counter-based RNG (the reference reads ~17x the bytes).
+
+The wire-codec section times the dense b-bit pack/unpack (core/wire.py)
+and the PACKED fused round sum, and records the DETERMINISTIC wire-byte
+metrics next to the timings: SecAgg bytes per round and uplink bytes per
+client payload, packed vs int32 lanes. Bytes are what the codec exists
+to shrink — scripts/check_bench_regression.py gates on them exactly
+(any increase fails; timing metrics stay threshold-warn-only because CI
+containers are noisy, but bytes are arithmetic).
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import rqm as rqm_lib
+from repro.core import wire
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
 from repro.kernels import ops
@@ -91,12 +100,56 @@ def run(csv=print):
     csv(f"rqm_round_sum_1024x8192,{us_fus:.0f},"
         f"fused_vs_materialized={us_mat/us_fus:.2f}x;"
         f"temp_mib={fus_tmp/2**20:.2f}_vs_{mat_tmp/2**20:.2f}")
+
+    # dense b-bit wire codec (core/wire.py): pack/unpack throughput at
+    # the m=16 payload width, and the PACKED fused round sum at the
+    # paper cohort (n=40 -> 10-bit sums, 3 fields/word). The byte
+    # metrics alongside are deterministic — the regression checker gates
+    # on them exactly.
+    p_bits = wire.payload_bits(PARAMS.m)           # 4: one client's levels
+    z = (jnp.arange(N, dtype=jnp.int32) * 7919) % PARAMS.m
+    us_pack = _time(jax.jit(lambda z: wire.pack_bits(z, p_bits)), z)
+    words = wire.pack_bits(z, p_bits)
+    us_unpack = _time(
+        jax.jit(lambda w: wire.unpack_bits(w, p_bits, N)), words
+    )
+    payload_packed = wire.packed_nbytes(N, p_bits)
+    csv(f"wire_pack_1M,{us_pack:.0f},unpack={us_unpack:.0f}us;"
+        f"payload_bytes={payload_packed}_vs_{N*4}_dense="
+        f"{N*4/payload_packed:.1f}x")
+
+    s_rows, s_dim = 40, 25_000
+    s_bits = wire.sum_bits(s_rows * (PARAMS.m - 1))  # 10
+    xs = jax.random.uniform(
+        jax.random.key(5), (s_rows, s_dim), jnp.float32, -1, 1
+    )
+    dense_sum_jit = jax.jit(lambda xb: ops.rqm_round_sum(xb, key, PARAMS))
+    packed_sum_jit = jax.jit(
+        lambda xb: ops.rqm_round_sum(xb, key, PARAMS, pack_bits=s_bits)
+    )
+    us_sum_dense = _time(dense_sum_jit, xs, reps=3)
+    us_sum_packed = _time(packed_sum_jit, xs, reps=3)
+    secagg_packed = wire.packed_nbytes(s_dim, s_bits)
+    csv(f"rqm_round_sum_packed_40x25k,{us_sum_packed:.0f},"
+        f"dense={us_sum_dense:.0f}us;"
+        f"secagg_bytes={secagg_packed}_vs_{s_dim*4}_dense="
+        f"{s_dim*4/secagg_packed:.1f}x")
+
     return {"rqm_fast_us": us_fast, "ref_us": us_ref, "pbm_fast_us": us_pbm,
             "interpret_us": us_interp, "batch_us": us_batch,
             "vmap_us": us_vmap, "round_sum_us": us_fus,
             "round_sum_materialized_us": us_mat,
             "round_sum_temp_bytes": int(fus_tmp),
-            "round_sum_materialized_temp_bytes": int(mat_tmp)}
+            "round_sum_materialized_temp_bytes": int(mat_tmp),
+            "wire_pack_us": us_pack, "wire_unpack_us": us_unpack,
+            "payload_bits": int(p_bits),
+            "payload_wire_bytes": int(payload_packed),
+            "payload_dense_bytes": int(N * 4),
+            "round_sum_packed_us": us_sum_packed,
+            "round_sum_packed_dense_us": us_sum_dense,
+            "secagg_sum_bits": int(s_bits),
+            "secagg_wire_bytes": int(secagg_packed),
+            "secagg_dense_bytes": int(s_dim * 4)}
 
 
 def bench_json(path):
@@ -124,6 +177,21 @@ def bench_json(path):
                 "temp_bytes": results["round_sum_temp_bytes"],
                 "materialized_temp_bytes":
                     results["round_sum_materialized_temp_bytes"],
+            },
+            # wire_bytes keys are gated EXACTLY by the regression
+            # checker: packing is arithmetic, any byte increase means
+            # the codec stopped engaging (a real regression, not noise)
+            "wire_pack_1M": {"us": results["wire_pack_us"],
+                             "unpack_us": results["wire_unpack_us"],
+                             "bits": results["payload_bits"],
+                             "wire_bytes": results["payload_wire_bytes"],
+                             "dense_bytes": results["payload_dense_bytes"]},
+            "rqm_round_sum_packed_40x25k": {
+                "us": results["round_sum_packed_us"],
+                "dense_us": results["round_sum_packed_dense_us"],
+                "bits": results["secagg_sum_bits"],
+                "wire_bytes": results["secagg_wire_bytes"],
+                "dense_bytes": results["secagg_dense_bytes"],
             },
     }
     return write_bench_json(path, meta, {"kernels": kernels})

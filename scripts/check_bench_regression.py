@@ -11,6 +11,13 @@ and names present on BOTH sides are compared; a baseline metric with no
 fresh counterpart is reported as MISSING (a bench silently dropped from
 the suite is itself a regression — it fails under ``--strict``).
 
+WIRE-BYTE metrics are gated separately and EXACTLY: any
+``payloads.kernels.<name>.wire_bytes`` entry (BENCH_kernels.json — the
+dense b-bit codec's SecAgg/uplink bytes) is deterministic arithmetic,
+not a noisy timing, so ANY increase over the baseline is a regression
+regardless of the timing threshold (the codec stopped engaging or a
+width widened silently).
+
 Default mode only warns (CI containers are noisy neighbors; the push
 lane prints the comparison next to the uploaded artifacts for a human
 to read). ``--strict`` turns any regression into exit 1.
@@ -45,8 +52,19 @@ def extract_metrics(doc: dict) -> dict:
     return out
 
 
-def load_dir(d: str) -> dict:
-    metrics = {}
+def extract_wire_bytes(doc: dict) -> dict:
+    """name -> wire bytes (LOWER is better, gated exactly) from the
+    kernel-bench payloads."""
+    out = {}
+    payloads = doc.get("payloads") or {}
+    for name, entry in (payloads.get("kernels") or {}).items():
+        if isinstance(entry, dict) and "wire_bytes" in entry:
+            out[f"wire/{name}"] = entry["wire_bytes"]
+    return out
+
+
+def load_dir(d: str) -> tuple:
+    metrics, wire_bytes = {}, {}
     for path in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
         try:
             with open(path) as f:
@@ -56,7 +74,8 @@ def load_dir(d: str) -> dict:
                   file=sys.stderr)
             continue
         metrics.update(extract_metrics(doc))
-    return metrics
+        wire_bytes.update(extract_wire_bytes(doc))
+    return metrics, wire_bytes
 
 
 def main():
@@ -72,17 +91,34 @@ def main():
                     help="exit 1 on any regression instead of warning")
     args = ap.parse_args()
 
-    base = load_dir(args.baselines)
-    cur = load_dir(args.current)
-    if not base:
+    base, base_wire = load_dir(args.baselines)
+    cur, cur_wire = load_dir(args.current)
+    if not base and not base_wire:
         print(f"[bench-check] no baselines in {args.baselines}; nothing "
               f"to compare")
         return 0
+
+    # wire bytes first: exact gating, no noise threshold — a byte count
+    # that grew means the packing stopped engaging or a width widened
+    wire_regressions = []
+    for name in sorted(set(base_wire) & set(cur_wire)):
+        b, c = base_wire[name], cur_wire[name]
+        status = "REGRESSION" if c > b else "ok"
+        print(f"[bench-check] {name}: baseline {b} -> current {c} bytes "
+              f"{status}")
+        if c > b:
+            wire_regressions.append(name)
+    if wire_regressions:
+        print(f"[bench-check] WARNING: wire bytes INCREASED on "
+              f"{', '.join(wire_regressions)} — the b-bit codec is no "
+              f"longer packing at the baseline width (core/wire.py)",
+              file=sys.stderr)
+
     shared = sorted(set(base) & set(cur))
     if not shared:
         print(f"[bench-check] no shared metrics between {args.baselines} "
               f"({sorted(base)}) and {args.current} ({sorted(cur)})")
-        return 0
+        return 1 if (args.strict and wire_regressions) else 0
     # a baseline metric the fresh artifacts no longer produce is itself a
     # finding (a bench silently dropped from the suite, a renamed metric,
     # a crashed run whose artifact never landed) — never skip it silently
@@ -107,10 +143,12 @@ def main():
               f"before trusting (containers are noisy; see "
               f"scripts/make_baselines.py)", file=sys.stderr)
         return 1 if args.strict else 0
-    if missing:
+    if missing or wire_regressions:
         return 1 if args.strict else 0
     print(f"[bench-check] all {len(shared)} shared metrics within "
-          f"{args.threshold:.0%} of baseline")
+          f"{args.threshold:.0%} of baseline"
+          + (f" and {len(set(base_wire) & set(cur_wire))} wire-byte "
+             f"metrics at or under baseline" if base_wire else ""))
     return 0
 
 

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from repro.core import pbm as pbm_lib
 from repro.core import qmgeo as qmgeo_lib
 from repro.core import rqm as rqm_lib
+from repro.core import wire
 from repro.core.grid import RQMParams
 from repro.core.pbm import PBMParams
 from repro.core.qmgeo import QMGeoParams
@@ -140,7 +141,8 @@ class Mechanism:
 
     def encode_sum_batch(self, x: jnp.ndarray, key: jax.Array, *,
                          weights=None, row_offset=None,
-                         total_rows: int = None) -> jnp.ndarray:
+                         total_rows: int = None,
+                         pack_bits: int = None) -> jnp.ndarray:
         """Fused encode + weighted sum over the client axis: the SecAgg
         input ``sum_i weights[i] * encode(x[i])`` as ONE (dim,) reduction.
 
@@ -155,12 +157,21 @@ class Mechanism:
 
         ``weights``: optional (clients,) int participation mask (0 rows
         contribute nothing); ``row_offset``/``total_rows``: shard-local
-        slice position, exactly as in ``encode_batch``."""
+        slice position, exactly as in ``encode_batch``. ``pack_bits``:
+        when set, the returned sum is BIT-PACKED into
+        ``ceil(dim / (32 // pack_bits))`` int32 words (core/wire.py) —
+        exact whenever every coordinate's sum fits ``pack_bits`` bits,
+        which the caller guarantees via ``wire.check_packable``. The
+        fallback packs the dense sum (same words by linearity); kernel
+        backends accumulate packed words directly."""
         z = self.encode_batch(x, key, row_offset=row_offset,
                               total_rows=total_rows)
         if weights is not None:
             z = z * weights.astype(z.dtype)[:, None]
-        return jnp.sum(z, axis=0, dtype=z.dtype)
+        z_sum = jnp.sum(z, axis=0, dtype=z.dtype)
+        if pack_bits is not None:
+            return wire.pack_bits(z_sum, pack_bits)
+        return z_sum
 
     def decode_sum(self, z_sum: jnp.ndarray, n: int) -> jnp.ndarray:
         raise NotImplementedError
@@ -207,14 +218,43 @@ class Mechanism:
 
     def quantize_sum_batch(self, g: jnp.ndarray, key: jax.Array, *,
                            weights=None, row_offset=None,
-                           total_rows: int = None) -> jnp.ndarray:
+                           total_rows: int = None,
+                           pack_bits: int = None) -> jnp.ndarray:
         """clip + fused encode-and-sum — the FedConfig.fused_rounds hot
         path: the round engines hand over the whole (clients, dim) stack
-        and get back only the dim-length aggregate that crosses SecAgg."""
+        and get back only the dim-length aggregate that crosses SecAgg
+        (bit-packed into int32 words when ``pack_bits`` is set; see
+        ``encode_sum_batch``)."""
         g = jnp.clip(g.astype(jnp.float32), -self.clip, self.clip)
         return self.encode_sum_batch(g, key, weights=weights,
                                      row_offset=row_offset,
-                                     total_rows=total_rows)
+                                     total_rows=total_rows,
+                                     pack_bits=pack_bits)
+
+    # -- wire format (core/wire.py) ------------------------------------------
+    @property
+    def payload_bits(self):
+        """Minimal width of ONE client's message fields — the bit length
+        of ``sum_bound(1)`` (RQM m=16: levels reach 15 -> 4 bits; PBM
+        m=16: levels reach m -> 5 bits). None for mechanisms whose
+        payloads are not bounded integers (the float baseline)."""
+        b = self.sum_bound(1)
+        return wire.sum_bits(b) if b > 0 else None
+
+    def encode_wire(self, g, key: jax.Array):
+        """Clip + encode one client vector and pack it at the minimal
+        payload width: the host-side ``wire.PackedPayload`` a client
+        submits to the aggregator (``ClientUpdate.payload``), holding
+        ``ceil(log2(levels))``-bit fields instead of int32 lanes.
+        Mechanisms without a packable integer payload return the dense
+        encode (the float baseline's existing wire form)."""
+        import numpy as np
+
+        z = np.asarray(self.quantize(jnp.asarray(g), key)).reshape(-1)
+        b = self.payload_bits
+        if b is None or not wire.packable(self.sum_bound(1), b):
+            return z
+        return wire.PackedPayload.pack(z, b)
 
     # -- introspection -------------------------------------------------------
     def spec(self) -> dict:
@@ -268,15 +308,17 @@ class RQMMechanism(Mechanism):
                                     total_rows=total_rows)
 
     def encode_sum_batch(self, x, key, *, weights=None, row_offset=None,
-                         total_rows=None):
+                         total_rows=None, pack_bits=None):
         if self.use_kernel:
             from repro.kernels import ops as kops
 
             return kops.rqm_round_sum(x, key, self.params, weights=weights,
-                                      row_offset=row_offset)
+                                      row_offset=row_offset,
+                                      pack_bits=pack_bits)
         return super().encode_sum_batch(x, key, weights=weights,
                                         row_offset=row_offset,
-                                        total_rows=total_rows)
+                                        total_rows=total_rows,
+                                        pack_bits=pack_bits)
 
     def decode_sum(self, z_sum, n):
         return rqm_lib.decode_sum(z_sum, n, self.params)
@@ -327,15 +369,17 @@ class PBMMechanism(Mechanism):
                                     total_rows=total_rows)
 
     def encode_sum_batch(self, x, key, *, weights=None, row_offset=None,
-                         total_rows=None):
+                         total_rows=None, pack_bits=None):
         if self.use_kernel:
             from repro.kernels import ops as kops
 
             return kops.pbm_round_sum(x, key, self.params, weights=weights,
-                                      row_offset=row_offset)
+                                      row_offset=row_offset,
+                                      pack_bits=pack_bits)
         return super().encode_sum_batch(x, key, weights=weights,
                                         row_offset=row_offset,
-                                        total_rows=total_rows)
+                                        total_rows=total_rows,
+                                        pack_bits=pack_bits)
 
     def decode_sum(self, z_sum, n):
         return pbm_lib.decode_sum(z_sum, n, self.params)
@@ -392,15 +436,17 @@ class QMGeoMechanism(Mechanism):
                                     total_rows=total_rows)
 
     def encode_sum_batch(self, x, key, *, weights=None, row_offset=None,
-                         total_rows=None):
+                         total_rows=None, pack_bits=None):
         if self.use_kernel:
             from repro.kernels import ops as kops
 
             return kops.qmgeo_round_sum(x, key, self.params, weights=weights,
-                                        row_offset=row_offset)
+                                        row_offset=row_offset,
+                                        pack_bits=pack_bits)
         return super().encode_sum_batch(x, key, weights=weights,
                                         row_offset=row_offset,
-                                        total_rows=total_rows)
+                                        total_rows=total_rows,
+                                        pack_bits=pack_bits)
 
     def decode_sum(self, z_sum, n):
         return qmgeo_lib.decode_sum(z_sum, n, self.params)

@@ -1,4 +1,4 @@
-"""Secure-aggregation emulation + the lane-packed collective optimization.
+"""Secure-aggregation emulation + the bit-packed collective optimization.
 
 The paper's SecAgg (Bonawitz et al. 2017) computes the *modular sum* of the
 devices' integer messages without revealing individual messages. For the DP
@@ -6,51 +6,56 @@ analysis only the sum matters, so on a TPU mesh we emulate SecAgg with a
 ``psum`` of integer levels over the client axes — the same communication
 pattern, minus the cryptography (documented in DESIGN.md §6).
 
-Beyond-paper optimization (lane packing): RQM levels are tiny integers
-(z in [0, m-1], 4 bits for m=16) but a naive psum moves int32 lanes. Since
-the sum over n clients is bounded by n*(m-1), we can pack TWO coordinates
-into the two 16-bit halves of one int32 lane and psum the packed word —
-halving collective bytes — exactly when n*(m-1) < 2^16 (n <= 4369 for m=16).
-Addition distributes over the halves as long as neither half overflows, so
-the psum of packed words equals the packed psum of words: this is exact, not
-approximate.
+Beyond-paper optimization (dense bit packing, ``core/wire.py``): RQM
+levels are tiny integers (z in [0, m-1], 4 bits for m=16) but a naive
+psum moves int32 lanes. Since the sum over n clients is bounded by
+``mech.sum_bound(n)``, coordinates pack ``k = 32 // sum_bits(bound)``
+per int32 word and the psum moves the packed words — 8 fields/word at
+4-bit sums, 3 at 10-bit, 2 at the legacy 16-bit width — exactly when no
+field can overflow (``wire.packable``). Addition distributes over the
+fields as long as none overflows, so the psum of packed words equals
+the packed psum: this is exact, not approximate.
+
+The fixed two-per-word helpers (``pack_levels``/``unpack_levels``,
+``LANE_BITS``) remain as the 16-bit special case of the general codec,
+for callers that need a width safe for any ``bound < 2^16`` without
+knowing the bound per call.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import wire
+
 LANE_BITS = 16
 LANE_MASK = (1 << LANE_BITS) - 1
 
 
 def max_clients_for_packing(m: int) -> int:
-    """Largest n such that the per-lane sum n*(m-1) fits in 16 bits."""
+    """Largest n such that the per-lane sum n*(m-1) fits in 16 bits (the
+    legacy two-per-word width; minimal-width packing via
+    ``secure_sum_bounded`` admits no fewer clients)."""
     return ((1 << LANE_BITS) - 1) // (m - 1)
 
 
 def pack_levels(z: jnp.ndarray) -> tuple[jnp.ndarray, int]:
-    """Pack a flat int32 level vector two-per-word.
+    """Pack a flat int32 level vector two-per-word (the 16-bit case of
+    ``wire.pack_bits``; planar layout — see core/wire.py).
 
-    Returns (packed int32 vector of ceil(len/2), original length). Odd tails
-    are zero-padded (level 0 contributes 0 to the lane sum, so padding is
-    harmless for aggregation).
+    Returns (packed int32 vector of ceil(len/2), original length). Odd
+    tails are zero-padded (level 0 contributes 0 to the field sum, so
+    padding is harmless for aggregation).
     """
     if z.ndim != 1:
         raise ValueError(f"pack_levels expects flat input, got {z.shape}")
     n = z.shape[0]
-    padded = jnp.pad(z, (0, n % 2))
-    lo = padded[0::2]
-    hi = padded[1::2]
-    return (hi << LANE_BITS) | lo, n
+    return wire.pack_bits(z, LANE_BITS), n
 
 
 def unpack_levels(packed: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Inverse of pack_levels after aggregation: recover the two lane sums."""
-    lo = packed & LANE_MASK
-    hi = (packed >> LANE_BITS) & LANE_MASK
-    out = jnp.stack([lo, hi], axis=1).reshape(-1)
-    return out[:n]
+    """Inverse of pack_levels after aggregation: recover the field sums."""
+    return wire.unpack_bits(packed, LANE_BITS, n)
 
 
 def secure_sum(z: jnp.ndarray, axis_names, *, packed: bool = False) -> jnp.ndarray:
@@ -59,8 +64,9 @@ def secure_sum(z: jnp.ndarray, axis_names, *, packed: bool = False) -> jnp.ndarr
     Args:
       z: flat int32 level vector on each client shard.
       axis_names: mesh axis name or tuple of names spanning the clients.
-      packed: use 16-bit lane packing (caller must check
-        ``max_clients_for_packing``).
+      packed: use 16-bit two-per-word packing (caller must check
+        ``max_clients_for_packing``; ``secure_sum_bounded`` picks the
+        minimal safe width instead when the bound is known).
     """
     if packed:
         pk, n = pack_levels(z)
@@ -71,18 +77,23 @@ def secure_sum(z: jnp.ndarray, axis_names, *, packed: bool = False) -> jnp.ndarr
 
 def secure_sum_bounded(z: jnp.ndarray, axis_names, bound: int, *,
                        packed: bool = True) -> jnp.ndarray:
-    """``secure_sum`` of an arbitrary-shape int level array with automatic
-    lane packing: packs two coordinates per int32 lane exactly when the
-    caller-supplied ``bound`` on the aggregated value (``mech.sum_bound(n)``
-    over the FULL cross-shard cohort n) fits the 16-bit lane, else falls
-    back to the plain psum. Packing is exact, never approximate — this
-    helper only decides width, the sum is the same integer either way.
-    ``packed=False`` forces the unpacked psum (the packed==unpacked
-    equality check the shard-engine tests assert)."""
-    if packed and 0 < bound < (1 << LANE_BITS):
-        pk, n = pack_levels(z.reshape(-1))
+    """``secure_sum`` of an arbitrary-shape int level array at the
+    MINIMAL safe width: the caller-supplied ``bound`` on the aggregated
+    value (``mech.sum_bound(n)`` over the FULL cross-shard cohort n)
+    selects ``wire.sum_bits(bound)``-bit fields, ``32 // bits`` of them
+    per int32 word — 8x fewer collective bytes for 4-bit sums, falling
+    back to the plain psum when a field could overflow
+    (``wire.packable``) or for the float baseline (bound 0). Packing is
+    exact, never approximate — this helper only decides width, the sum
+    is the same integer either way. ``packed=False`` forces the unpacked
+    psum (the packed==unpacked equality check the shard-engine tests
+    assert)."""
+    if packed and wire.packable(bound):
+        bits = wire.sum_bits(bound)
+        flat = z.reshape(-1)
+        pk = wire.pack_bits(flat, bits)
         agg = jax.lax.psum(pk, axis_names)
-        return unpack_levels(agg, n).reshape(z.shape)
+        return wire.unpack_bits(agg, bits, flat.shape[0]).reshape(z.shape)
     return jax.lax.psum(z, axis_names)
 
 

@@ -1,0 +1,263 @@
+"""Dense b-bit wire codec: the one place integer messages get packed.
+
+The paper's communication story is that a client message is a LEVEL
+INDEX — ceil(log2(m)) bits per coordinate, 4 bits for m=16 — and the
+SecAgg sum over n clients needs only ceil(log2(sum_bound+1)) bits per
+coordinate. Yet int32 lanes are what actually cross every boundary
+unless someone packs. This module is that someone: a general dense
+bit-packing codec for any field width ``bits in [1, 16]``, packing
+``k = 32 // bits`` fields per int32 word, used by
+
+  * ``core.secagg.secure_sum_bounded`` — minimal-width cross-shard
+    collectives (3 fields/word at 10-bit sums, 8 at 4-bit),
+  * the fused round kernel (``kernels/fused_round_kernel.py``) — the
+    in-VMEM level-sum accumulator emits packed words directly,
+  * ``PackedPayload`` — the wire/queue/checkpoint format of a client
+    update (``fed/updates.py``, ``launch/aggregator.py``).
+
+Layout (PLANAR, field-major): a length-``n`` vector packs into
+``W = ceil(n / k)`` words; coordinate ``c`` lives in field
+``f = c // W`` of word ``w = c % W`` at bit offset ``f * bits``.
+Equivalently: pad to ``k*W``, ``reshape(k, W)``, shift row ``f`` left by
+``f*bits`` and sum. Planar beats interleaved here because pack/unpack
+are then PURE elementwise ops (reshape + shift + add/mask) with no
+cross-lane shuffles — the same 6 lines express the codec in numpy, jnp,
+and a Pallas tile. The tail pads with level 0 (contributes 0 to every
+field sum), so padded fields of canonical words are always zero.
+
+Exactness (the generalized lane-packing argument): int32 addition of
+packed words adds each bit field independently AS LONG AS no field
+overflows into its neighbor. A field holding an aggregated value
+bounded by ``bound`` never overflows when ``bound < 2**bits`` — which is
+exactly what ``sum_bits(bound)`` selects — so
+
+    sum_i pack_bits(z_i, b)  ==  pack_bits(sum_i z_i, b)
+
+bit-for-bit whenever every coordinate of ``sum_i z_i`` is ``<= bound``.
+Packing is a width choice, never an approximation. The top field may
+carry into the int32 sign bit; two's-complement addition preserves the
+bit pattern and ``unpack_bits`` masks after shifting, so even
+``bits=16`` round-trips exactly (pinned by tests/test_wire.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+WORD_BITS = 32
+# widest packable field: k = 32 // bits must be >= 2 for packing to
+# move fewer bytes than the plain int32 lanes
+MAX_FIELD_BITS = 16
+
+
+def fields_per_word(bits: int) -> int:
+    """``k = 32 // bits``, validating the supported width range."""
+    bits = int(bits)
+    if not 1 <= bits <= MAX_FIELD_BITS:
+        raise ValueError(
+            f"packable field width is 1..{MAX_FIELD_BITS} bits, got {bits}"
+        )
+    return WORD_BITS // bits
+
+
+def packed_words(n: int, bits: int) -> int:
+    """Words needed to carry ``n`` fields of ``bits`` each: ceil(n/k)."""
+    k = fields_per_word(bits)
+    return -(-int(n) // k)
+
+
+def packed_nbytes(n: int, bits: int) -> int:
+    """Bytes on the wire for ``n`` packed fields (4 bytes per word)."""
+    return packed_words(n, bits) * (WORD_BITS // 8)
+
+
+def sum_bits(bound: int) -> int:
+    """Minimal field width holding every aggregated value in
+    ``[0, bound]``: the bit length of ``bound`` (>= 1)."""
+    bound = int(bound)
+    if bound <= 0:
+        raise ValueError(
+            f"sum_bits needs a positive aggregated-value bound, got {bound}"
+        )
+    return max(1, bound.bit_length())
+
+
+def payload_bits(m: int) -> int:
+    """Minimal width of one client's message for an ``m``-level
+    mechanism whose levels span ``0..m-1``: ``ceil(log2(m))``."""
+    m = int(m)
+    if m < 2:
+        raise ValueError(f"payload_bits needs >= 2 levels, got {m}")
+    return sum_bits(m - 1)
+
+
+def packable(bound: int, bits: int | None = None) -> bool:
+    """True when values bounded by ``bound`` pack exactly at ``bits``
+    (default: the minimal ``sum_bits`` width) with ``k >= 2`` fields per
+    word — i.e. packing is both SAFE (no field overflow, so field-wise
+    addition distributes) and USEFUL (fewer bytes than int32 lanes)."""
+    bound = int(bound)
+    if bound <= 0:
+        return False  # float baseline / nothing integer to pack
+    if bits is None:
+        bits = sum_bits(bound)
+    return bits <= MAX_FIELD_BITS and bound < (1 << bits)
+
+
+def check_packable(bound: int, bits: int | None = None, *,
+                   where: str = "") -> int:
+    """The ONE packing-safety gate (engine validation, secure_sum,
+    aggregator intake all route here). Returns the field width to pack
+    at; raises with the single actionable message otherwise."""
+    bound = int(bound)
+    need = bound.bit_length() if bound > 0 else 0
+    if bits is None and bound > 0:
+        bits = sum_bits(bound)
+    if not packable(bound, bits):
+        raise ValueError(
+            f"{where}bit-packing unsafe for aggregated sum bound {bound}: "
+            f"it needs {need} bits but a packed field holds at most "
+            f"{MAX_FIELD_BITS} (a field that overflows corrupts its "
+            f"neighbor, so field-wise addition would no longer equal the "
+            f"unpacked sum). Use the unpacked path (packed=False / "
+            f"shard_packed=False / wire_packed=False) or shrink the "
+            f"cohort or the mechanism's level count m."
+        )
+    return int(bits)
+
+
+# ---------------------------------------------------------------------------
+# The codec — jnp (traced) and numpy (host wire) twins of the same layout
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(z, bits: int, *, words: int | None = None):
+    """Pack a flat integer vector into ``bits``-wide fields, k per int32
+    word (planar layout; see module docstring). jnp / traced.
+
+    ``words`` overrides the word count (>= ceil(n/k)) — the fused round
+    kernel packs against a lane-aligned word count; the default is the
+    tight wire count. Caller guarantees ``0 <= z < 2**bits``.
+    """
+    import jax.numpy as jnp
+
+    k = fields_per_word(bits)
+    z = z.reshape(-1).astype(jnp.int32)
+    n = z.shape[0]
+    w = packed_words(n, bits) if words is None else int(words)
+    if k * w < n:
+        raise ValueError(f"words={w} cannot hold {n} fields of {bits} bits")
+    fields = jnp.pad(z, (0, k * w - n)).reshape(k, w)
+    shifts = (jnp.arange(k, dtype=jnp.int32) * jnp.int32(bits))[:, None]
+    # disjoint bit ranges: + is | ; int32 wrap preserves the top field's
+    # bit pattern through the sign bit
+    return jnp.sum(fields << shifts, axis=0, dtype=jnp.int32)
+
+
+def unpack_bits(words_arr, bits: int, n: int):
+    """Inverse of ``pack_bits``: recover the ``n`` leading fields from a
+    packed int32 word vector. jnp / traced; exact for every width
+    (arithmetic right shift is corrected by the field mask)."""
+    import jax.numpy as jnp
+
+    k = fields_per_word(bits)
+    w = words_arr.reshape(-1)
+    mask = jnp.int32((1 << bits) - 1)
+    shifts = (jnp.arange(k, dtype=jnp.int32) * jnp.int32(bits))[:, None]
+    fields = (w[None, :] >> shifts) & mask
+    return fields.reshape(-1)[:n]
+
+
+def pack_bits_np(z: np.ndarray, bits: int, *,
+                 words: int | None = None) -> np.ndarray:
+    """Host-side numpy twin of ``pack_bits`` (identical layout/output):
+    what ``PackedPayload`` uses so aggregator intake never touches the
+    device just to pack a queue entry."""
+    k = fields_per_word(bits)
+    z = np.asarray(z).reshape(-1).astype(np.uint32)
+    n = z.shape[0]
+    w = packed_words(n, bits) if words is None else int(words)
+    if k * w < n:
+        raise ValueError(f"words={w} cannot hold {n} fields of {bits} bits")
+    fields = np.pad(z, (0, k * w - n)).reshape(k, w)
+    shifts = (np.arange(k, dtype=np.uint32) * np.uint32(bits))[:, None]
+    return (fields << shifts).sum(axis=0, dtype=np.uint32).view(np.int32)
+
+
+def unpack_bits_np(words_arr: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """Host-side numpy twin of ``unpack_bits``."""
+    k = fields_per_word(bits)
+    w = np.asarray(words_arr).reshape(-1).view(np.uint32)
+    mask = np.uint32((1 << bits) - 1)
+    shifts = (np.arange(k, dtype=np.uint32) * np.uint32(bits))[:, None]
+    fields = (w[None, :] >> shifts) & mask
+    return fields.reshape(-1)[:n].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# PackedPayload — the wire/queue/checkpoint form of one client update
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedPayload:
+    """A bit-packed integer client payload: ``words`` int32 words
+    carrying ``length`` fields of ``bits`` each (planar layout above).
+
+    This is what ``mech.encode_wire`` produces and what the aggregator's
+    intake, queue residency, and checkpointed buffers hold — a 1.1M-dim
+    m=16 RQM update is ~0.55 MB instead of 4.4 MB. ``dtype`` tags the
+    unpacked element type (int32 for every level-coded mechanism today).
+    """
+
+    words: np.ndarray
+    bits: int
+    length: int
+    dtype: str = "int32"
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "words", np.ascontiguousarray(self.words, dtype=np.int32)
+        )
+        k = fields_per_word(self.bits)  # validates the width range
+        if self.length < 0:
+            raise ValueError(f"length must be >= 0, got {self.length}")
+        want = packed_words(self.length, self.bits)
+        if self.words.ndim != 1 or self.words.shape[0] != want:
+            raise ValueError(
+                f"PackedPayload of {self.length} fields at {self.bits} "
+                f"bits needs ({want},) words ({k}/word), got array of "
+                f"shape {self.words.shape}"
+            )
+        if self.dtype != "int32":
+            raise ValueError(
+                f"only int32 unpacked payloads are defined (integer level "
+                f"indices), got dtype tag {self.dtype!r}"
+            )
+
+    @classmethod
+    def pack(cls, z, bits: int) -> "PackedPayload":
+        """Pack a flat integer vector at ``bits`` per field. Caller
+        guarantees ``0 <= z < 2**bits`` (a mechanism's level range)."""
+        z = np.asarray(z)
+        return cls(words=pack_bits_np(z, bits), bits=int(bits),
+                   length=int(z.reshape(-1).shape[0]))
+
+    def unpack(self) -> np.ndarray:
+        """The dense int32 payload this carries."""
+        return unpack_bits_np(self.words, self.bits, self.length)
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes actually on the wire / in the queue."""
+        return int(self.words.nbytes)
+
+    @property
+    def wire_bits(self) -> int:
+        return self.nbytes * 8
+
+    @property
+    def shape(self) -> tuple:
+        """Dense-payload shape (duck-typing the validation surfaces)."""
+        return (self.length,)

@@ -27,7 +27,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.core import secagg
+from repro.core import secagg, wire
 from repro.core.mechanisms import Mechanism
 from repro.models import meta as meta_lib
 from repro.models import model as model_lib
@@ -144,13 +144,15 @@ def encode_aggregate_decode(grads, meta_tree, mech: Mechanism, ctx: ParallelCtx,
         if mech.name == "none":
             agg = ctx.psum_clients(z)
         elif packed:
-            if mech.sum_bound(n) >= (1 << secagg.LANE_BITS):
-                raise ValueError(
-                    f"lane packing unsafe: sum bound {mech.sum_bound(n)} >= 2^16"
-                )
+            # the shared packing-safety gate + minimal-width codec
+            # (core/wire.py): fields as narrow as the bound allows, not
+            # fixed 16-bit halves
+            wire.check_packable(mech.sum_bound(n), where="packed=True: ")
             flat = z.reshape(-1)
             if ctx.client_axes:
-                flat = secagg.secure_sum(flat, ctx.client_axes, packed=True)
+                flat = secagg.secure_sum_bounded(
+                    flat, ctx.client_axes, mech.sum_bound(n), packed=True
+                )
             agg = flat.reshape(z.shape)
         elif agg_dtype == "int16":
             agg = ctx.psum_clients(z.astype(jnp.int16)).astype(jnp.int32)

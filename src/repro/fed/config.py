@@ -156,6 +156,17 @@ class FedConfig:
     # in tests/test_fused_round_kernel.py); the legacy "host" engine
     # rejects it.
     fused_rounds: bool = False
+    # Dense b-bit wire packing of the fused hot path (core/wire.py;
+    # docs/scaling.md "Wire format"). None = auto: when fused_rounds is on,
+    # the fused decode->apply engages, and the cohort sum bound fits a
+    # packed field (wire.packable), the round's SecAgg sum travels as
+    # ceil(log2(bound+1))-bit fields packed 32//b per int32 word — the
+    # dense (dim,) int32 sum never round-trips HBM between the encode
+    # reduction and the parameter update. True forces packing (raises at
+    # engine init if the bound does not fit); False is the parity escape
+    # hatch (always the unpacked dense path). Packing is EXACT — packed
+    # and unpacked runs are bit-identical (tests/test_wire_parity.py).
+    wire_packed: Optional[bool] = None
     # Telemetry (docs/telemetry.md): a tracker spec — a registered name
     # ("noop"), a "name:k=v,..." / "name:<path>" spec string
     # ("json:runs/a.json", "csv:runs/a.csv,append=true", a "+"-joined

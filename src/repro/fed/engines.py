@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import secagg
+from repro.core import wire
 from repro.data.federated import sample_clients
 from repro.distributed.step import MeshPlan, compat_shard_map
 from repro.fed import cohort, rounds, staging
@@ -233,14 +233,12 @@ class ShardEngine(Engine):
                 f"divide across {self.shards} shards"
             )
         # the packing-safety bound covers the WORST-case participant
-        # count — the full slate (== clients_per_round when fixed)
-        bound = mech.sum_bound(tr.slate)
-        if cfg.shard_packed and not 0 < bound < (1 << secagg.LANE_BITS):
-            raise ValueError(
-                f"shard_packed=True unsafe: full-cohort sum bound {bound} "
-                f">= 2^{secagg.LANE_BITS} (or mechanism is not "
-                f"integer-coded)"
-            )
+        # count — the full slate (== clients_per_round when fixed); one
+        # shared gate (wire.check_packable) serves engine validation,
+        # secure_sum_bounded, and the aggregator intake
+        if cfg.shard_packed:
+            wire.check_packable(mech.sum_bound(tr.slate),
+                                where="shard_packed=True: ")
         if self.model_shards > 1:
             # 2-D client x model mesh: the 'shard' axis still carries
             # ONLY integer SecAgg traffic; per-layer tensor-parallel

@@ -33,7 +33,7 @@ import jax
 import jax.flatten_util
 import jax.numpy as jnp
 
-from repro.core import secagg
+from repro.core import secagg, wire
 from repro.core.grid import GridGeometry
 from repro.fed import cohort
 from repro.kernels.decode_apply_kernel import decode_apply_sum
@@ -57,6 +57,36 @@ def use_fused_apply(mech, cfg) -> bool:
     wd = (cfg.server_opt_options or {}).get("weight_decay", 0.0)
     return (cfg.fused_rounds and cfg.server_opt == "sgd" and not wd
             and isinstance(getattr(mech, "params", None), GridGeometry))
+
+
+def hot_path_pack_bits(mech, cfg, slate) -> int | None:
+    """The wire width (bits per packed field) of the fused hot path, or
+    None when the round travels dense.
+
+    Packing engages only where BOTH endpoints are fused — the packed
+    round-sum kernel emits wire words and ``decode_apply_sum`` consumes
+    them, so the dense (dim,) int32 sum never exists between them. That
+    means: ``fused_rounds`` on, the fused decode->apply applicable
+    (``use_fused_apply``), the cohort sum bound field-safe
+    (``wire.packable`` over the worst case — the full slate), and the
+    ``wire_packed`` knob not opted out. ``wire_packed=True`` forces the
+    issue: raises (actionably) when the hot path or the bound cannot
+    support packing instead of silently going dense."""
+    if cfg.wire_packed is False:
+        return None
+    if not use_fused_apply(mech, cfg):
+        if cfg.wire_packed:
+            raise ValueError(
+                "wire_packed=True requires the fused hot path it packs: "
+                "fused_rounds=True, server_opt='sgd' with no weight_decay, "
+                "and a shared-affine-grid mechanism (rqm/qmgeo). "
+                "Drop wire_packed or enable the fused path."
+            )
+        return None
+    bound = mech.sum_bound(slate)
+    if cfg.wire_packed:
+        return wire.check_packable(bound, where="wire_packed=True: ")
+    return wire.sum_bits(bound) if wire.packable(bound) else None
 
 
 def make_client_grad(mech, unravel, cfg, task, ctx=None):
@@ -133,6 +163,7 @@ def make_round_step(mech, cfg, opt, slate, client_grad):
     apply = make_server_apply(opt, cfg, hetero)
     fused = cfg.fused_rounds
     fused_apply = use_fused_apply(mech, cfg)
+    pack_bits = hot_path_pack_bits(mech, cfg, slate)
 
     def round_step(flat, opt_state, key, data):
         key, k_sample, k_enc, k_drop = cohort.split_round_keys(cfg, key)
@@ -144,10 +175,13 @@ def make_round_step(mech, cfg, opt, slate, client_grad):
         # already-clipped grads): one fused kernel call over the whole
         # (clients, dim) stack when the mechanism is kernel-backed. With
         # fused_rounds the encode and the SecAgg sum are ONE streamed
-        # reduction — the (clients, dim) encoded batch never exists.
+        # reduction — the (clients, dim) encoded batch never exists; with
+        # pack_bits it leaves the reduction already as b-bit wire words
+        # (core/wire.py) for the packed decode_apply_sum to consume.
         part = cohort.participation(cfg, valid, k_drop) if hetero else None
         if fused:
-            z_sum = mech.quantize_sum_batch(grads, k_enc, weights=part)
+            z_sum = mech.quantize_sum_batch(grads, k_enc, weights=part,
+                                            pack_bits=pack_bits)
         else:
             z = mech.quantize_batch(grads, k_enc)
             if hetero:
@@ -161,7 +195,8 @@ def make_round_step(mech, cfg, opt, slate, client_grad):
             # an empty round releases nothing and moves nothing
             n_dec = jnp.maximum(n_real, 1)
         if fused_apply:
-            new = decode_apply_sum(flat, z_sum, mech.params, n_dec, cfg.lr)
+            new = decode_apply_sum(flat, z_sum, mech.params, n_dec, cfg.lr,
+                                   pack_bits=pack_bits)
             new_state = opt_state
             if hetero:
                 new = jnp.where(n_real > 0, new, flat)
@@ -169,6 +204,12 @@ def make_round_step(mech, cfg, opt, slate, client_grad):
             g_hat = mech.decode_sum(z_sum, n_dec)
             new, new_state = apply(flat, opt_state, g_hat, n_real)
         new, new_state = jax.lax.optimization_barrier((new, new_state))
+        if pack_bits is not None and cfg.collect_sums:
+            # the collected observable stays the DENSE sum (exact unpack),
+            # so the cross-engine / packed-vs-unpacked equality suites
+            # compare like with like; without collect_sums the unpack is
+            # dead code and never compiles into the round.
+            z_sum = wire.unpack_bits(z_sum, pack_bits, flat.shape[0])
         return new, new_state, key, z_sum, n_real
 
     return round_step
@@ -237,6 +278,7 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
     n_per = slate // shards
     bound = mech.sum_bound(slate)  # forced-packing safety checked at init
     prefer_packed = cfg.shard_packed is None or cfg.shard_packed
+    pack_bits = hot_path_pack_bits(mech, cfg, slate)
     streamed = cfg.staging == "stream"
     multi = shards > 1
 
@@ -271,11 +313,13 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
         if fused:
             # one streamed clip->encode->shard-local-sum: the per-shard
             # (n_per, dim) encoded slice is never materialized, and the
-            # reduction the SecAgg boundary receives is already done.
+            # reduction the SecAgg boundary receives is already done —
+            # with pack_bits, already as b-bit wire words.
             z_part = mech.quantize_sum_batch(
                 grads, k_enc, weights=local,
                 row_offset=j * n_per if multi else None,
                 total_rows=slate if multi else None,
+                pack_bits=pack_bits,
             )
         else:
             z = mech.quantize_batch(
@@ -286,16 +330,25 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
             if hetero:
                 z = z * local.astype(z.dtype)[:, None]
             z_part = jnp.sum(z, axis=0, dtype=z.dtype)  # shard-local partial
-        # The SecAgg boundary: integer level indices cross shards,
-        # lane-packed two-per-int32 word when the full-cohort sum bound
-        # allows (exact either way). The float 'none' baseline has
-        # bound 0 and takes the plain psum.
-        z_sum = secagg.secure_sum_bounded(
-            z_part, ("shard",), bound, packed=prefer_packed
-        )
+        # The SecAgg boundary. Packed hot path: the shard-local partials
+        # are ALREADY minimal-width wire words, and int32 addition sums
+        # their fields independently (field-safety checked against the
+        # full-slate bound in hot_path_pack_bits), so one plain psum of
+        # words IS the exact cross-shard SecAgg sum — at b bits per
+        # coordinate on the interconnect. Dense path: integer level
+        # indices, minimal-width-packed by secure_sum_bounded when the
+        # bound allows (exact either way; the float 'none' baseline has
+        # bound 0 and takes the plain psum).
+        if pack_bits is not None:
+            z_sum = jax.lax.psum(z_part, "shard")
+        else:
+            z_sum = secagg.secure_sum_bounded(
+                z_part, ("shard",), bound, packed=prefer_packed
+            )
         n_dec = jnp.maximum(n_real, 1) if hetero else n
         if fused_apply:
-            new = decode_apply_sum(flat, z_sum, mech.params, n_dec, cfg.lr)
+            new = decode_apply_sum(flat, z_sum, mech.params, n_dec, cfg.lr,
+                                   pack_bits=pack_bits)
             new_state = opt_state
             if hetero:
                 new = jnp.where(n_real > 0, new, flat)
@@ -303,6 +356,10 @@ def make_shard_round_step(mech, cfg, opt, slate, shards, client_grad):
             g_hat = mech.decode_sum(z_sum, n_dec)
             new, new_state = apply(flat, opt_state, g_hat, n_real)
         new, new_state = jax.lax.optimization_barrier((new, new_state))
+        if pack_bits is not None and cfg.collect_sums:
+            # collected observable = the DENSE sum (exact unpack); dead
+            # code unless collect_sums (see make_round_step)
+            z_sum = wire.unpack_bits(z_sum, pack_bits, flat.shape[0])
         return new, new_state, key, z_sum, n_real
 
     return round_step

@@ -134,10 +134,27 @@ class FedTrainer:
             self.tracker, engine=fed_cfg.engine, mechanism=mech,
             alphas=fed_cfg.accountant_alphas, delta=fed_cfg.budget_delta,
             budget_eps=fed_cfg.budget_eps, dim=int(self.flat.size),
+            pack_bits=self._wire_pack_bits(),
         )
         self.tracker.run_started(self._run_meta())
 
     # -- telemetry (docs/telemetry.md) --------------------------------------
+    def _wire_pack_bits(self) -> Optional[int]:
+        """The run's effective wire width for the round records'
+        wire_bits/pack_width columns: the fused hot path's b-bit codec
+        when it engages (rounds.hot_path_pack_bits), else the shard
+        engine's minimal-width packed cross-shard sum
+        (core/secagg.secure_sum_bounded), else None (dense wire)."""
+        from repro.core import wire
+
+        cfg = self.cfg
+        bits = rounds.hot_path_pack_bits(self.mech, cfg, self.slate)
+        if bits is None and cfg.engine == "shard" and cfg.shard_packed is not False:
+            bound = self.mech.sum_bound(self.slate)
+            if wire.packable(bound):
+                bits = wire.sum_bits(bound)
+        return bits
+
     def _run_meta(self) -> dict:
         """Run-level tracker metadata: the trajectory fingerprint (same
         sha256 the checkpoints carry), mechanism + engine identity, and

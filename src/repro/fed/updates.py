@@ -8,8 +8,17 @@ a frozen dataclass carrying the client identity, the model version the
 client fetched (``round_tag``), the integer staleness realized at
 aggregation time, a {0, 1} row weight (0 = straggler/dropout — the
 update is masked out of the SecAgg sum and the round is accounted at the
-surviving count), and the already-encoded integer payload. Shape/dtype
+surviving count), and the already-encoded payload. Shape/dtype
 validation lives HERE (``validate``), not on each intake surface.
+
+The payload travels in one of two wire forms: a dense (dim,) numpy
+array of level indices (legacy int32 lanes; floats for the noise-free
+baseline), or a ``core.wire.PackedPayload`` — the same levels bit-packed
+at the mechanism's minimal payload width (``mech.encode_wire``), which
+is what a bandwidth-conscious client actually uploads. Both forms decode
+to identical integers (packing is exact); everything downstream goes
+through ``payload_array()`` / ``payload_nbytes`` so intake surfaces
+never branch on the form.
 
 ``StalenessPolicy`` is the FedBuff-style staleness treatment both
 surfaces share: updates staler than ``max_staleness`` are not admitted
@@ -26,9 +35,11 @@ a cohort in arrival order, stamping each update's realized staleness.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
+
+from repro.core.wire import PackedPayload
 
 WEIGHT_POLICIES = ("uniform", "poly")
 
@@ -38,8 +49,9 @@ class ClientUpdate:
     """One client's contribution to one aggregation.
 
     ``payload`` is the mechanism's ``encode`` output for this client —
-    integer level indices for the grid mechanisms, floats only for the
-    noise-free baseline. ``round_tag`` is the model version the client
+    integer level indices for the grid mechanisms (dense, or bit-packed
+    as a ``wire.PackedPayload`` from ``mech.encode_wire``), floats only
+    for the noise-free baseline. ``round_tag`` is the model version the client
     FETCHED before computing (None = unversioned legacy submit);
     ``staleness`` is the realized (aggregation version - round_tag) gap,
     stamped when the update is taken out of a buffer. ``weight`` is a
@@ -51,14 +63,15 @@ class ClientUpdate:
     one-message-per-client sensitivity the accounting assumes.
     """
 
-    payload: np.ndarray
+    payload: Union[np.ndarray, PackedPayload]
     client_id: int = -1
     round_tag: Optional[int] = None
     staleness: int = 0
     weight: int = 1
 
     def __post_init__(self):
-        object.__setattr__(self, "payload", np.asarray(self.payload))
+        if not isinstance(self.payload, PackedPayload):
+            object.__setattr__(self, "payload", np.asarray(self.payload))
         if self.weight not in (0, 1):
             raise ValueError(
                 f"ClientUpdate.weight must be 0 or 1 (one message per "
@@ -70,10 +83,38 @@ class ClientUpdate:
                 f"ClientUpdate.staleness must be >= 0, got {self.staleness}"
             )
 
+    @property
+    def packed(self) -> bool:
+        """True when the payload is in the bit-packed wire form."""
+        return isinstance(self.payload, PackedPayload)
+
+    def payload_array(self) -> np.ndarray:
+        """The DENSE (dim,) payload, whatever the wire form — the one
+        accessor aggregation surfaces read levels through (packed
+        payloads unpack exactly)."""
+        if self.packed:
+            return self.payload.unpack()
+        return self.payload
+
+    @property
+    def payload_nbytes(self) -> int:
+        """Uplink bytes this update's payload occupies as shipped
+        (packed words, or the dense array's buffer)."""
+        return int(self.payload.nbytes)
+
     def validate(self, dim: int) -> "ClientUpdate":
         """Shape/dtype validation against a deployment's flat dimension
         (the checks ``AggregatorServer.submit`` used to do inline)."""
         p = self.payload
+        if isinstance(p, PackedPayload):
+            # word-count-vs-length consistency is PackedPayload's own
+            # invariant; here we only pin the deployment dimension
+            if p.length != int(dim):
+                raise ValueError(
+                    f"ClientUpdate packed payload must hold {dim} fields, "
+                    f"got {p.length}"
+                )
+            return self
         if p.ndim != 1 or p.shape[0] != int(dim):
             raise ValueError(
                 f"ClientUpdate payload must be ({dim},), got {p.shape}"

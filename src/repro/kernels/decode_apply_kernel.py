@@ -130,7 +130,8 @@ def decode_apply_sum_2d(w, z_sum, params, n: int, lr: float,
 
 def decode_apply_sum(w, z_sum, params, n, lr: float,
                      *, block_rows: int | None = None,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None,
+                     pack_bits: int | None = None):
     """Fused SecAgg-sum decode + SGD apply, bit-identical to
     ``optim.sgd().update(grid.decode_sum(z_sum, n, params), ...)``.
 
@@ -141,8 +142,38 @@ def decode_apply_sum(w, z_sum, params, n, lr: float,
     kernel serves the static-n TPU path with the same float association;
     across compilation modes FMA contraction can still shift the float
     result by ~1 ULP, so cross-path tests compare it at 1-ULP tolerance
-    (unlike the INTEGER round-sum kernel, which is exact everywhere)."""
+    (unlike the INTEGER round-sum kernel, which is exact everywhere).
+
+    ``pack_bits``: ``z_sum`` is the PACKED wire-word vector the packed
+    round-sum kernel emitted (core/wire.py) — consumed directly:
+    unpack -> decode -> apply in one pass (the Pallas
+    ``pack_kernel.unpack_decode_apply`` tile kernel on TPU/interpret, a
+    single fused XLA sweep elsewhere), so the dense (dim,) int32 sum
+    never lands in HBM between the collective and the parameter update.
+    Unpacking is exact, so bit-identity with the unpacked path holds by
+    construction."""
     from repro.core.grid import decode_sum as grid_decode_sum
+
+    if pack_bits is not None:
+        from repro.core import wire
+        from repro.kernels import pack_kernel
+
+        shape = w.shape
+        w_flat = w.reshape(-1)
+        words = z_sum.reshape(-1)
+        pallas_ok = ((jax.default_backend() == "tpu" or interpret)
+                     and isinstance(n, int))
+        if pallas_ok:
+            out = pack_kernel.unpack_decode_apply(
+                w_flat, words, params, n, lr, pack_bits=pack_bits,
+                interpret=(jax.default_backend() != "tpu"
+                           if interpret is None else interpret),
+            )
+            if out is not None:
+                return out.reshape(shape)
+        z = wire.unpack_bits(words, pack_bits, w_flat.shape[0]).reshape(shape)
+        g_hat = grid_decode_sum(z, n, params)
+        return w - lr * g_hat.astype(w.dtype)
 
     pallas_ok = (jax.default_backend() == "tpu" or interpret) and isinstance(n, int)
     if not pallas_ok:

@@ -22,11 +22,14 @@ Every mechanism kernel gets the same three entry points, built once by
     batch, so every client row draws independent randomness from one
     per-round seed and the output inherits the kernel<->mechanism parity
     contract on the flattened input (see kernels/ref.py).
-  * ``<name>_round_sum(x, key, params, weights=..., row_offset=...)`` —
-    the fused ROUND: clip -> encode -> weighted column sum streamed
-    through VMEM-sized tiles (kernels/fused_round_kernel.py), bit-identical
-    to ``<name>_batch(...).sum(0)`` but O(tile) instead of O(clients*dim)
-    peak memory. What ``FedConfig.fused_rounds`` routes the engines over.
+  * ``<name>_round_sum(x, key, params, weights=..., row_offset=...,
+    pack_bits=...)`` — the fused ROUND: clip -> encode -> weighted column
+    sum streamed through VMEM-sized tiles (kernels/fused_round_kernel.py),
+    bit-identical to ``<name>_batch(...).sum(0)`` but O(tile) instead of
+    O(clients*dim) peak memory. What ``FedConfig.fused_rounds`` routes the
+    engines over. With ``pack_bits`` set the accumulator emits the sum as
+    bit-PACKED wire words (core/wire.py) — the dense (dim,) int32 sum
+    never round-trips HBM on the packed hot path.
 
 Shard-local batches (the "shard" round engine): when a cohort of n clients
 is split across a device mesh, each shard encodes only its (n/S, dim) slice
@@ -161,7 +164,7 @@ def _make_round_sum(encode_name: str):
 
     def round_sum(x, key, params, *, weights=None, row_offset=None,
                   block_rows=None, interpret=None,
-                  compute_dtype=jnp.float32):
+                  compute_dtype=jnp.float32, pack_bits=None):
         if x.ndim != 2:
             raise ValueError(
                 f"{encode_name}_round_sum expects (clients, dim), got {x.shape}"
@@ -172,6 +175,7 @@ def _make_round_sum(encode_name: str):
             x, key_to_seed(key), params, encode_name, weights=weights,
             row_offset=row_offset, block_rows=block_rows,
             interpret=interpret, compute_dtype=compute_dtype,
+            pack_bits=pack_bits,
         )
 
     round_sum.__name__ = f"{encode_name}_round_sum"

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import store
+from repro.core import wire
 from repro.core.mechanisms import Mechanism, make_mechanism
 from repro.core.renyi import RenyiAccountant
 from repro.fed.engine import make_engine
@@ -289,6 +290,32 @@ class AggregatorServer:
         plus the drained partial cohort)."""
         return self._queued_updates + len(self.buffer)
 
+    # -- the encoded-domain cohort sum ---------------------------------------
+    def _secure_sum(self, take) -> np.ndarray:
+        """The cohort's SecAgg sum over MIXED wire forms (fed/updates.py):
+        dense payloads stack-and-sum as before; when the whole cohort
+        arrived bit-packed at one width AND the cohort sum bound still
+        fits a field (``wire.packable`` — true for small cohorts or wide
+        payloads), the packed words are summed DIRECTLY (field-wise int32
+        addition is exact below the bound) and unpacked once. Otherwise
+        each packed payload unpacks at intake — either way the dense
+        (dim,) sum is bit-identical (packing is exact)."""
+        packed = [u for u in take if u.packed]
+        if len(packed) == len(take) and take:
+            bits = take[0].payload.bits
+            if (all(u.payload.bits == bits for u in take)
+                    and wire.packable(self.mech.sum_bound(len(take)), bits)):
+                acc = np.zeros_like(take[0].payload.words, dtype=np.uint32)
+                for u in take:
+                    if u.weight:
+                        acc = acc + u.payload.words.view(np.uint32)
+                return wire.unpack_bits_np(
+                    acc.view(np.int32), bits, self.dim
+                )
+        z = np.stack([u.payload_array() for u in take])
+        w = np.asarray([u.weight for u in take], z.dtype)
+        return (z * w[:, None]).sum(axis=0)
+
     # -- the aggregation cadence ---------------------------------------------
     def step(self) -> bool:
         """Aggregate ONE round if a full cohort is buffered: SecAgg sum
@@ -328,9 +355,7 @@ class AggregatorServer:
                 # weight-0 stragglers are masked OUT of the SecAgg sum
                 # ({0,1} weights only — fed/updates.py); the round is
                 # accounted at the surviving count
-                z = np.stack([u.payload for u in take])
-                w = np.asarray([u.weight for u in take], z.dtype)
-                z_sum = jnp.asarray((z * w[:, None]).sum(axis=0))
+                z_sum = jnp.asarray(self._secure_sum(take))
             if n_real > 0:
                 with self.timings.scope("apply"):
                     g_hat = self._decode(z_sum, n_real)
@@ -358,6 +383,10 @@ class AggregatorServer:
                 "staleness_mean": float(np.mean(stal)) if stal else 0.0,
                 "staleness_max": int(np.max(stal)) if stal else 0,
                 "updates_discarded": self.buffer.discarded,
+                # uplink realism: bytes this cohort's payloads occupied
+                # AS SHIPPED (packed wire words vs dense int32 lanes)
+                "uplink_bytes": int(sum(u.payload_nbytes for u in take)),
+                "packed_payloads": int(sum(1 for u in take if u.packed)),
                 **({"staleness_discount": float(disc)}
                    if self.engine == "async" else {}),
             })
@@ -513,10 +542,25 @@ def simulate_client_batch(mech: Mechanism, dim: int, key, k: int):
 
 
 def simulate_client_updates(mech: Mechanism, dim: int, key, k: int, *,
-                            round_tag: int, first_id: int = 0) -> list:
+                            round_tag: int, first_id: int = 0,
+                            packed: bool = False) -> list:
     """The typed form of the simulated stream: the same encoded bytes,
     wrapped as ``ClientUpdate``s stamped with the model version the
-    clients fetched — what a real (versioned) client deployment submits."""
+    clients fetched — what a real (versioned) client deployment submits.
+    ``packed=True`` ships each payload in the bit-packed wire form
+    (``mech.encode_wire`` — ceil(log2(levels)) bits per coordinate
+    instead of an int32 lane), the bandwidth-realistic uplink."""
+    if packed:
+        k_g, k_e = jax.random.split(key)
+        grads = jax.random.uniform(
+            k_g, (k, dim), jnp.float32, -mech.clip, mech.clip
+        )
+        keys = jax.random.split(k_e, k)
+        return [
+            ClientUpdate(payload=mech.encode_wire(g, kk),
+                         client_id=first_id + i, round_tag=round_tag)
+            for i, (g, kk) in enumerate(zip(grads, keys))
+        ]
     rows = simulate_client_batch(mech, dim, key, k)
     return [
         ClientUpdate(payload=row, client_id=first_id + i,
@@ -544,6 +588,10 @@ def main():
     ap.add_argument("--batches", type=int, default=16,
                     help="batches the simulated clients stream")
     ap.add_argument("--queue-limit", type=int, default=8)
+    ap.add_argument("--packed", action="store_true",
+                    help="simulated clients upload bit-packed wire "
+                         "payloads (mech.encode_wire) instead of dense "
+                         "int32 lanes — the bandwidth-realistic uplink")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="simulated batch arrivals/sec (0 = as fast as "
                          "backpressure allows)")
@@ -592,7 +640,7 @@ def main():
             batch = simulate_client_updates(
                 mech, args.dim, sub, args.batch,
                 round_tag=server.current_version(),
-                first_id=i * args.batch,
+                first_id=i * args.batch, packed=args.packed,
             )
             t0 = time.time()
             accepted = server.submit(batch, block=True, timeout=10.0)

@@ -28,7 +28,8 @@ from repro.telemetry.tracker import NoopTracker, Tracker
 class RoundEmitter:
     def __init__(self, tracker: Tracker, *, engine: str, mechanism,
                  alphas, delta: float, budget_eps: Optional[float] = None,
-                 dim: Optional[int] = None):
+                 dim: Optional[int] = None,
+                 pack_bits: Optional[int] = None):
         self.tracker = tracker
         self.engine = engine
         self.mech = mechanism
@@ -36,6 +37,9 @@ class RoundEmitter:
         self.delta = float(delta)
         self.budget_eps = budget_eps
         self.dim = dim
+        # wire width of the run's hot path (rounds.hot_path_pack_bits /
+        # the shard 16-bit lane packing); None = the dense int32 wire
+        self.pack_bits = pack_bits
         self.enabled = not isinstance(tracker, NoopTracker)
         self.emitted = 0
         self._cum = np.zeros(len(self.alphas), dtype=np.float64)
@@ -63,6 +67,22 @@ class RoundEmitter:
                     else self.mech.bits)
             self._sum_bits_by_n[n] = int(self.dim * lane)
         return self._sum_bits_by_n[n]
+
+    def wire_bits(self) -> Optional[int]:
+        """Size in bits of the round's SecAgg sum AS SHIPPED: packed wire
+        words (32 * word count at pack_width bits per field) on the
+        packed hot path, dim dense lanes (int32, or the float baseline's
+        mech.bits) otherwise. ``secagg_sum_bits`` is the
+        information-theoretic floor; ``wire_bits / secagg_sum_bits``
+        measures the residual packing slack. None when dim is unknown."""
+        if self.dim is None:
+            return None
+        if self.pack_bits is not None:
+            from repro.core import wire as _wire
+
+            return 32 * _wire.packed_words(self.dim, self.pack_bits)
+        lane = 32 if self.mech.sum_bound(1) > 0 else self.mech.bits
+        return int(self.dim * lane)
 
     def emit(self, history, realized_n, elapsed: float,
              extras=None) -> int:
@@ -96,6 +116,8 @@ class RoundEmitter:
                                   if self.budget_eps is not None else None),
                 "rounds_per_sec": rps,
                 "secagg_sum_bits": self.secagg_sum_bits(n),
+                "wire_bits": self.wire_bits(),
+                "pack_width": self.pack_bits,
             }
             if extras is not None and i < len(extras) and extras[i]:
                 for k, v in extras[i].items():

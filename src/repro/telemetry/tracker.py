@@ -37,7 +37,8 @@ from typing import Callable, ClassVar, Dict, Optional, Type, Union
 # JSON key order — schema-stable, pinned by tests/test_telemetry.py.
 ROUND_FIELDS = (
     "round", "engine", "mechanism", "realized_n", "eps_spent",
-    "eps_remaining", "rounds_per_sec", "secagg_sum_bits", "loss", "accuracy",
+    "eps_remaining", "rounds_per_sec", "secagg_sum_bits", "wire_bits",
+    "pack_width", "loss", "accuracy",
 )
 # CSV rows are typed by a leading ``kind`` column (meta | round | eval |
 # timings | snapshot); fields inapplicable to a kind stay blank and

@@ -1,0 +1,167 @@
+"""Pallas wire-codec kernels (kernels/pack_kernel.py) and the packed
+fused round sum: every kernel body must be BIT-identical to the jnp
+codec twin in core/wire.py (int32 equality, never allclose).
+
+What the battery pins, per the tentpole's exactness chain:
+
+  1. pack_flat / unpack_flat kernel bodies (interpret mode) == the jnp
+     codec, on lane-aligned word counts; unaligned sizes take the
+     fallback, which is the jnp codec itself.
+  2. The packed fused round sum — both the Pallas packed grid (aligned
+     word counts) and the scan-jnp twin — equals ``wire.pack_bits`` of
+     the DENSE fused round sum, word for word, including canonical zero
+     pad fields. That equality is what lets the round engines ship
+     packed words through SecAgg with zero semantic drift.
+  3. unpack_decode_apply == unpack -> decode_sum -> sgd, and
+     ``decode_apply_sum(..., pack_bits=...)`` == the dense
+     ``decode_apply_sum`` on the same sum — the packed server boundary
+     changes bytes moved, never the update.
+
+Runs on CPU (interpret=True per call); the CI kernel lane additionally
+forces REPRO_PALLAS_INTERPRET=1 through the default dispatch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core.grid import RQMParams, decode_sum
+from repro.kernels import ops, pack_kernel
+from repro.kernels.decode_apply_kernel import decode_apply_sum
+from repro.kernels.fused_round_kernel import round_sum
+
+PARAMS = RQMParams(c=1.0, delta=1.0, m=16, q=0.42)
+
+# (bits, n) with a LANE-aligned word count -> the Pallas grid engages
+ALIGNED = [(4, 1024), (7, 512), (16, 256), (10, 3 * 128 * 3 - 2)]
+# unaligned word count -> bit-identical jnp-codec fallback
+UNALIGNED = [(4, 1000), (7, 130)]
+
+
+def _levels(bits, n, seed=0):
+    rng = np.random.default_rng(seed + bits)
+    return jnp.asarray(rng.integers(0, 1 << bits, n).astype(np.int32))
+
+
+class TestPackUnpackKernels:
+    @pytest.mark.parametrize("bits,n", ALIGNED + UNALIGNED)
+    def test_pack_flat_matches_codec(self, bits, n):
+        z = _levels(bits, n)
+        got = np.asarray(pack_kernel.pack_flat(z, bits, interpret=True))
+        want = np.asarray(wire.pack_bits(z, bits))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("bits,n", ALIGNED + UNALIGNED)
+    def test_unpack_flat_matches_codec(self, bits, n):
+        z = _levels(bits, n, seed=9)
+        words = wire.pack_bits(z, bits)
+        got = np.asarray(
+            pack_kernel.unpack_flat(words, bits, n, interpret=True)
+        )
+        np.testing.assert_array_equal(got, np.asarray(z))
+
+    def test_pack_unpack_roundtrip_top_field_sign_bit(self):
+        """16-bit fields put the top field across the int32 sign bit;
+        the kernel's arithmetic shift + mask must still round-trip."""
+        n = 256
+        z = jnp.full((n,), (1 << 16) - 1, jnp.int32)
+        words = pack_kernel.pack_flat(z, 16, interpret=True)
+        assert np.asarray(words).min() < 0  # sign bit genuinely set
+        back = pack_kernel.unpack_flat(words, 16, n, interpret=True)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(z))
+
+
+class TestPackedRoundSum:
+    def _inputs(self, rows, dim, seed=5):
+        x = jax.random.uniform(jax.random.key(seed), (rows, dim),
+                               jnp.float32, -1.5, 1.5)
+        return x, jax.random.key(3)
+
+    @pytest.mark.parametrize("dim", [2048, 1000], ids=["aligned", "unaligned"])
+    @pytest.mark.parametrize("offset", [None, 17], ids=["off0", "offmid"])
+    def test_packed_equals_pack_of_dense(self, dim, offset):
+        """Pallas packed round sum (kernel body, both word-count
+        geometries) == wire.pack_bits(dense round sum): the packed
+        accumulator IS the dense accumulator at b-bit width."""
+        bits = wire.sum_bits(12 * (PARAMS.m - 1))  # 12-client cohort: 8
+        x, key = self._inputs(12, dim)
+        dense = ops.rqm_round_sum(x, key, PARAMS, row_offset=offset,
+                                  interpret=True)
+        packed = ops.rqm_round_sum(x, key, PARAMS, row_offset=offset,
+                                   interpret=True, pack_bits=bits)
+        assert packed.shape == (wire.packed_words(dim, bits),)
+        np.testing.assert_array_equal(
+            np.asarray(packed), np.asarray(wire.pack_bits(dense, bits))
+        )
+        # and the unpack recovers the dense sum exactly
+        np.testing.assert_array_equal(
+            np.asarray(wire.unpack_bits(packed, bits, dim)),
+            np.asarray(dense),
+        )
+
+    def test_packed_jnp_twin_matches_kernel_body(self):
+        """The scan-jnp packed twin (CPU production path) and the Pallas
+        packed kernel body emit the same words."""
+        x, key = self._inputs(10, 2048, seed=11)
+        seed = ops.key_to_seed(key)
+        bits = wire.sum_bits(10 * (PARAMS.m - 1))
+        jnp_words = round_sum(x, seed, PARAMS, "rqm", pack_bits=bits,
+                              interpret=False)
+        body_words = round_sum(x, seed, PARAMS, "rqm", pack_bits=bits,
+                               interpret=True)
+        np.testing.assert_array_equal(np.asarray(jnp_words),
+                                      np.asarray(body_words))
+
+    def test_packed_weighted(self):
+        """Row weights (hetero dropout) mask inside the packed
+        accumulator exactly as in the dense one."""
+        x, key = self._inputs(8, 512, seed=2)
+        w = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0], jnp.int32)
+        bits = wire.sum_bits(8 * (PARAMS.m - 1))
+        dense = ops.rqm_round_sum(x, key, PARAMS, weights=w, interpret=True)
+        packed = ops.rqm_round_sum(x, key, PARAMS, weights=w,
+                                   interpret=True, pack_bits=bits)
+        np.testing.assert_array_equal(
+            np.asarray(packed), np.asarray(wire.pack_bits(dense, bits))
+        )
+
+
+class TestPackedServerBoundary:
+    def _sum(self, dim, n=12, seed=4):
+        rng = np.random.default_rng(seed)
+        bound = n * (PARAMS.m - 1)
+        return jnp.asarray(
+            rng.integers(0, bound + 1, dim).astype(np.int32)
+        ), wire.sum_bits(bound)
+
+    @pytest.mark.parametrize("dim", [2048, 1000], ids=["aligned", "unaligned"])
+    def test_unpack_decode_apply_matches_reference(self, dim):
+        z, bits = self._sum(dim)
+        w = jnp.asarray(np.random.default_rng(1).normal(size=dim),
+                        jnp.float32)
+        words = wire.pack_bits(z, bits)
+        got = pack_kernel.unpack_decode_apply(
+            w, words, PARAMS, 12, 0.5, pack_bits=bits, interpret=True
+        )
+        if dim == 1000:
+            assert got is None  # unaligned geometry: caller falls back
+            return
+        want = w - 0.5 * decode_sum(z, 12, PARAMS)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0, atol=1e-6)
+
+    @pytest.mark.parametrize("dim", [2048, 1000], ids=["aligned", "unaligned"])
+    def test_decode_apply_sum_packed_parity(self, dim):
+        """The dispatcher the engines actually call: packed input words
+        produce the same updated params as the dense sum (1-ULP float
+        tolerance across compilation modes, as for the dense tile
+        variant)."""
+        z, bits = self._sum(dim, seed=8)
+        w = jnp.asarray(np.random.default_rng(3).normal(size=dim),
+                        jnp.float32)
+        dense = decode_apply_sum(w, z, PARAMS, 12, 0.5, interpret=True)
+        packed = decode_apply_sum(w, wire.pack_bits(z, bits), PARAMS, 12,
+                                  0.5, interpret=True, pack_bits=bits)
+        np.testing.assert_allclose(np.asarray(packed), np.asarray(dense),
+                                   rtol=0, atol=1e-6)

@@ -1,0 +1,306 @@
+"""The dense b-bit wire codec (core/wire.py): exact round-trips at every
+width, sum distributivity at the field boundary, the packing-safety gate,
+PackedPayload / encode_wire, and the pinned golden packed words.
+
+The exactness claim everything rides on: int32 addition of packed words
+adds fields independently while no field exceeds its width, so
+``sum_i pack(z_i) == pack(sum_i z_i)`` bit-for-bit whenever the summed
+bound fits ``bits`` — the packed SecAgg sum IS the dense SecAgg sum.
+A deterministic seeded sweep covers all widths always; the hypothesis
+section (skipped cleanly when hypothesis is absent, like
+tests/test_properties.py) searches the same invariants adversarially.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wire
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "packed_words.json")
+
+
+# ---------------------------------------------------------------------------
+# width selectors + the shared safety gate
+# ---------------------------------------------------------------------------
+
+
+def test_width_selectors():
+    assert wire.sum_bits(1) == 1
+    assert wire.sum_bits(15) == 4
+    assert wire.sum_bits(16) == 5
+    assert wire.sum_bits(6 * 15) == 7      # the tiny suite cohort
+    assert wire.sum_bits(40 * 15) == 10    # paper cohort: 3 fields/word
+    assert wire.payload_bits(16) == 4      # RQM m=16 levels reach 15
+    assert wire.payload_bits(17) == 5
+    with pytest.raises(ValueError):
+        wire.sum_bits(0)
+    with pytest.raises(ValueError):
+        wire.payload_bits(1)
+
+
+def test_fields_per_word_and_counts():
+    assert wire.fields_per_word(16) == 2
+    assert wire.fields_per_word(10) == 3
+    assert wire.fields_per_word(4) == 8
+    assert wire.fields_per_word(1) == 32
+    for bits in (0, 17, 32):
+        with pytest.raises(ValueError):
+            wire.fields_per_word(bits)
+    assert wire.packed_words(1000, 4) == 125
+    assert wire.packed_words(1001, 4) == 126  # odd tail pads up
+    assert wire.packed_nbytes(1000, 4) == 500
+
+
+def test_packable_and_check_packable():
+    assert wire.packable(15, 4)
+    assert not wire.packable(16, 4)        # field boundary is exclusive
+    assert wire.packable((1 << 16) - 1)    # minimal width auto-chosen
+    assert not wire.packable(1 << 16)      # needs 17 bits > MAX_FIELD_BITS
+    assert not wire.packable(0)            # float baseline: bound 0
+    assert wire.check_packable(15, 4) == 4
+    assert wire.check_packable(90) == 7    # minimal width returned
+    with pytest.raises(ValueError) as e:
+        wire.check_packable(1 << 16, where="shard_packed=True: ")
+    msg = str(e.value)
+    # ONE actionable message names every escape hatch (satellite 1)
+    assert "shard_packed=True" in msg
+    assert "packed=False" in msg and "wire_packed=False" in msg
+
+
+# ---------------------------------------------------------------------------
+# round-trip + distributivity (deterministic sweep, all widths)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", list(range(1, 17)))
+def test_roundtrip_all_widths(bits):
+    rng = np.random.default_rng(bits)
+    for n in (1, 31, 32, 33, 127, 128, 500):
+        z = rng.integers(0, 1 << bits, size=n).astype(np.int32)
+        words = wire.pack_bits(jnp.asarray(z), bits)
+        assert words.shape[0] == wire.packed_words(n, bits)
+        assert words.dtype == jnp.int32
+        back = np.asarray(wire.unpack_bits(words, bits, n))
+        np.testing.assert_array_equal(back, z)
+        # numpy twin is bit-identical to the jnp codec
+        np.testing.assert_array_equal(wire.pack_bits_np(z, bits),
+                                      np.asarray(words))
+        np.testing.assert_array_equal(
+            wire.unpack_bits_np(np.asarray(words), bits, n), z)
+
+
+@pytest.mark.parametrize("bits", [1, 4, 7, 10, 16])
+def test_sum_distributivity_at_boundary(bits):
+    """Field-wise addition distributes right up to bound = 2^b - 1 —
+    including the top field wrapping through the int32 sign bit."""
+    bound = (1 << bits) - 1
+    rng = np.random.default_rng(bits + 100)
+    n, k = 777, 5
+    # rows summing EXACTLY to the boundary in some coordinates
+    zs = rng.multinomial(bound, np.full(k, 1.0 / k), size=n).astype(np.int32).T
+    dense_sum = zs.sum(axis=0).astype(np.int32)
+    assert dense_sum.max() == bound
+    word_sum = np.zeros(wire.packed_words(n, bits), np.uint32)
+    for z in zs:
+        word_sum = word_sum + wire.pack_bits_np(z, bits).view(np.uint32)
+    np.testing.assert_array_equal(word_sum.view(np.int32),
+                                  wire.pack_bits_np(dense_sum, bits))
+    np.testing.assert_array_equal(
+        wire.unpack_bits_np(word_sum.view(np.int32), bits, n), dense_sum)
+
+
+@pytest.mark.parametrize("bits", [3, 5, 16])
+def test_odd_tail_padding_canonical(bits):
+    """Pad fields are ZERO (canonical words): packing n then n+tail-pad
+    coordinates with trailing zeros yields the same words."""
+    k = wire.fields_per_word(bits)
+    n = 10 * k + 3  # forces a padded tail
+    rng = np.random.default_rng(7)
+    z = rng.integers(0, 1 << bits, size=n).astype(np.int32)
+    w = wire.packed_words(n, bits)
+    z_padded = np.zeros(k * w, np.int32)
+    z_padded[:n] = z
+    np.testing.assert_array_equal(wire.pack_bits_np(z, bits),
+                                  wire.pack_bits_np(z_padded, bits))
+
+
+def test_pack_bits_rejects_explicit_word_mismatch():
+    with pytest.raises(ValueError):
+        wire.pack_bits(jnp.arange(10, dtype=jnp.int32), 4, words=1)
+
+
+# ---------------------------------------------------------------------------
+# PackedPayload + mechanism wire encode
+# ---------------------------------------------------------------------------
+
+
+def test_packed_payload_roundtrip_and_nbytes():
+    z = np.arange(300, dtype=np.int32) % 16
+    p = wire.PackedPayload.pack(z, 4)
+    assert p.length == 300 and p.bits == 4 and p.shape == (300,)
+    assert p.nbytes == wire.packed_nbytes(300, 4) == 38 * 4
+    assert p.wire_bits == 38 * 32
+    np.testing.assert_array_equal(p.unpack(), z)
+
+
+def test_packed_payload_validates_word_count():
+    with pytest.raises(ValueError):
+        wire.PackedPayload(words=np.zeros(3, np.int32), bits=4, length=300)
+
+
+def test_mechanism_payload_bits_and_encode_wire():
+    import jax
+
+    from repro.core.mechanisms import make_mechanism
+
+    rqm = make_mechanism("rqm:c=0.05,m=16")
+    pbm = make_mechanism("pbm:c=0.05,m=16")
+    none = make_mechanism("none:c=0.05")
+    assert rqm.payload_bits == 4   # levels reach m-1 = 15
+    assert pbm.payload_bits == 5   # levels reach m = 16
+    assert none.payload_bits is None
+    g = jnp.linspace(-0.1, 0.1, 200)
+    key = jax.random.key(0)
+    p = rqm.encode_wire(g, key)
+    assert isinstance(p, wire.PackedPayload) and p.bits == 4
+    # exact: the packed wire form unpacks to the mechanism's quantize
+    np.testing.assert_array_equal(
+        p.unpack(), np.asarray(rqm.quantize(g, key)).reshape(-1))
+    # the float baseline ships its dense encode unchanged
+    f = none.encode_wire(g, key)
+    assert isinstance(f, np.ndarray) and f.dtype.kind == "f"
+
+
+def test_client_update_accepts_packed_payload():
+    from repro.fed.updates import ClientUpdate
+
+    z = (np.arange(64) % 16).astype(np.int32)
+    p = wire.PackedPayload.pack(z, 4)
+    u = ClientUpdate(payload=p, client_id=3, round_tag=0)
+    assert u.packed
+    u.validate(64)
+    np.testing.assert_array_equal(u.payload_array(), z)
+    assert u.payload_nbytes == p.nbytes < z.nbytes
+    with pytest.raises(ValueError):
+        u.validate(65)
+    dense = ClientUpdate(payload=z)
+    assert not dense.packed and dense.payload_nbytes == z.nbytes
+
+
+# ---------------------------------------------------------------------------
+# secagg integration: minimal-width secure_sum_bounded + legacy lanes
+# ---------------------------------------------------------------------------
+
+
+def test_secure_sum_bounded_minimal_width(monkeypatch):
+    """secure_sum_bounded packs at sum_bits(bound), not fixed 16-bit
+    halves: at a 10-bit bound three fields share each word."""
+    import jax
+
+    from repro.core import secagg
+
+    z = jnp.asarray(np.random.default_rng(0).integers(0, 300, 1000,
+                                                      dtype=np.int32))
+    captured = {}
+
+    def spy(x, axes):
+        captured["shape"] = x.shape
+        return x  # single-participant sum
+
+    monkeypatch.setattr(jax.lax, "psum", spy)
+    out = secagg.secure_sum_bounded(z, ("shard",), bound=1023)
+    assert captured["shape"] == (wire.packed_words(1000, 10),)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(z))
+
+
+def test_legacy_pack_levels_delegates_to_wire():
+    from repro.core.secagg import pack_levels, unpack_levels
+
+    z = jnp.asarray((np.arange(501) * 37 % 50000).astype(np.int32))
+    packed, n = pack_levels(z)
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(wire.pack_bits(z, 16)))
+    np.testing.assert_array_equal(np.asarray(unpack_levels(packed, n)),
+                                  np.asarray(z))
+
+
+# ---------------------------------------------------------------------------
+# golden packed words (regenerate: scripts/make_goldens.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_golden_codec_vectors(golden):
+    """Pure codec pins: the packed words of fixed level vectors at
+    several widths. A failure means the WIRE LAYOUT changed — which
+    breaks every stored/cross-version packed payload."""
+    for block in golden["codec"]:
+        bits = block["bits"]
+        z = np.asarray(block["levels"], np.int32)
+        np.testing.assert_array_equal(wire.pack_bits_np(z, bits),
+                                      np.asarray(block["words"], np.int32))
+
+
+def test_golden_packed_round_sums(golden):
+    """The packed fused round-sum release, pinned per mechanism alongside
+    tests/golden/encoded_sums.json: pack(golden dense sum) at the
+    cohort's minimal width must reproduce every word."""
+    sums = json.load(open(os.path.join(os.path.dirname(GOLDEN_PATH),
+                                       "encoded_sums.json")))
+    for name, block in golden["round_sums"].items():
+        bits = block["bits"]
+        dense = np.asarray(sums["mechanisms"][name]["sum"], np.int32)
+        np.testing.assert_array_equal(wire.pack_bits_np(dense, bits),
+                                      np.asarray(block["words"], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis section (adversarial search over the same invariants)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(bits=st.integers(1, 16), n=st.integers(1, 400),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hyp_roundtrip(bits, n, seed):
+        z = np.random.default_rng(seed).integers(
+            0, 1 << bits, size=n).astype(np.int32)
+        words = wire.pack_bits_np(z, bits)
+        np.testing.assert_array_equal(
+            wire.unpack_bits_np(words, bits, n), z)
+
+    @settings(max_examples=40, deadline=None)
+    @given(bits=st.integers(1, 16), n=st.integers(1, 200),
+           rows=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+    def test_hyp_sum_distributivity(bits, n, rows, seed):
+        """Random rows whose per-coordinate sum is forced under 2^bits:
+        packed-word addition == pack of the dense sum, bit-for-bit."""
+        bound = (1 << bits) - 1
+        rng = np.random.default_rng(seed)
+        zs = rng.integers(0, bound // rows + 1, size=(rows, n)).astype(
+            np.int32)
+        assert zs.sum(axis=0).max() <= bound
+        acc = np.zeros(wire.packed_words(n, bits), np.uint32)
+        for z in zs:
+            acc = acc + wire.pack_bits_np(z, bits).view(np.uint32)
+        np.testing.assert_array_equal(
+            acc.view(np.int32),
+            wire.pack_bits_np(zs.sum(axis=0).astype(np.int32), bits))

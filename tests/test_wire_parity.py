@@ -1,0 +1,205 @@
+"""Wire-format parity: packed transport never changes what trains.
+
+The tentpole's acceptance contract — with ``wire_packed`` on (packed
+SecAgg words through the fused round step) versus the ``wire_packed=
+False`` parity escape hatch, every engine must produce BIT-identical
+final parameters, per-round collected SecAgg sums, and realized cohort
+sizes (hence the identical eps series: the accountant sees only
+realized_n). Plus the aggregator's packed intake (``PackedPayload``
+ClientUpdates) aggregating identically to dense payloads while the
+round extras report the uplink-byte savings, and the telemetry rows
+carrying ``wire_bits``/``pack_width``.
+
+Engine-scale cases skip under REPRO_PALLAS_INTERPRET=1 for the same
+reason as tests/test_fused_round_kernel.py: interpret mode unrolls the
+kernel grid into a Python loop; tests/test_pack_kernel.py covers the
+kernel bodies in that lane.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import SMALL_FED, small_trainer
+from repro.core import wire
+from repro.core.mechanisms import make_mechanism
+from repro.fed.updates import ClientUpdate
+from repro.launch.aggregator import AggregatorServer, simulate_client_updates
+
+INTERPRET_LANE = os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0")
+
+ENGINES = [
+    ("scan", {}),
+    ("perround", {}),
+    ("shard", {"shards": 1}),
+    # the async plain corner (max_staleness=0, no timeout, cadence ==
+    # clients_per_round) reuses the synchronous round step and with it
+    # the packed hot path; the buffered general case stays dense (it
+    # needs the dense sum for the staleness discount)
+    ("async", {}),
+]
+
+
+@pytest.mark.skipif(INTERPRET_LANE, reason="interpret mode unrolls the "
+                    "kernel grid into a Python loop; the kernel battery "
+                    "in test_pack_kernel.py covers this lane")
+class TestEngineWireParity:
+    def _run(self, engine, packed, **kw):
+        tr = small_trainer(engine, rounds=3, collect_sums=True,
+                           fused_rounds=True, wire_packed=packed, **kw)
+        tr.train(eval_every=3, log=lambda *_: None)
+        return (np.asarray(tr.flat),
+                [np.asarray(s) for s in tr.round_sums],
+                list(tr.realized_n))
+
+    @pytest.mark.parametrize("engine,kw", ENGINES,
+                             ids=[e for e, _ in ENGINES])
+    def test_packed_trains_bit_identically(self, engine, kw):
+        # wire_packed=True FORCES packing (raises if unavailable), so a
+        # silent fall-back to dense can never fake this parity
+        flat_d, sums_d, n_d = self._run(engine, False, **kw)
+        flat_p, sums_p, n_p = self._run(engine, True, **kw)
+        assert n_d == n_p
+        assert len(sums_d) == len(sums_p) == 3
+        for a, b in zip(sums_d, sums_p):
+            np.testing.assert_array_equal(a, b)  # int32 ==, not allclose
+        np.testing.assert_array_equal(flat_d, flat_p)
+
+    def test_auto_engages_on_fused_path(self):
+        """wire_packed=None (the default) packs whenever the fused hot
+        path is on and the cohort bound fits: same bits as forced."""
+        flat_auto, sums_auto, _ = self._run("scan", None)
+        flat_on, sums_on, _ = self._run("scan", True)
+        for a, b in zip(sums_auto, sums_on):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(flat_auto, flat_on)
+
+    def test_wire_packed_requires_fused_path(self):
+        with pytest.raises(ValueError, match="wire_packed.*fused"):
+            tr = small_trainer("scan", fused_rounds=False, wire_packed=True)
+            tr.round()
+
+    def test_telemetry_reports_wire_width(self, tmp_path):
+        path = tmp_path / "wire.json"
+        tr = small_trainer("scan", rounds=2, fused_rounds=True,
+                           track=f"json:{path}")
+        tr.train(rounds=2, eval_every=2, log=lambda *_: None)
+        doc = json.loads(path.read_text())
+        bits = wire.sum_bits(tr.mech.sum_bound(SMALL_FED["clients_per_round"]))
+        dim = int(tr.flat.size)
+        for row in doc["rounds"]:
+            assert row["pack_width"] == bits
+            assert row["wire_bits"] == 32 * wire.packed_words(dim, bits)
+            # the information-theoretic floor stays separately reported
+            assert row["secagg_sum_bits"] == dim * bits
+
+    def test_telemetry_dense_path_reports_lane_width(self, tmp_path):
+        path = tmp_path / "dense.json"
+        tr = small_trainer("scan", rounds=1, fused_rounds=False,
+                           track=f"json:{path}")
+        tr.train(rounds=1, eval_every=1, log=lambda *_: None)
+        doc = json.loads(path.read_text())
+        row = doc["rounds"][0]
+        assert row["pack_width"] is None
+        assert row["wire_bits"] == int(tr.flat.size) * 32  # int32 lanes
+
+
+# ---------------------------------------------------------------------------
+# aggregator packed intake
+# ---------------------------------------------------------------------------
+
+DIM = 300
+SPEC = "rqm:c=0.05,m=16,q=0.42"
+
+
+def _server(**overrides):
+    opts = dict(cohort=4, queue_limit=16, lr=0.5)
+    opts.update(overrides)
+    return AggregatorServer(make_mechanism(SPEC), DIM, **opts)
+
+
+class TestAggregatorPackedIntake:
+    def test_packed_and_dense_aggregate_identically(self):
+        key = jax.random.key(0)
+        dense_updates = simulate_client_updates(
+            _server().mech, DIM, key, 4, round_tag=0)
+        packed_updates = [
+            ClientUpdate(
+                payload=wire.PackedPayload.pack(u.payload, 4),
+                client_id=u.client_id, round_tag=u.round_tag,
+                weight=u.weight,
+            )
+            for u in dense_updates
+        ]
+        s_dense, s_packed = _server(), _server()
+        s_dense.submit(dense_updates)
+        s_packed.submit(packed_updates)
+        assert s_dense.drain() == s_packed.drain() == 1
+        np.testing.assert_array_equal(np.asarray(s_dense.flat),
+                                      np.asarray(s_packed.flat))
+
+    def test_simulated_packed_clients_end_to_end(self, tmp_path):
+        """simulate_client_updates(packed=True) ships PackedPayloads at
+        the mechanism's 4-bit m=16 payload width; round extras report
+        the realized uplink bytes (>= 4x under the dense int32 form)."""
+        path = tmp_path / "agg.json"
+        from repro.telemetry import JsonTracker
+
+        server = _server(tracker=JsonTracker(str(path)))
+        key = jax.random.key(7)
+        ups = simulate_client_updates(server.mech, DIM, key, 4,
+                                      round_tag=0, packed=True)
+        assert all(u.packed and u.payload.bits == 4 for u in ups)
+        server.submit(ups)
+        assert server.drain() == 1
+        server.shutdown()
+        extra = json.loads(path.read_text())["rounds"][0]["extra"]
+        assert extra["packed_payloads"] == 4
+        packed_bytes = 4 * wire.packed_nbytes(DIM, 4)
+        assert extra["uplink_bytes"] == packed_bytes
+        assert 4 * DIM * 4 >= 4 * packed_bytes  # >= 4x vs int32 lanes
+
+    def test_mixed_intake_unpacks_per_payload(self):
+        """A cohort mixing wire forms still aggregates exactly (the
+        packed-accumulation fast path requires a uniform cohort; mixed
+        cohorts take the unpack-per-payload path)."""
+        key = jax.random.key(3)
+        ups = simulate_client_updates(_server().mech, DIM, key, 4,
+                                      round_tag=0)
+        mixed = [
+            u if i % 2 else ClientUpdate(
+                payload=wire.PackedPayload.pack(u.payload, 4),
+                client_id=u.client_id, round_tag=u.round_tag)
+            for i, u in enumerate(ups)
+        ]
+        s_ref, s_mix = _server(), _server()
+        s_ref.submit(ups)
+        s_mix.submit(mixed)
+        assert s_ref.drain() == s_mix.drain() == 1
+        np.testing.assert_array_equal(np.asarray(s_ref.flat),
+                                      np.asarray(s_mix.flat))
+
+    def test_packed_straggler_weight_zero_masked(self):
+        """weight=0 packed payloads are masked out of the packed word
+        accumulation exactly as dense ones are masked from the stack."""
+        key = jax.random.key(5)
+        ups = simulate_client_updates(_server().mech, DIM, key, 4,
+                                      round_tag=0, packed=True)
+        import dataclasses
+
+        drop = [dataclasses.replace(u, weight=0) if i == 2 else u
+                for i, u in enumerate(ups)]
+        dense_drop = [
+            ClientUpdate(payload=u.payload_array(), client_id=u.client_id,
+                         round_tag=u.round_tag, weight=u.weight)
+            for u in drop
+        ]
+        s_p, s_d = _server(), _server()
+        s_p.submit(drop)
+        s_d.submit(dense_drop)
+        assert s_p.drain() == s_d.drain() == 1
+        np.testing.assert_array_equal(np.asarray(s_p.flat),
+                                      np.asarray(s_d.flat))
+        assert s_p.realized_n == s_d.realized_n == [3]
